@@ -1,0 +1,63 @@
+"""Paper Table 1: database size (bytes/edge) across storage designs.
+
+PAL vs (a) edge list + B-tree index (MySQL: 9 B data + ~11 B index/edge at
+4-byte ids, per the paper), (b) doubly-linked edge list (Neo4j: 33-35 B/edge),
+(c) doubled adjacency lists (in+out stored separately). Also measures the
+Elias-Gamma pointer-array compression ratio (paper §8.4: 424 MB vs 3,383 MB).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GraphPAL, encode_monotonic
+
+from .common import power_law_graph, save
+
+
+def run(scale: float = 1.0):
+    n_vertices = int(200_000 * scale)
+    n_edges = int(2_000_000 * scale)
+    src, dst = power_law_graph(n_vertices, n_edges, seed=1)
+    g = GraphPAL.from_edges(src, dst, n_partitions=16, max_id=n_vertices - 1)
+
+    pal_bytes = g.nbytes()
+    # PAL with int32/int8 on-disk encoding (the paper packs 36b dst + 4b
+    # type + 24b next = 8 B/edge; our in-memory arrays are wider)
+    packed_edge = 8  # paper's packed entry
+    pointer_raw = sum(p.src_vertices.nbytes + p.src_ptr.nbytes
+                      for p in g.partitions)
+    perm_bytes = sum(p.dst_perm.nbytes + p.dst_vertices.nbytes +
+                     p.dst_ptr.nbytes for p in g.partitions)
+
+    # Elias-Gamma compression of every pointer array
+    eg_bytes = 0
+    for p in g.partitions:
+        if p.src_vertices.size:
+            packed, bits, _ = encode_monotonic(p.src_vertices + 1)
+            eg_bytes += packed.nbytes
+            packed, bits, _ = encode_monotonic(p.src_ptr + 1)
+            eg_bytes += packed.nbytes
+
+    rows = {
+        "graph": {"vertices": n_vertices, "edges": n_edges},
+        "pal_packed_bytes_per_edge": packed_edge + (pointer_raw + perm_bytes)
+        / n_edges,
+        "pal_inmemory_bytes_per_edge": pal_bytes / n_edges,
+        "pointer_array_raw_mb": pointer_raw / 1e6,
+        "pointer_array_elias_gamma_mb": eg_bytes / 1e6,
+        "eg_compression_ratio": pointer_raw / max(eg_bytes, 1),
+        # reference designs (paper Table 1 constants)
+        "edge_list_plus_btree_bytes_per_edge": 9 + 11,
+        "neo4j_linked_list_bytes_per_edge": 33,
+        "doubled_adjacency_bytes_per_edge": 2 * 8 + (pointer_raw * 2) / n_edges,
+    }
+    save("storage", rows)
+    print("— Table 1 (database size) —")
+    for k, v in rows.items():
+        if isinstance(v, float):
+            print(f"  {k}: {v:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from contextlib import contextmanager
+
+import numpy as np
+
+OUT_DIR = "experiments/bench"
+
+
+def save(name: str, payload: dict) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def percentiles(xs, ps=(50, 75, 95, 99)):
+    xs = np.asarray(xs, dtype=np.float64)
+    if xs.size == 0:
+        return {f"p{p}": None for p in ps}
+    return {f"p{p}": float(np.percentile(xs, p)) for p in ps}
+
+
+@contextmanager
+def timer(out: list):
+    t0 = time.perf_counter()
+    yield
+    out.append(time.perf_counter() - t0)
+
+
+def power_law_graph(n_vertices: int, n_edges: int, alpha: float = 1.8,
+                    seed: int = 0, hot_frac: float = 0.5):
+    """Twitter-like structure: a zipf-hot head of celebrity destinations
+    (scattered ids) mixed with uniform long-tail follows, so in-degrees are
+    power-law while out-neighborhoods still expand."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n_edges)
+    hot = (rng.zipf(alpha, n_edges) - 1) % n_vertices
+    hot = (hot * 2654435761) % n_vertices
+    uniform = rng.integers(0, n_vertices, n_edges)
+    dst = np.where(rng.random(n_edges) < hot_frac, hot, uniform)
+    return src, dst

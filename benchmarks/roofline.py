@@ -1,0 +1,214 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh) cell, TPU v5e constants:
+
+  compute term    = FLOPs_per_device / 197e12        [s]
+  memory term     = HBM_bytes_per_device / 819e9     [s]
+  collective term = collective_bytes_per_device / 50e9  [s]
+
+Method notes (full discussion in EXPERIMENTS.md):
+  * collective bytes come from the compiled HLO with while-loop trip-count
+    multiplication (launch/dryrun.parse_collective_bytes) — exact for our
+    scan-based steps;
+  * XLA's cost_analysis counts while bodies ONCE, so for scanned models we
+    use ANALYTIC FLOPs/byte models (formulas below, derived from the
+    configs) and report the raw HLO numbers as diagnostics;
+  * MODEL_FLOPS is the standard useful-work count (6·N·D train / 2·N·D
+    inference (+attention); GNNs get per-op counts); the compiled/model
+    ratio reflects remat recompute and capacity-padding waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_BYTES = 16e9
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOP / byte models
+# ---------------------------------------------------------------------------
+def _lm_terms(spec, cell, mesh_devices):
+    """Returns (model_flops, compiled_flops_est, hbm_bytes) per DEVICE."""
+    cfg = spec.config
+    d = cell["dims"]
+    N, Na = cfg.n_params, cfg.n_active_params
+    H, dh = cfg.n_heads, cfg.head_dim
+    L = cfg.n_layers
+    if cell["kind"] == "train":
+        B, S = d["batch"], d["seq"]
+        T = B * S
+        attn = 6 * T * S * H * dh          # causal: 0.5 × (QK+PV) × 3(fwd+bwd)
+        model = 6 * Na * T + attn
+        # remat="full": one extra forward  => compiled ≈ model × 4/3
+        compiled = model * 4 / 3
+        # bytes: params fp32 fwd+bwd reads + opt (read m,v,p + write m,v,p)
+        # + activations (write+read fwd, bwd, remat re-read)
+        par = N * 4 * (2 + 6)
+        act = L * T * cfg.d_model * 2 * 6
+        hbm = par + act
+    elif cell["kind"] == "prefill":
+        B, S = d["batch"], d["seq"]
+        T = B * S
+        model = 2 * Na * T + T * S * H * dh * 2 * 0.5 * 2
+        compiled = model
+        hbm = N * 2 + L * T * cfg.d_model * 2 * 2 + \
+            L * T * cfg.n_kv_heads * dh * 2 * 2 * 2   # cache writes
+    else:  # decode
+        B, S = d["batch"], d["seq"]
+        model = 2 * Na * B + 4 * B * S * cfg.n_kv_heads * dh * (H // cfg.n_kv_heads)
+        compiled = model
+        # decode is bytes-bound: read all params + the whole KV cache
+        cache = L * B * S * cfg.n_kv_heads * dh * 2 * 2
+        hbm = Na * 2 + cache
+    return model / mesh_devices, compiled / mesh_devices, hbm / mesh_devices
+
+
+def _gnn_terms(spec, cell, mesh_devices):
+    cfg = spec.config
+    d = cell["dims"]
+    N, E = d["n_nodes"], d["n_edges"]
+    batch = d.get("batch", 1)
+    N, E = N * batch, E * batch
+    train_x = 3  # fwd+bwd
+    if spec.name == "pna":
+        dh = cfg.d_hidden
+        per = cfg.n_layers * (E * 2 * (2 * dh) * dh + N * 2 * (13 * dh) * dh)
+        enc = N * 2 * d["d_feat"] * dh
+        model = (per + enc) * train_x
+        hbm = cfg.n_layers * (E * dh * 4 * 3 + N * 13 * dh * 4 * 2) * 2
+    elif spec.name == "gin-tu":
+        dh = cfg.d_hidden
+        per = cfg.n_layers * (E * dh + N * 2 * dh * dh * 2)
+        model = (per + N * 2 * d["d_feat"] * dh) * train_x
+        hbm = cfg.n_layers * (E * dh * 4 + N * dh * 4 * 4) * 2
+    elif spec.name == "meshgraphnet":
+        dh = cfg.d_hidden
+        per = cfg.n_layers * (E * 2 * (3 * dh) * dh * 2 + N * 2 * (2 * dh) * dh * 2)
+        model = per * train_x
+        hbm = cfg.n_layers * (E * dh * 4 * 4 + N * dh * 4 * 4) * 2
+    else:  # equiformer-v2
+        C, L = cfg.d_hidden, cfg.l_max
+        K2 = sum((2 * l + 1) ** 2 for l in range(L + 1))   # rot cost/edge
+        nl = L + 1
+        so2 = 2 * nl * nl * C * C + sum(
+            4 * (nl - m) ** 2 * C * C for m in range(1, cfg.m_max + 1))
+        per_edge = 2 * K2 * C * 2 * 2 + so2 + 2 * (2 * nl * C) * C
+        per = cfg.n_layers * (E * per_edge + N * 2 * (L + 1) ** 2 * C * C * 2)
+        model = per * train_x
+        # remat_layers: extra forward
+        model_c = model * 4 / 3
+        hbm = cfg.n_layers * E * (L + 1) ** 2 * C * 2 * 4
+        return (model / mesh_devices, model_c / mesh_devices,
+                hbm / mesh_devices)
+    return model / mesh_devices, model / mesh_devices, hbm / mesh_devices
+
+
+def _recsys_terms(spec, cell, mesh_devices):
+    cfg = spec.config
+    d = cell["dims"]
+    B = d["batch"]
+    dm = cfg.embed_dim
+    blk = cfg.n_blocks * (4 * dm * dm + 2 * dm * cfg.ff + 2 * 200 * dm * 2)
+    enc = B * 200 * blk * 2
+    if cell["kind"] == "train":
+        R = B * 40
+        head = 6 * R * cfg.padded_vocab * dm
+        model = enc * 3 + head
+        hbm = cfg.padded_vocab * dm * 4 * (2 + 6) + B * 200 * dm * 4 * 6
+    elif cell["kind"] == "serve":
+        head = 2 * B * cfg.padded_vocab * dm
+        model = enc + head
+        hbm = cfg.padded_vocab * dm * 4 + B * 200 * dm * 4 * 2
+    else:  # retrieval
+        model = enc + 2 * B * d["n_candidates"] * dm
+        hbm = d["n_candidates"] * dm * 4 + B * 200 * dm * 4
+    return model / mesh_devices, model / mesh_devices, hbm / mesh_devices
+
+
+def analytic_terms(arch_id: str, cell: Dict, mesh_devices: int):
+    from repro.configs import get_arch
+    spec = get_arch(arch_id)
+    if spec.family == "lm":
+        return _lm_terms(spec, cell, mesh_devices)
+    if spec.family == "gnn":
+        return _gnn_terms(spec, cell, mesh_devices)
+    return _recsys_terms(spec, cell, mesh_devices)
+
+
+def analyze(dryrun_dir: str = "experiments/dryrun",
+            mesh: Optional[str] = None):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        d = json.load(open(f))
+        if mesh and d.get("mesh") != mesh:
+            continue
+        if d["status"] == "skipped":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "mesh": d["mesh"], "status": "skipped",
+                         "why": d["skip_reason"][:60]})
+            continue
+        if d["status"] != "ok":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "mesh": d["mesh"], "status": d["status"]})
+            continue
+        ndev = d["n_devices"]
+        cell = {"kind": d["kind"], "dims": d["dims"]}
+        model_fl, compiled_fl, hbm = analytic_terms(d["arch"], cell, ndev)
+        t_comp = compiled_fl / PEAK_FLOPS
+        t_mem = hbm / HBM_BW
+        t_coll = d["collective_bytes_per_device"] / LINK_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        bound = max(terms.values())
+        frac = t_comp / bound if bound > 0 else 0.0
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "status": "ok",
+            "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+            "dominant": dominant,
+            "roofline_fraction": frac,       # compute / binding term
+            "model_flops_per_dev": model_fl,
+            "compiled_flops_per_dev_est": compiled_fl,
+            "model_over_compiled": model_fl / compiled_fl if compiled_fl else 0,
+            "hlo_flops_raw": d["flops_per_device"],
+            "temp_gb": d["memory"]["temp_bytes"] / 1e9,
+            "fits_hbm": d["memory"]["temp_bytes"] < HBM_BYTES,
+            "collective_by_kind": d.get("collective_bytes_by_kind", {}),
+        })
+    return rows
+
+
+def print_table(rows):
+    hdr = (f"{'arch':24} {'shape':14} {'mesh':6} {'comp(ms)':>9} "
+           f"{'mem(ms)':>9} {'coll(ms)':>9} {'bound':>10} {'frac':>6} "
+           f"{'temp GB':>8} {'fit':>4}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:24} {r['shape']:14} {r['mesh']:6} "
+                  f"-- {r['status']} {r.get('why', '')}")
+            continue
+        print(f"{r['arch']:24} {r['shape']:14} {r['mesh']:6} "
+              f"{r['compute_s']*1e3:9.2f} {r['memory_s']*1e3:9.2f} "
+              f"{r['collective_s']*1e3:9.2f} {r['dominant']:>10} "
+              f"{r['roofline_fraction']:6.2f} {r['temp_gb']:8.1f} "
+              f"{'Y' if r['fits_hbm'] else 'N':>4}")
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else None
+    rows = analyze(mesh=mesh)
+    print_table(rows)
+    out = "experiments/roofline.json"
+    os.makedirs("experiments", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {out}")

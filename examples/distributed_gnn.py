@@ -1,0 +1,57 @@
+"""Distributed PSW GNN: PAL-sharded graph + ring-window message passing.
+
+Demonstrates the TPU adaptation of the paper's Parallel Sliding Windows on
+an 8-virtual-device mesh: node state sharded by vertex interval, source rows
+delivered by the collective-permute ring (DESIGN.md §2), exact agreement
+with the single-device reference.
+
+  PYTHONPATH=src python examples/distributed_gnn.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import GraphPAL, build_device_graph, pagerank_device
+from repro.graph.psw_ops import ring_gather, local_scatter_sum
+
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+print(f"mesh: {mesh.shape}")
+
+# PAL-partitioned graph, 8 intervals = 8 shards
+rng = np.random.default_rng(0)
+n, e = 4096, 32768
+src = rng.integers(0, n, e)
+dst = rng.integers(0, n, e)
+g = GraphPAL.from_edges(src, dst, n_partitions=8, max_id=n - 1)
+print(f"graph: {n} vertices, {g.n_edges} edges, "
+      f"partition sizes {g.partition_sizes()}")
+
+# 1. device PSW PageRank: window exchange == dense gather
+dg = build_device_graph(g)
+r_dense = pagerank_device(dg, n_iters=5, mode="dense_gather")
+r_psw = pagerank_device(dg, n_iters=5, mode="psw_windows")
+print(f"PSW windows vs dense gather max diff: "
+      f"{float(jnp.abs(r_dense - r_psw).max()):.2e}")
+
+# 2. ring gather: one message-passing step, sharded over the mesh.
+# The DeviceGraph's padded (P, E_max) layout gives interval-ALIGNED edge
+# shards: shard i holds exactly partition i's edges, so destinations are
+# local (the PAL property local_scatter_sum relies on).
+P, L = dg.n_partitions, dg.interval_len
+x = jnp.asarray(rng.normal(size=(P * L, 16)).astype(np.float32))
+src_flat = dg.src.reshape(-1)
+dst_flat = (dg.dst_local + jnp.arange(P)[:, None] * L).reshape(-1)
+mask = dg.mask.reshape(-1).astype(x.dtype)
+
+msgs = ring_gather(x, src_flat, mesh) * mask[:, None]   # remote rows: ring
+agg = local_scatter_sum(msgs, dst_flat, P * L, mesh)    # PAL: dst local
+ref = jax.ops.segment_sum(x[src_flat] * mask[:, None], dst_flat,
+                          num_segments=P * L)
+print(f"ring message passing vs reference max diff: "
+      f"{float(jnp.abs(agg - ref).max()):.2e}")
+print("done.")

@@ -1,0 +1,15 @@
+"""End-to-end LM training driver (~100M-class on CPU): trains the reduced
+granite config for a few hundred steps with checkpoints + resume.
+
+  PYTHONPATH=src python examples/train_lm.py
+(equivalent to: python -m repro.launch.train --arch granite-3-2b --smoke)
+"""
+import subprocess
+import sys
+
+subprocess.run([
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", "granite-3-2b", "--smoke",
+    "--steps", "120", "--batch", "8", "--seq", "64",
+    "--ckpt-dir", "/tmp/repro_example_ckpt", "--ckpt-every", "40",
+], check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

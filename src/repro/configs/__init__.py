@@ -1,0 +1,1 @@
+from .base import ARCH_IDS, ArchSpec, ShapeCell, get_arch, list_archs

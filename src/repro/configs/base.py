@@ -1,0 +1,63 @@
+"""Arch registry: every assigned architecture is a selectable config.
+
+Each arch module exposes `spec() -> ArchSpec`. A shape cell is
+(arch × shape-name); the dry-run lowers `ArchSpec.shapes[name]` on the
+production mesh. Shapes marked `skip` document inapplicability
+(e.g. long_500k on pure full-attention LMs — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Optional
+
+__all__ = ["ShapeCell", "ArchSpec", "get_arch", "list_archs", "ARCH_IDS"]
+
+ARCH_IDS = [
+    "granite-34b", "granite-3-2b", "qwen3-14b",
+    "phi3.5-moe-42b-a6.6b", "qwen3-moe-235b-a22b",
+    "pna", "gin-tu", "equiformer-v2", "meshgraphnet",
+    "bert4rec",
+]
+
+_MODULES = {
+    "granite-34b": "repro.configs.granite_34b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe",
+    "pna": "repro.configs.pna",
+    "gin-tu": "repro.configs.gin_tu",
+    "equiformer-v2": "repro.configs.equiformer_v2",
+    "meshgraphnet": "repro.configs.meshgraphnet",
+    "bert4rec": "repro.configs.bert4rec",
+}
+
+
+@dataclasses.dataclass
+class ShapeCell:
+    """One (arch × input-shape) dry-run cell."""
+
+    name: str
+    kind: str                 # train | prefill | decode | serve | retrieval
+    dims: Dict[str, int]
+    skip: Optional[str] = None  # reason string if inapplicable
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    name: str
+    family: str               # lm | gnn | recsys
+    config: Any               # full published config
+    smoke_config: Any         # reduced config for CPU smoke tests
+    shapes: Dict[str, ShapeCell]
+    source: str               # citation tag from the assignment
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.spec()
+
+
+def list_archs():
+    return list(ARCH_IDS)

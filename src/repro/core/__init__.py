@@ -1,0 +1,31 @@
+"""GraphChi-DB core: PAL + LSM + PSW + queries (the paper's contribution)."""
+from .pal import EdgePartition, GraphPAL, IntervalMap, build_partition
+from .lsm import EdgeBuffer, LSMStats, LSMTree
+from .psw import (
+    DeviceGraph,
+    build_device_graph,
+    edge_centric_sweep,
+    edge_centric_sweep_arrays,
+    pagerank_device,
+    pagerank_host,
+    psw_sweep_host,
+)
+from .query import Frontier, bfs, friends_of_friends, shortest_path, traverse_out
+from .codec import (
+    SparseIndex,
+    decode_monotonic,
+    elias_gamma_decode,
+    elias_gamma_encode,
+    encode_monotonic,
+)
+
+__all__ = [
+    "EdgePartition", "GraphPAL", "IntervalMap", "build_partition",
+    "EdgeBuffer", "LSMStats", "LSMTree",
+    "DeviceGraph", "build_device_graph", "edge_centric_sweep",
+    "edge_centric_sweep_arrays", "pagerank_device", "pagerank_host",
+    "psw_sweep_host",
+    "Frontier", "bfs", "friends_of_friends", "shortest_path", "traverse_out",
+    "SparseIndex", "decode_monotonic", "elias_gamma_decode",
+    "elias_gamma_encode", "encode_monotonic",
+]

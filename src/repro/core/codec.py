@@ -1,0 +1,115 @@
+"""Elias-Gamma pointer-array compression + sparse index (paper §4.2.1, §8.4).
+
+The paper pins the pointer-array in RAM by delta-encoding the (vertex-ID,
+offset) increasing sequences with Elias-Gamma codes — reported 424 MB vs
+3,383 MB raw on twitter-2010, 26x faster out-edge queries. We keep the codec
+as a real, exercised component: checkpoints store pointer arrays compressed,
+and the benchmarks reproduce the paper's index-variant comparison
+(raw on "disk" vs sparse index vs Elias-Gamma in RAM).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+__all__ = [
+    "elias_gamma_encode",
+    "elias_gamma_decode",
+    "encode_monotonic",
+    "decode_monotonic",
+    "SparseIndex",
+]
+
+
+def _bit_length(x: np.ndarray) -> np.ndarray:
+    """floor(log2(x)) + 1 for x >= 1, vectorized."""
+    return np.floor(np.log2(x.astype(np.float64))).astype(np.int64) + 1
+
+
+def elias_gamma_encode(values: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Encode positive integers with Elias-Gamma: N-1 zeros then the N-bit
+    binary of the value (N = bit length). Returns (packed uint8 array, nbits)."""
+    values = np.asarray(values, dtype=np.int64)
+    if values.size == 0:
+        return np.empty(0, np.uint8), 0
+    if (values < 1).any():
+        raise ValueError("Elias-Gamma requires values >= 1")
+    nlens = _bit_length(values)
+    total_bits = int((2 * nlens - 1).sum())
+    bits = np.zeros(total_bits, dtype=np.uint8)
+    # positions where each code's explicit binary part starts
+    code_lens = 2 * nlens - 1
+    starts = np.concatenate([[0], np.cumsum(code_lens)[:-1]])
+    for i in range(values.shape[0]):  # vectorize per-bit below; loop per value
+        v, n, s = int(values[i]), int(nlens[i]), int(starts[i])
+        # n-1 zeros already in place; write binary of v at s + n - 1
+        for b in range(n):
+            bits[s + n - 1 + b] = (v >> (n - 1 - b)) & 1
+    return np.packbits(bits), total_bits
+
+
+def elias_gamma_decode(packed: np.ndarray, nbits: int) -> np.ndarray:
+    bits = np.unpackbits(np.asarray(packed, np.uint8))[:nbits]
+    out = []
+    i = 0
+    while i < nbits:
+        n = 0
+        while bits[i] == 0:
+            n += 1
+            i += 1
+        v = 0
+        for _ in range(n + 1):
+            v = (v << 1) | int(bits[i])
+            i += 1
+        out.append(v)
+    return np.asarray(out, dtype=np.int64)
+
+
+def encode_monotonic(seq: np.ndarray) -> Tuple[np.ndarray, int, int]:
+    """Delta + Elias-Gamma for a non-decreasing sequence (pointer-array).
+    Returns (packed, nbits, first_value). Deltas are stored +1 (gamma needs >=1)."""
+    seq = np.asarray(seq, dtype=np.int64)
+    if seq.size == 0:
+        return np.empty(0, np.uint8), 0, 0
+    deltas = np.diff(seq) + 1
+    packed, nbits = elias_gamma_encode(deltas)
+    return packed, nbits, int(seq[0])
+
+
+def decode_monotonic(packed: np.ndarray, nbits: int, first: int,
+                     n: int) -> np.ndarray:
+    if n == 0:
+        return np.empty(0, np.int64)
+    if n == 1:
+        return np.asarray([first], np.int64)
+    deltas = elias_gamma_decode(packed, nbits) - 1
+    return np.concatenate([[first], first + np.cumsum(deltas)])
+
+
+class SparseIndex:
+    """In-memory sparse index over an on-disk sorted array (paper §4.2.1,
+    second option): every `stride`-th key is kept in RAM; a lookup consults
+    the sparse index then 'reads one block' — we count those block reads so
+    benchmarks can reproduce Figure 8c."""
+
+    def __init__(self, keys: np.ndarray, stride: int = 64):
+        self.keys = np.asarray(keys)
+        self.stride = stride
+        self.sparse = self.keys[::stride].copy()
+        self.block_reads = 0
+
+    def lookup(self, k) -> int:
+        """Index of k in keys, or -1. One simulated block read per lookup."""
+        j = int(np.searchsorted(self.sparse, k, side="right")) - 1
+        j = max(j, 0)
+        lo = j * self.stride
+        hi = min(lo + self.stride, self.keys.shape[0])
+        self.block_reads += 1
+        i = lo + int(np.searchsorted(self.keys[lo:hi], k))
+        if i < hi and self.keys[i] == k:
+            return i
+        return -1
+
+    def nbytes(self) -> int:
+        return self.sparse.nbytes

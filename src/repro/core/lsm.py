@@ -1,0 +1,429 @@
+"""LSM-tree of PAL edge partitions (paper §5).
+
+Immutable edge partitions are stacked in a log-structured merge tree:
+
+  * level 0 (top) is the coarsest — few partitions, each covering the union
+    of its descendants' vertex intervals — and is the only level with
+    in-memory edge buffers (paper §5.2);
+  * inserts land in the buffer of the top partition whose interval contains
+    the edge's destination;
+  * when total buffered edges exceed `buffer_cap`, the fullest buffer is
+    sort-merged with its on-disk partition into a NEW immutable partition
+    (the old one is dropped only after the new one is built — paper §7.3's
+    crash-integrity argument);
+  * when a partition outgrows `max_partition_edges`, it is emptied downstream
+    into its f children (push-down merge), so each edge is rewritten only
+    O(log |E|) times instead of O(|E|/R) (paper §5.1 vs §5.2);
+  * deletes are tombstones purged at merge time; attribute updates write the
+    columns in place (paper §5.3);
+  * optional durability: a write-ahead log capturing each insert before it
+    reaches a buffer ("durable buffers", paper §7.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .pal import EdgePartition, IntervalMap, build_partition
+
+__all__ = ["EdgeBuffer", "LSMTree", "LSMStats"]
+
+
+class EdgeBuffer:
+    """In-memory buffer of new edges for one top-level partition (paper §5.1).
+
+    Buffers also hold the edge attribute columns, and are searched by
+    queries/computation alongside the on-disk partitions.
+    """
+
+    def __init__(self, column_dtypes: Dict[str, np.dtype]):
+        self.src: List[int] = []
+        self.dst: List[int] = []
+        self.etype: List[int] = []
+        self.columns: Dict[str, list] = {k: [] for k in column_dtypes}
+        self.column_dtypes = dict(column_dtypes)
+
+    def __len__(self) -> int:
+        return len(self.src)
+
+    def append(self, src: int, dst: int, etype: int, cols: Dict) -> None:
+        self.src.append(src)
+        self.dst.append(dst)
+        self.etype.append(etype)
+        for k in self.columns:
+            self.columns[k].append(cols.get(k, 0))
+
+    def extend(self, src, dst, etype, cols: Dict) -> None:
+        self.src.extend(int(x) for x in src)
+        self.dst.extend(int(x) for x in dst)
+        self.etype.extend(int(x) for x in etype)
+        n = len(src)
+        for k in self.columns:
+            v = cols.get(k)
+            if v is None:
+                self.columns[k].extend([0] * n)
+            else:
+                self.columns[k].extend(v)
+
+    def drain(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Dict[str, np.ndarray]]:
+        out = (
+            np.asarray(self.src, dtype=np.int64),
+            np.asarray(self.dst, dtype=np.int64),
+            np.asarray(self.etype, dtype=np.int8),
+            {k: np.asarray(v, dtype=self.column_dtypes[k]) for k, v in self.columns.items()},
+        )
+        self.src, self.dst, self.etype = [], [], []
+        self.columns = {k: [] for k in self.columns}
+        return out
+
+    # queries against the buffer (linear scans over the small buffer)
+    def out_edges_of(self, v: int):
+        s = np.asarray(self.src, dtype=np.int64)
+        return np.nonzero(s == v)[0]
+
+    def in_edges_of(self, v: int):
+        d = np.asarray(self.dst, dtype=np.int64)
+        return np.nonzero(d == v)[0]
+
+
+@dataclasses.dataclass
+class LSMStats:
+    inserts: int = 0
+    buffer_flushes: int = 0
+    pushdown_merges: int = 0
+    edges_rewritten: int = 0  # total edges written during merges
+    splits: int = 0
+    deletes: int = 0
+    purged_tombstones: int = 0
+
+
+class LSMTree:
+    """LSM-tree over PAL edge partitions.
+
+    `levels[0]` is the top (coarsest, buffered); `levels[-1]` is the bottom
+    with `n_partitions` leaf partitions — matching the paper's Figure 5
+    orientation (buffers feed the top, overflow pushes toward the leaves).
+    """
+
+    def __init__(
+        self,
+        intervals: IntervalMap,
+        n_levels: int = 3,
+        branching: int = 4,
+        buffer_cap: int = 100_000,
+        max_partition_edges: int = 2_000_000,
+        column_dtypes: Optional[Dict[str, np.dtype]] = None,
+        durable: bool = False,
+        wal_path: Optional[str] = None,
+    ):
+        p = intervals.n_partitions
+        assert p % (branching ** (n_levels - 1)) == 0, (
+            f"n_partitions={p} must be divisible by branching^(levels-1)="
+            f"{branching ** (n_levels - 1)}"
+        )
+        self.intervals = intervals
+        self.branching = branching
+        self.buffer_cap = buffer_cap
+        self.max_partition_edges = max_partition_edges
+        self.column_dtypes = dict(column_dtypes or {})
+        self.stats = LSMStats()
+
+        # level i has p / f^(L-1-i) partitions; level L-1 has p
+        self.levels: List[List[EdgePartition]] = []
+        for i in range(n_levels):
+            n_parts = p // (branching ** (n_levels - 1 - i))
+            span = intervals.max_vertices // n_parts
+            level = [
+                build_partition(
+                    (j * span, (j + 1) * span),
+                    np.empty(0, np.int64),
+                    np.empty(0, np.int64),
+                    columns={k: np.empty(0, dt) for k, dt in self.column_dtypes.items()},
+                )
+                for j in range(n_parts)
+            ]
+            self.levels.append(level)
+        self.buffers: List[EdgeBuffer] = [
+            EdgeBuffer(self.column_dtypes) for _ in self.levels[0]
+        ]
+
+        # durability (paper §7.3): WAL written+flushed before buffer insert
+        self.durable = durable
+        self._wal = None
+        if durable:
+            self._wal = open(wal_path or "/tmp/graphchi_db.wal", "ab", buffering=0)
+
+    # -- geometry ---------------------------------------------------------------
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    def partitions_per_level(self) -> List[int]:
+        return [len(lv) for lv in self.levels]
+
+    def _top_index_of(self, intern_dst: int) -> int:
+        span = self.intervals.max_vertices // len(self.levels[0])
+        return int(intern_dst) // span
+
+    # -- inserts (paper §5) -------------------------------------------------------
+    def insert_edge(self, src: int, dst: int, etype: int = 0, **cols) -> None:
+        isrc = int(self.intervals.to_internal(src))
+        idst = int(self.intervals.to_internal(dst))
+        if self._wal is not None:
+            self._wal.write(struct.pack("<qqb", isrc, idst, etype))
+        self.buffers[self._top_index_of(idst)].append(isrc, idst, etype, cols)
+        self.stats.inserts += 1
+        if self.total_buffered() > self.buffer_cap:
+            self.flush_fullest_buffer()
+
+    def insert_edges(self, src, dst, etype=None, columns: Optional[Dict] = None) -> None:
+        """Bulk insert — still through the online path (buffers + merges)."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        etype = np.zeros(src.shape[0], np.int8) if etype is None else np.asarray(etype)
+        columns = columns or {}
+        isrc = self.intervals.to_internal(src)
+        idst = self.intervals.to_internal(dst)
+        if self._wal is not None:
+            rec = np.rec.fromarrays(
+                [isrc, idst, etype.astype(np.int8)], names="s,d,t"
+            )
+            self._wal.write(rec.tobytes())
+        span = self.intervals.max_vertices // len(self.levels[0])
+        top = idst // span
+        for i in np.unique(top):
+            m = top == i
+            self.buffers[int(i)].extend(
+                isrc[m], idst[m], etype[m],
+                {k: np.asarray(v)[m] for k, v in columns.items()},
+            )
+        self.stats.inserts += int(src.shape[0])
+        while self.total_buffered() > self.buffer_cap:
+            self.flush_fullest_buffer()
+
+    def total_buffered(self) -> int:
+        return sum(len(b) for b in self.buffers)
+
+    # -- merges -------------------------------------------------------------------
+    def flush_fullest_buffer(self) -> None:
+        """Merge the fullest buffer with its top-level partition (paper §5.2)."""
+        j = int(np.argmax([len(b) for b in self.buffers]))
+        if len(self.buffers[j]) == 0:
+            return
+        bsrc, bdst, btype, bcols = self.buffers[j].drain()
+        self.levels[0][j] = self._merge_into(self.levels[0][j], bsrc, bdst, btype, bcols)
+        self.stats.buffer_flushes += 1
+        self._maybe_pushdown(0, j)
+
+    def _merge_into(self, part: EdgePartition, src, dst, etype, cols) -> EdgePartition:
+        """Sorted merge producing a NEW immutable partition; tombstoned edges
+        of the old partition are purged here (paper §5.3)."""
+        live = np.ones(part.n_edges, bool) if part.dead is None else ~part.dead
+        self.stats.purged_tombstones += int(part.n_edges - live.sum())
+        msrc = np.concatenate([part.src[live], src])
+        mdst = np.concatenate([part.dst[live], dst])
+        mtyp = np.concatenate([part.etype[live], etype])
+        mcols = {}
+        for k, dt in self.column_dtypes.items():
+            old = part.columns.get(k, np.zeros(part.n_edges, dt))[live]
+            new = cols.get(k, np.zeros(src.shape[0], dt))
+            mcols[k] = np.concatenate([old, new])
+        self.stats.edges_rewritten += int(msrc.shape[0])
+        return build_partition(part.interval, msrc, mdst, mtyp, mcols)
+
+    def _maybe_pushdown(self, level: int, j: int) -> None:
+        """If partition (level, j) exceeds the size cap, empty it into its f
+        children at the next level (paper §5.2). Bottom level splits instead."""
+        part = self.levels[level][j]
+        if part.n_edges <= self.max_partition_edges:
+            return
+        if level == self.n_levels - 1:
+            # paper: "If leaves grow too large, we can add a new level";
+            # equivalently we grow the leaf cap — record the event.
+            self.stats.splits += 1
+            return
+        f = len(self.levels[level + 1]) // len(self.levels[level])
+        child_span = self.intervals.max_vertices // len(self.levels[level + 1])
+        live = np.ones(part.n_edges, bool) if part.dead is None else ~part.dead
+        csrc, cdst, ctyp = part.src[live], part.dst[live], part.etype[live]
+        ccols = {
+            k: part.columns.get(k, np.zeros(part.n_edges, dt))[live]
+            for k, dt in self.column_dtypes.items()
+        }
+        child_of = cdst // child_span
+        for c in np.unique(child_of):
+            m = child_of == c
+            self.levels[level + 1][int(c)] = self._merge_into(
+                self.levels[level + 1][int(c)],
+                csrc[m], cdst[m], ctyp[m],
+                {k: v[m] for k, v in ccols.items()},
+            )
+        # emptied parent — new empty immutable partition
+        self.levels[level][j] = build_partition(
+            part.interval, np.empty(0, np.int64), np.empty(0, np.int64),
+            columns={k: np.empty(0, dt) for k, dt in self.column_dtypes.items()},
+        )
+        self.stats.pushdown_merges += 1
+        for c in np.unique(child_of):
+            self._maybe_pushdown(level + 1, int(c))
+
+    def flush_all(self) -> None:
+        while self.total_buffered() > 0:
+            self.flush_fullest_buffer()
+
+    # -- queries across the tree (paper §5.2.1) -------------------------------------
+    def out_edges(self, v: int) -> List[Tuple[int, int, int]]:
+        """(level, partition_idx, edge_pos) across all levels + buffers.
+        Cost: every partition on every level may hold out-edges."""
+        vi = int(self.intervals.to_internal(v))
+        hits = []
+        for li, level in enumerate(self.levels):
+            for pi, part in enumerate(level):
+                for pos in part.out_edges(vi):
+                    hits.append((li, pi, int(pos)))
+        return hits
+
+    def in_edges(self, v: int) -> List[Tuple[int, int, int]]:
+        """Only ONE partition per level can own v's in-edges (paper: cost
+        bounded by L_G + edges)."""
+        vi = int(self.intervals.to_internal(v))
+        hits = []
+        for li, level in enumerate(self.levels):
+            span = self.intervals.max_vertices // len(level)
+            pi = vi // span
+            for pos in level[pi].in_edges(vi):
+                hits.append((li, int(pi), int(pos)))
+        return hits
+
+    def out_neighbors(self, v: int) -> np.ndarray:
+        vi = int(self.intervals.to_internal(v))
+        chunks = []
+        for level in self.levels:
+            for part in level:
+                pos = part.out_edges(vi)
+                if pos.size:
+                    chunks.append(part.dst[pos])
+        for buf in self.buffers:
+            if len(buf):
+                idx = buf.out_edges_of(vi)
+                if idx.size:
+                    chunks.append(np.asarray(buf.dst, np.int64)[idx])
+        if not chunks:
+            return np.empty(0, np.int64)
+        return np.asarray(self.intervals.to_original(np.concatenate(chunks)))
+
+    def in_neighbors(self, v: int) -> np.ndarray:
+        vi = int(self.intervals.to_internal(v))
+        chunks = []
+        for level in self.levels:
+            span = self.intervals.max_vertices // len(level)
+            part = level[vi // span]
+            pos = part.in_edges(vi)
+            if pos.size:
+                chunks.append(part.src[pos])
+        for buf in self.buffers:
+            if len(buf):
+                idx = buf.in_edges_of(vi)
+                if idx.size:
+                    chunks.append(np.asarray(buf.src, np.int64)[idx])
+        if not chunks:
+            return np.empty(0, np.int64)
+        return np.asarray(self.intervals.to_original(np.concatenate(chunks)))
+
+    # -- updates / deletes (paper §5.3) ----------------------------------------------
+    def update_edge_column(self, src: int, dst: int, name: str, value) -> bool:
+        """Direct in-place column write on the newest matching edge."""
+        isrc = int(self.intervals.to_internal(src))
+        idst = int(self.intervals.to_internal(dst))
+        # buffers are newest
+        bj = self._top_index_of(idst)
+        buf = self.buffers[bj]
+        if len(buf):
+            s = np.asarray(buf.src, np.int64)
+            d = np.asarray(buf.dst, np.int64)
+            hit = np.nonzero((s == isrc) & (d == idst))[0]
+            if hit.size:
+                buf.columns[name][int(hit[-1])] = value
+                return True
+        for level in self.levels:
+            span = self.intervals.max_vertices // len(level)
+            part = level[idst // span]
+            a, b = part.out_edge_range(isrc)
+            pos = np.arange(a, b)
+            pos = pos[part.dst[pos] == idst] if pos.size else pos
+            pos = part._live(pos)
+            if pos.size:
+                part.set_column(name, pos[-1], value)
+                return True
+        return False
+
+    def delete_edge(self, src: int, dst: int) -> bool:
+        """Tombstone the edge everywhere it appears (purged at merges)."""
+        isrc = int(self.intervals.to_internal(src))
+        idst = int(self.intervals.to_internal(dst))
+        found = False
+        bj = self._top_index_of(idst)
+        buf = self.buffers[bj]
+        if len(buf):
+            s = np.asarray(buf.src, np.int64)
+            d = np.asarray(buf.dst, np.int64)
+            keep = ~((s == isrc) & (d == idst))
+            if not keep.all():
+                found = True
+                buf.src = list(s[keep])
+                buf.dst = list(d[keep])
+                buf.etype = list(np.asarray(buf.etype, np.int8)[keep])
+                for k in buf.columns:
+                    buf.columns[k] = list(np.asarray(buf.columns[k])[keep])
+        for level in self.levels:
+            span = self.intervals.max_vertices // len(level)
+            part = level[idst // span]
+            a, b = part.out_edge_range(isrc)
+            pos = np.arange(a, b)
+            if pos.size:
+                pos = pos[part.dst[pos] == idst]
+                pos = part._live(pos)
+                if pos.size:
+                    part.tombstone(pos)
+                    found = True
+        if found:
+            self.stats.deletes += 1
+        return found
+
+    # -- exports ------------------------------------------------------------------
+    @property
+    def n_edges(self) -> int:
+        n = sum(p.n_live_edges for lv in self.levels for p in lv)
+        return n + self.total_buffered()
+
+    def all_partitions(self) -> List[EdgePartition]:
+        return [p for lv in self.levels for p in lv]
+
+    def to_coo(self):
+        ss, dd = [], []
+        for part in self.all_partitions():
+            live = np.ones(part.n_edges, bool) if part.dead is None else ~part.dead
+            ss.append(part.src[live])
+            dd.append(part.dst[live])
+        for buf in self.buffers:
+            ss.append(np.asarray(buf.src, np.int64))
+            dd.append(np.asarray(buf.dst, np.int64))
+        s = np.concatenate(ss) if ss else np.empty(0, np.int64)
+        d = np.concatenate(dd) if dd else np.empty(0, np.int64)
+        return (np.asarray(self.intervals.to_original(s)),
+                np.asarray(self.intervals.to_original(d)))
+
+    def close(self) -> None:
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
+
+    # -- WAL recovery (paper §7.3 durability) ----------------------------------------
+    @staticmethod
+    def replay_wal(path: str) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        raw = np.fromfile(path, dtype=np.dtype([("s", "<i8"), ("d", "<i8"), ("t", "i1")]))
+        return raw["s"], raw["d"], raw["t"]

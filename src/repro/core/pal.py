@@ -1,0 +1,416 @@
+"""Partitioned Adjacency Lists (PAL) — the paper's core data structure.
+
+Faithful to GraphChi-DB (Kyrola & Guestrin, 2014) §4 with the TPU adaptation
+documented in DESIGN.md §2:
+
+  * the vertex-ID range is split into P intervals; edge-partition(i) stores
+    every edge whose *destination* lies in interval(i), sorted by *source*;
+  * each edge is stored exactly once, both directions are queryable;
+  * the paper's in-edge linked list (next-with-same-dst offsets) is replaced
+    by an immutable dst-sort permutation + dst pointer array (CSC within the
+    partition) — pointer chasing has no TPU analogue;
+  * edge attributes are columnar and positional: the edge's index in the
+    edge-array is the key into every column (paper §4.3);
+  * vertex attributes are columnar per interval with O(1) positional access
+    (paper §4.4);
+  * interval balancing uses the paper's reversible hash (§7.2).
+
+Construction and queries are host-side numpy (this is the database layer);
+`device_arrays()` exports immutable jnp views for the compute layer (PSW,
+GNN message passing, Pallas kernels).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "IntervalMap",
+    "EdgePartition",
+    "GraphPAL",
+    "build_partition",
+]
+
+
+# ---------------------------------------------------------------------------
+# Intervals + reversible hash (paper §4.1, §7.2)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class IntervalMap:
+    """P equal-length vertex intervals over internal IDs [0, P*L).
+
+    The paper's reversible hash maps original IDs to internal IDs so that
+    consecutive original IDs land in *different* intervals, balancing
+    power-law edge distributions without dynamic interval management:
+
+        intern = (orig mod P) * L + (orig div P)
+        orig   = (intern mod L) * P + (intern div L)
+
+    (The paper's §7.2 decode line swaps div/mod — an apparent typo; the
+    formula above is the true inverse of its encode, verified by the
+    round-trip property test.)
+    """
+
+    n_partitions: int
+    interval_len: int
+
+    @property
+    def max_vertices(self) -> int:
+        return self.n_partitions * self.interval_len
+
+    @classmethod
+    def for_capacity(cls, max_id: int, n_partitions: int) -> "IntervalMap":
+        interval_len = -(-int(max_id + 1) // n_partitions)  # ceil div
+        return cls(n_partitions=n_partitions, interval_len=interval_len)
+
+    # -- reversible hash -----------------------------------------------------
+    def to_internal(self, orig):
+        orig = np.asarray(orig, dtype=np.int64)
+        p, ell = self.n_partitions, self.interval_len
+        return (orig % p) * ell + (orig // p)
+
+    def to_original(self, intern):
+        intern = np.asarray(intern, dtype=np.int64)
+        p, ell = self.n_partitions, self.interval_len
+        return (intern % ell) * p + (intern // ell)
+
+    # -- interval lookup (O(1), "mathematically", paper §7.2) ----------------
+    def interval_of(self, intern):
+        return np.asarray(intern, dtype=np.int64) // self.interval_len
+
+    def interval_range(self, i: int) -> Tuple[int, int]:
+        lo = i * self.interval_len
+        return lo, lo + self.interval_len
+
+    def local_offset(self, intern):
+        """Offset within owning interval — positional vertex-column key."""
+        return np.asarray(intern, dtype=np.int64) % self.interval_len
+
+
+# ---------------------------------------------------------------------------
+# Edge partition (paper §4.1.1, with CSC-perm adaptation)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EdgePartition:
+    """Immutable destination-interval edge partition.
+
+    Edge order (the 'edge-array'): sorted by (src, dst). Attribute columns
+    are positional w.r.t. this order. The only permitted in-place mutation
+    mirrors the paper: edge-type change, attribute-column writes, and
+    tombstoning (§5.3) — none of which reorder or resize the arrays.
+    """
+
+    interval: Tuple[int, int]  # [lo, hi) of internal destination IDs
+    src: np.ndarray            # (E,) int64, ascending
+    dst: np.ndarray            # (E,) int64, within interval
+    etype: np.ndarray          # (E,) int8  (paper: 4-bit type)
+    # sparse CSR over sources (paper's pointer-array; sparse format §4.1.1)
+    src_vertices: np.ndarray   # (S,) unique sources, ascending
+    src_ptr: np.ndarray        # (S+1,) offsets into edge-array
+    # dst access (replaces the in-edge linked list; DESIGN.md §2)
+    dst_perm: np.ndarray       # (E,) permutation sorting edges by dst
+    dst_vertices: np.ndarray   # (D,) unique destinations, ascending
+    dst_ptr: np.ndarray        # (D+1,) offsets into dst_perm
+    # columnar edge attributes, positional (paper §4.3)
+    columns: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    # tombstones (paper §5.3): permanent removal happens at merge time
+    dead: Optional[np.ndarray] = None  # (E,) bool or None
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def n_live_edges(self) -> int:
+        if self.dead is None:
+            return self.n_edges
+        return int(self.n_edges - self.dead.sum())
+
+    def nbytes(self) -> int:
+        n = self.src.nbytes + self.dst.nbytes + self.etype.nbytes
+        n += self.src_vertices.nbytes + self.src_ptr.nbytes
+        n += self.dst_perm.nbytes + self.dst_vertices.nbytes + self.dst_ptr.nbytes
+        for c in self.columns.values():
+            n += c.nbytes
+        return n
+
+    # -- primitive queries (paper §4.2) --------------------------------------
+    def out_edge_range(self, v: int) -> Tuple[int, int]:
+        """Edge-array range [a, b) of v's out-edges (binary search on the
+        pointer-array, paper §4.2.1). Empty range if none."""
+        i = np.searchsorted(self.src_vertices, v)
+        if i < self.src_vertices.shape[0] and self.src_vertices[i] == v:
+            return int(self.src_ptr[i]), int(self.src_ptr[i + 1])
+        return 0, 0
+
+    def out_edges(self, v: int) -> np.ndarray:
+        """Positions in the edge-array of v's live out-edges."""
+        a, b = self.out_edge_range(v)
+        pos = np.arange(a, b, dtype=np.int64)
+        return self._live(pos)
+
+    def in_edges(self, v: int) -> np.ndarray:
+        """Positions in the edge-array of v's live in-edges (via dst-perm —
+        the paper walks the linked list; we take one contiguous perm slice)."""
+        i = np.searchsorted(self.dst_vertices, v)
+        if i < self.dst_vertices.shape[0] and self.dst_vertices[i] == v:
+            pos = self.dst_perm[self.dst_ptr[i]:self.dst_ptr[i + 1]]
+            return self._live(np.asarray(pos, dtype=np.int64))
+        return np.empty(0, dtype=np.int64)
+
+    def _live(self, pos: np.ndarray) -> np.ndarray:
+        if self.dead is None or pos.size == 0:
+            return pos
+        return pos[~self.dead[pos]]
+
+    # -- mutations allowed by the model --------------------------------------
+    def set_column(self, name: str, pos, values) -> None:
+        self.columns[name][pos] = values
+
+    def set_etype(self, pos, values) -> None:
+        """Paper §4.1.1: edge-type change is the one allowed in-place edit."""
+        self.etype[pos] = values
+
+    def tombstone(self, pos) -> None:
+        if self.dead is None:
+            self.dead = np.zeros(self.n_edges, dtype=bool)
+        self.dead[pos] = True
+
+    # -- PSW sliding window (paper §6.1) --------------------------------------
+    def window(self, interval: Tuple[int, int]) -> Tuple[int, int]:
+        """Contiguous edge-array range whose sources fall in `interval`.
+
+        This is the paper's sliding window: because the partition is
+        source-sorted, the out-edges of any vertex interval form one
+        contiguous run.
+        """
+        lo, hi = interval
+        a = int(np.searchsorted(self.src, lo, side="left"))
+        b = int(np.searchsorted(self.src, hi, side="left"))
+        return a, b
+
+    # -- attribute → edge reverse lookup (paper §4.3) -------------------------
+    def edge_at(self, pos: int) -> Tuple[int, int, int]:
+        """Recover (src, dst, type) from an edge-array position: dst/type are
+        stored at the position; src via pointer-array search (paper does the
+        same binary search)."""
+        j = int(np.searchsorted(self.src_ptr, pos, side="right")) - 1
+        return int(self.src_vertices[j]), int(self.dst[pos]), int(self.etype[pos])
+
+
+def build_partition(
+    interval: Tuple[int, int],
+    src: np.ndarray,
+    dst: np.ndarray,
+    etype: Optional[np.ndarray] = None,
+    columns: Optional[Dict[str, np.ndarray]] = None,
+    presorted: bool = False,
+) -> EdgePartition:
+    """Bulk-build an immutable edge partition (sort by (src, dst), index)."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    etype = (
+        np.zeros(src.shape[0], dtype=np.int8)
+        if etype is None
+        else np.asarray(etype, dtype=np.int8)
+    )
+    columns = dict(columns or {})
+    if not presorted and src.size:
+        order = np.lexsort((dst, src))
+        src, dst, etype = src[order], dst[order], etype[order]
+        columns = {k: np.asarray(v)[order] for k, v in columns.items()}
+
+    src_vertices, first = np.unique(src, return_index=True)
+    src_ptr = np.concatenate([first, [src.shape[0]]]).astype(np.int64)
+
+    dst_perm = np.argsort(dst, kind="stable").astype(np.int64)
+    dst_sorted = dst[dst_perm]
+    dst_vertices, dfirst = np.unique(dst_sorted, return_index=True)
+    dst_ptr = np.concatenate([dfirst, [dst.shape[0]]]).astype(np.int64)
+
+    return EdgePartition(
+        interval=interval,
+        src=src,
+        dst=dst,
+        etype=etype,
+        src_vertices=src_vertices,
+        src_ptr=src_ptr,
+        dst_perm=dst_perm,
+        dst_vertices=dst_vertices,
+        dst_ptr=dst_ptr,
+        columns=columns,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The full PAL graph
+# ---------------------------------------------------------------------------
+class GraphPAL:
+    """P destination-interval partitions + per-interval vertex columns.
+
+    IDs handed to the public API are *original* IDs; the reversible hash is
+    applied at the boundary (paper §7.2).
+    """
+
+    def __init__(self, intervals: IntervalMap, partitions: List[EdgePartition],
+                 vertex_columns: Optional[Dict[str, List[np.ndarray]]] = None):
+        assert len(partitions) == intervals.n_partitions
+        self.intervals = intervals
+        self.partitions = partitions
+        # vertex columns: name -> list of per-interval arrays (positional)
+        self.vertex_columns: Dict[str, List[np.ndarray]] = vertex_columns or {}
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def from_edges(
+        cls,
+        src,
+        dst,
+        n_partitions: int = 8,
+        max_id: Optional[int] = None,
+        etype=None,
+        columns: Optional[Dict[str, np.ndarray]] = None,
+    ) -> "GraphPAL":
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if max_id is None:
+            max_id = int(max(src.max(initial=0), dst.max(initial=0)))
+        iv = IntervalMap.for_capacity(max_id, n_partitions)
+        isrc, idst = iv.to_internal(src), iv.to_internal(dst)
+        part_of = iv.interval_of(idst)
+        etype = None if etype is None else np.asarray(etype, dtype=np.int8)
+        columns = columns or {}
+        parts: List[EdgePartition] = []
+        for i in range(n_partitions):
+            m = part_of == i
+            cols = {k: np.asarray(v)[m] for k, v in columns.items()}
+            et = None if etype is None else etype[m]
+            parts.append(build_partition(iv.interval_range(i), isrc[m], idst[m], et, cols))
+        return cls(iv, parts)
+
+    # -- stats ----------------------------------------------------------------
+    @property
+    def n_edges(self) -> int:
+        return sum(p.n_edges for p in self.partitions)
+
+    @property
+    def n_live_edges(self) -> int:
+        return sum(p.n_live_edges for p in self.partitions)
+
+    def nbytes(self) -> int:
+        n = sum(p.nbytes() for p in self.partitions)
+        for col in self.vertex_columns.values():
+            n += sum(a.nbytes for a in col)
+        return n
+
+    # -- vertex columns (paper §4.4: positional, O(1)) --------------------------
+    def add_vertex_column(self, name: str, dtype, fill=0) -> None:
+        ell = self.intervals.interval_len
+        self.vertex_columns[name] = [
+            np.full(ell, fill, dtype=dtype) for _ in range(self.intervals.n_partitions)
+        ]
+
+    def vertex_get(self, name: str, orig_ids):
+        intern = self.intervals.to_internal(orig_ids)
+        part = self.intervals.interval_of(intern)
+        off = self.intervals.local_offset(intern)
+        col = self.vertex_columns[name]
+        out = np.empty(np.shape(intern), dtype=col[0].dtype)
+        flat_p, flat_o = np.ravel(part), np.ravel(off)
+        flat_out = out.reshape(-1)
+        for i in np.unique(flat_p):
+            m = flat_p == i
+            flat_out[m] = col[int(i)][flat_o[m]]
+        return out
+
+    def vertex_set(self, name: str, orig_ids, values) -> None:
+        intern = self.intervals.to_internal(orig_ids)
+        part = self.intervals.interval_of(intern)
+        off = self.intervals.local_offset(intern)
+        col = self.vertex_columns[name]
+        values = np.asarray(values)
+        flat_p, flat_o = np.ravel(part), np.ravel(off)
+        flat_v = values.reshape(flat_p.shape[0], *values.shape[len(np.shape(intern)):])
+        for i in np.unique(flat_p):
+            m = flat_p == i
+            col[int(i)][flat_o[m]] = flat_v[m]
+
+    # -- edge queries (original-ID API; paper §4.2) ----------------------------
+    def out_edges(self, v: int) -> List[Tuple[int, int]]:
+        """All (partition_idx, edge_pos) of v's out-edges. A vertex can have
+        out-edges in every partition (paper: min(P, outdeg) random accesses)."""
+        vi = int(self.intervals.to_internal(v))
+        hits: List[Tuple[int, int]] = []
+        for pi, part in enumerate(self.partitions):
+            for pos in part.out_edges(vi):
+                hits.append((pi, int(pos)))
+        return hits
+
+    def in_edges(self, v: int) -> List[Tuple[int, int]]:
+        """All (partition_idx, edge_pos) of v's in-edges — exactly one
+        partition owns them (paper: the interval containing v)."""
+        vi = int(self.intervals.to_internal(v))
+        pi = int(self.intervals.interval_of(vi))
+        return [(pi, int(pos)) for pos in self.partitions[pi].in_edges(vi)]
+
+    def out_neighbors(self, v: int) -> np.ndarray:
+        vi = int(self.intervals.to_internal(v))
+        chunks = []
+        for part in self.partitions:
+            pos = part.out_edges(vi)
+            if pos.size:
+                chunks.append(part.dst[pos])
+        if not chunks:
+            return np.empty(0, dtype=np.int64)
+        return np.asarray(self.intervals.to_original(np.concatenate(chunks)))
+
+    def in_neighbors(self, v: int) -> np.ndarray:
+        vi = int(self.intervals.to_internal(v))
+        pi = int(self.intervals.interval_of(vi))
+        part = self.partitions[pi]
+        pos = part.in_edges(vi)
+        if pos.size == 0:
+            return np.empty(0, dtype=np.int64)
+        return np.asarray(self.intervals.to_original(part.src[pos]))
+
+    def out_neighbors_batch(self, vs: Sequence[int]) -> List[np.ndarray]:
+        """Batched out-neighbor query — the paper parallelizes across
+        partitions; we vectorize the per-partition binary searches."""
+        vis = self.intervals.to_internal(np.asarray(list(vs), dtype=np.int64))
+        results = [[] for _ in vs]
+        for part in self.partitions:
+            if part.n_edges == 0:
+                continue
+            idx = np.searchsorted(part.src_vertices, vis)
+            ok = (idx < part.src_vertices.shape[0])
+            ok &= np.where(ok, part.src_vertices[np.minimum(idx, part.src_vertices.shape[0] - 1)] == vis, False)
+            for j in np.nonzero(ok)[0]:
+                a, b = int(part.src_ptr[idx[j]]), int(part.src_ptr[idx[j] + 1])
+                pos = part._live(np.arange(a, b, dtype=np.int64))
+                if pos.size:
+                    results[int(j)].append(part.dst[pos])
+        return [
+            np.asarray(self.intervals.to_original(np.concatenate(r)))
+            if r else np.empty(0, dtype=np.int64)
+            for r in results
+        ]
+
+    # -- exports ----------------------------------------------------------------
+    def to_coo(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(src, dst) in original IDs, live edges only, partition order."""
+        ss, dd = [], []
+        for part in self.partitions:
+            live = (
+                np.ones(part.n_edges, dtype=bool) if part.dead is None else ~part.dead
+            )
+            ss.append(part.src[live])
+            dd.append(part.dst[live])
+        s = np.concatenate(ss) if ss else np.empty(0, np.int64)
+        d = np.concatenate(dd) if dd else np.empty(0, np.int64)
+        return (np.asarray(self.intervals.to_original(s)),
+                np.asarray(self.intervals.to_original(d)))
+
+    def partition_sizes(self) -> np.ndarray:
+        return np.asarray([p.n_edges for p in self.partitions])

@@ -1,0 +1,174 @@
+"""Graph queries over PAL / LSM storage (paper §4.2, §7.4, §8.4).
+
+Implements the paper's query set:
+  * out-edge / in-edge primitive queries (on GraphPAL and LSMTree),
+  * friends-of-friends (FoF) with the frontier-batched out-edge strategy,
+  * frontier traversal with the direction-optimizing top-down/bottom-up
+    switch of Beamer et al. that the paper adopts in §7.4,
+  * depth-limited unweighted shortest path (one- or two-sided BFS, §8.4).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .lsm import LSMTree
+from .pal import GraphPAL
+
+GraphLike = Union[GraphPAL, LSMTree]
+
+__all__ = ["Frontier", "friends_of_friends", "bfs", "shortest_path", "traverse_out"]
+
+
+class Frontier:
+    """A set of vertices (original IDs) flowing through traversal operators —
+    the paper's Scala-API frontier (§7.4)."""
+
+    def __init__(self, ids: Sequence[int]):
+        self.ids = np.unique(np.asarray(list(ids), dtype=np.int64))
+
+    def __len__(self) -> int:
+        return int(self.ids.shape[0])
+
+    def has_vertex(self, v: int) -> bool:
+        i = np.searchsorted(self.ids, v)
+        return bool(i < self.ids.shape[0] and self.ids[i] == v)
+
+
+def _out_neighbors_batch(g: GraphLike, vs: np.ndarray) -> np.ndarray:
+    """Union of out-neighborhoods (top-down step)."""
+    if isinstance(g, GraphPAL):
+        chunks = g.out_neighbors_batch(vs)
+        if not chunks:
+            return np.empty(0, np.int64)
+        return np.concatenate([c for c in chunks if c.size] or
+                              [np.empty(0, np.int64)])
+    chunks = [g.out_neighbors(int(v)) for v in vs]
+    chunks = [c for c in chunks if c.size]
+    return np.concatenate(chunks) if chunks else np.empty(0, np.int64)
+
+
+def _bottom_up_step(g: GraphLike, frontier_mask: np.ndarray,
+                    iv) -> np.ndarray:
+    """Bottom-up sweep (paper §7.4 / Beamer): stream ALL edges once and emit
+    destinations whose source is in the frontier. Cost O(|E|/B) sequential —
+    cheaper than per-vertex queries when the frontier is a large fraction of V."""
+    parts = g.partitions if isinstance(g, GraphPAL) else g.all_partitions()
+    next_ids = []
+    for part in parts:
+        if part.n_edges == 0:
+            continue
+        live = np.ones(part.n_edges, bool) if part.dead is None else ~part.dead
+        src_orig = np.asarray(iv.to_original(part.src), dtype=np.int64)
+        m = live & frontier_mask[src_orig]
+        if m.any():
+            next_ids.append(np.asarray(iv.to_original(part.dst[m]), np.int64))
+    if isinstance(g, LSMTree):
+        for buf in g.buffers:
+            if len(buf):
+                s = np.asarray(iv.to_original(np.asarray(buf.src, np.int64)))
+                d = np.asarray(iv.to_original(np.asarray(buf.dst, np.int64)))
+                m = frontier_mask[s]
+                if m.any():
+                    next_ids.append(d[m])
+    return np.concatenate(next_ids) if next_ids else np.empty(0, np.int64)
+
+
+def traverse_out(g: GraphLike, frontier: Frontier,
+                 bottom_up_threshold: float = 0.05) -> Frontier:
+    """One traversal hop with the direction-optimizing switch (paper §7.4):
+    if the frontier exceeds a fraction of |V|, sweep bottom-up over all
+    edges instead of issuing per-vertex out-edge queries."""
+    iv = g.intervals
+    n_vert = iv.max_vertices
+    if len(frontier) > bottom_up_threshold * n_vert:
+        mask = np.zeros(n_vert + 1, dtype=bool)
+        mask[np.minimum(frontier.ids, n_vert)] = True
+        nbrs = _bottom_up_step(g, mask, iv)
+    else:
+        nbrs = _out_neighbors_batch(g, frontier.ids)
+    return Frontier(nbrs)
+
+
+def friends_of_friends(g: GraphLike, v: int,
+                       max_friends: Optional[int] = None) -> np.ndarray:
+    """Paper §8.4: W = {w : ∃u, (v,u) ∈ E, (u,w) ∈ E}, excluding the friends
+    themselves (and v). Out-edges of all friends are queried in one batch."""
+    friends = g.out_neighbors(v) if isinstance(g, GraphPAL) else g.out_neighbors(v)
+    friends = np.unique(friends)
+    if max_friends is not None and friends.shape[0] > max_friends:
+        friends = friends[:max_friends]
+    if friends.size == 0:
+        return np.empty(0, np.int64)
+    fof = _out_neighbors_batch(g, friends)
+    fof = np.unique(fof)
+    # exclude friends and the query vertex (paper's selectOut filter)
+    return np.setdiff1d(fof, np.concatenate([friends, [v]]), assume_unique=False)
+
+
+def bfs(g: GraphLike, source: int, max_depth: int = 5,
+        bottom_up_threshold: float = 0.05) -> dict:
+    """Direction-optimizing BFS; returns {vertex: depth} for reached vertices."""
+    depth = {int(source): 0}
+    frontier = Frontier([source])
+    for d in range(1, max_depth + 1):
+        nxt = traverse_out(g, frontier, bottom_up_threshold)
+        fresh = [int(u) for u in nxt.ids if int(u) not in depth]
+        if not fresh:
+            break
+        for u in fresh:
+            depth[u] = d
+        frontier = Frontier(fresh)
+    return depth
+
+
+def shortest_path(g: GraphLike, s: int, t: int, max_depth: int = 5,
+                  two_sided: bool = True) -> Optional[int]:
+    """Depth-limited unweighted shortest path (paper §8.4). Two-sided search
+    expands the smaller frontier each round; the backward side uses
+    in-neighbors."""
+    if s == t:
+        return 0
+    if not two_sided:
+        d = bfs(g, s, max_depth)
+        return d.get(int(t))
+
+    fwd = {int(s): 0}
+    bwd = {int(t): 0}
+    f_front, b_front = Frontier([s]), Frontier([t])
+    for _ in range(max_depth):
+        if len(f_front) == 0 and len(b_front) == 0:
+            return None
+        expand_fwd = len(f_front) <= len(b_front) and len(f_front) > 0
+        if expand_fwd or len(b_front) == 0:
+            nxt = traverse_out(g, f_front)
+            fresh = []
+            base = max(fwd.values())
+            for u in nxt.ids:
+                u = int(u)
+                if u in bwd:
+                    return base + 1 + bwd[u]
+                if u not in fwd:
+                    fwd[u] = base + 1
+                    fresh.append(u)
+            f_front = Frontier(fresh)
+        else:
+            # backward hop over in-neighbors
+            chunks = [g.in_neighbors(int(v)) for v in b_front.ids]
+            chunks = [c for c in chunks if c.size]
+            nbrs = np.unique(np.concatenate(chunks)) if chunks else np.empty(0, np.int64)
+            fresh = []
+            base = max(bwd.values())
+            for u in nbrs:
+                u = int(u)
+                if u in fwd:
+                    return fwd[u] + 1 + base
+                if u not in bwd:
+                    bwd[u] = base + 1
+                    fresh.append(u)
+            b_front = Frontier(fresh)
+        total = max(fwd.values()) + max(bwd.values())
+        if total >= max_depth and len(f_front) == 0 and len(b_front) == 0:
+            break
+    return None

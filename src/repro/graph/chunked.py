@@ -1,0 +1,116 @@
+"""Edge-chunked message passing (PSW discipline for XLA-native GNNs).
+
+Big PAL partitions are processed in edge chunks inside a `lax.scan`, holding
+only (E/chunks)-sized per-edge transients. Aggregators fold across chunks:
+sum/mean/std via (sum, sumsq, count) moments; max/min via elementwise fold
+with ±inf identities (masked edges contribute the identity, fixing the
+mask-as-zero bias a naive `segment_max(msgs * mask)` has).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+
+__all__ = ["multi_aggregate_chunked", "fold_aggregate"]
+
+NEG = -1e30
+POS = 1e30
+
+
+def _chunk(arr, nc):
+    out = arr.reshape(nc, arr.shape[0] // nc, *arr.shape[1:])
+    # keep chunks edge-sharded (reshape would otherwise let SPMD replicate)
+    return constrain(out, None, "edges", *([None] * (arr.ndim - 1)))
+
+
+def multi_aggregate_chunked(
+    msg_fn: Callable[..., jnp.ndarray],
+    edge_arrays: Dict[str, jnp.ndarray],   # chunked along edges, incl. 'dst',
+                                           # 'mask'
+    n_nodes: int,
+    d_msg: int,
+    aggregators: Sequence[str] = ("mean", "max", "min", "std"),
+    chunks: int = 1,
+) -> Dict[str, jnp.ndarray]:
+    """Fold segment aggregations over edge chunks.
+
+    msg_fn(**chunk_arrays) -> (Ec, d) messages. Returns the dict of raw
+    moments {sum, sumsq, max, min, count}; finalize with `fold_aggregate`.
+    """
+    need_sq = "std" in aggregators
+    need_max = "max" in aggregators
+    need_min = "min" in aggregators
+
+    def one_chunk(acc, chunk):
+        dst = chunk["dst"]
+        mask = chunk["mask"]
+        msgs = msg_fn(**{k: v for k, v in chunk.items()
+                         if k not in ("dst", "mask")})
+        m = mask.astype(msgs.dtype)[:, None]
+        acc["sum"] = acc["sum"] + jax.ops.segment_sum(
+            msgs * m, dst, num_segments=n_nodes)
+        acc["count"] = acc["count"] + jax.ops.segment_sum(
+            m[:, 0], dst, num_segments=n_nodes)
+        if need_sq:
+            acc["sumsq"] = acc["sumsq"] + jax.ops.segment_sum(
+                msgs * msgs * m, dst, num_segments=n_nodes)
+        if need_max:
+            mx = jax.ops.segment_max(jnp.where(m > 0, msgs, NEG), dst,
+                                     num_segments=n_nodes)
+            acc["max"] = jnp.maximum(acc["max"], mx)
+        if need_min:
+            mn = jax.ops.segment_min(jnp.where(m > 0, msgs, POS), dst,
+                                     num_segments=n_nodes)
+            acc["min"] = jnp.minimum(acc["min"], mn)
+        acc = {k: constrain(v, "nodes", *([None] * (v.ndim - 1)))
+               for k, v in acc.items()}
+        return acc
+
+    acc = {
+        "sum": jnp.zeros((n_nodes, d_msg)),
+        "count": jnp.zeros((n_nodes,)),
+    }
+    if need_sq:
+        acc["sumsq"] = jnp.zeros((n_nodes, d_msg))
+    if need_max:
+        acc["max"] = jnp.full((n_nodes, d_msg), NEG)
+    if need_min:
+        acc["min"] = jnp.full((n_nodes, d_msg), POS)
+    acc = {k: constrain(v, "nodes", *([None] * (v.ndim - 1)))
+           for k, v in acc.items()}
+
+    if chunks == 1:
+        return one_chunk(acc, edge_arrays)
+
+    chunked = {k: _chunk(v, chunks) for k, v in edge_arrays.items()}
+    acc, _ = jax.lax.scan(
+        lambda a, c: (jax.checkpoint(one_chunk)(a, c), None), acc, chunked)
+    return acc
+
+
+def fold_aggregate(acc: Dict[str, jnp.ndarray],
+                   aggregators: Sequence[str], eps: float = 1e-5):
+    """Finalize moments into the stacked (N, A*d) aggregate."""
+    cnt = jnp.maximum(acc["count"], 1.0)[:, None]
+    has = (acc["count"] > 0)[:, None]
+    outs = []
+    for a in aggregators:
+        if a == "sum":
+            outs.append(acc["sum"])
+        elif a == "mean":
+            outs.append(acc["sum"] / cnt)
+        elif a == "std":
+            mean = acc["sum"] / cnt
+            var = jnp.maximum(acc["sumsq"] / cnt - mean * mean, 0.0)
+            outs.append(jnp.sqrt(var + eps))
+        elif a == "max":
+            outs.append(jnp.where(has, acc["max"], 0.0))
+        elif a == "min":
+            outs.append(jnp.where(has, acc["min"], 0.0))
+        else:
+            raise ValueError(a)
+    return jnp.concatenate(outs, axis=-1)

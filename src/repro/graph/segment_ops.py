@@ -1,0 +1,98 @@
+"""Segment-reduction message-passing primitives.
+
+JAX sparse is BCOO-only, so message passing is implemented directly as
+edge-index gather → `jax.ops.segment_*` scatter (this IS part of the system,
+per the assignment). All ops take `edge_index`-style (src, dst) int arrays
+and are jit/vmap/grad-friendly. The PAL layout guarantees dst-sorted edges
+per partition, which these ops exploit via `indices_are_sorted`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "gather_src",
+    "scatter_sum",
+    "scatter_mean",
+    "scatter_max",
+    "scatter_min",
+    "scatter_std",
+    "degree",
+    "edge_softmax",
+    "aggregate_multi",
+]
+
+
+def gather_src(x: jnp.ndarray, src: jnp.ndarray) -> jnp.ndarray:
+    """Messages from source features: x[src]."""
+    return jnp.take(x, src, axis=0)
+
+
+def scatter_sum(msgs, dst, n_nodes: int, sorted_: bool = False):
+    return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes,
+                               indices_are_sorted=sorted_)
+
+
+def scatter_mean(msgs, dst, n_nodes: int, sorted_: bool = False):
+    s = scatter_sum(msgs, dst, n_nodes, sorted_)
+    d = degree(dst, n_nodes).astype(s.dtype)
+    return s / jnp.maximum(d, 1.0)[:, None] if s.ndim == 2 else s / jnp.maximum(d, 1.0)
+
+
+def scatter_max(msgs, dst, n_nodes: int, sorted_: bool = False):
+    return jax.ops.segment_max(msgs, dst, num_segments=n_nodes,
+                               indices_are_sorted=sorted_)
+
+
+def scatter_min(msgs, dst, n_nodes: int, sorted_: bool = False):
+    return jax.ops.segment_min(msgs, dst, num_segments=n_nodes,
+                               indices_are_sorted=sorted_)
+
+
+def scatter_std(msgs, dst, n_nodes: int, eps: float = 1e-5,
+                sorted_: bool = False):
+    """Per-destination standard deviation (PNA aggregator)."""
+    mean = scatter_mean(msgs, dst, n_nodes, sorted_)
+    sq_mean = scatter_mean(msgs * msgs, dst, n_nodes, sorted_)
+    var = jnp.maximum(sq_mean - mean * mean, 0.0)
+    return jnp.sqrt(var + eps)
+
+
+def degree(dst: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst,
+                               num_segments=n_nodes)
+
+
+def edge_softmax(scores: jnp.ndarray, dst: jnp.ndarray, n_nodes: int):
+    """Numerically-stable softmax of edge scores grouped by destination."""
+    m = jax.ops.segment_max(scores, dst, num_segments=n_nodes)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    ex = jnp.exp(scores - m[dst])
+    z = jax.ops.segment_sum(ex, dst, num_segments=n_nodes)
+    return ex / jnp.maximum(z[dst], 1e-16)
+
+
+def aggregate_multi(msgs, dst, n_nodes: int,
+                    aggregators=("mean", "max", "min", "std")):
+    """Stacked multi-aggregator reduce (PNA). Returns (n_nodes, A*d)."""
+    outs = []
+    neg_inf = jnp.finfo(msgs.dtype).min
+    for a in aggregators:
+        if a == "mean":
+            outs.append(scatter_mean(msgs, dst, n_nodes))
+        elif a == "sum":
+            outs.append(scatter_sum(msgs, dst, n_nodes))
+        elif a == "max":
+            o = scatter_max(msgs, dst, n_nodes)
+            outs.append(jnp.where(o <= neg_inf, 0.0, o))
+        elif a == "min":
+            o = scatter_min(msgs, dst, n_nodes)
+            outs.append(jnp.where(o >= jnp.finfo(msgs.dtype).max, 0.0, o))
+        elif a == "std":
+            outs.append(scatter_std(msgs, dst, n_nodes))
+        else:
+            raise ValueError(a)
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+Each kernel package ships <name>.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd public wrapper), and ref.py (pure-jnp oracle).
+"""
+from . import embedding_bag, flash_attention, psw_spmm, segment_ell

@@ -1,0 +1,18 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas kernels target TPU; on the CPU backend we validate with
+    interpret=True (the kernel body executes as JAX ops)."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

@@ -1,0 +1,3 @@
+from .embedding_bag import embedding_bag_pallas
+from .ops import embedding_bag
+from .ref import embedding_bag_ref

@@ -1,0 +1,29 @@
+"""Jit'd wrapper for the EmbeddingBag kernel (sum/mean, padding-tolerant)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import round_up
+from .embedding_bag import embedding_bag_pallas
+from .ref import embedding_bag_ref
+
+__all__ = ["embedding_bag"]
+
+
+def embedding_bag(idx, weights, table, mode: str = "sum",
+                  use_kernel: bool = True, interpret=None):
+    B, K = idx.shape
+    V, D = table.shape
+    Bp, Dp = round_up(B, 128), round_up(D, 128)
+    idx_p = jnp.pad(idx, ((0, Bp - B), (0, 0)))
+    w_p = jnp.pad(weights, ((0, Bp - B), (0, 0)))
+    t_p = jnp.pad(table, ((0, 0), (0, Dp - D)))
+    if use_kernel:
+        out = embedding_bag_pallas(idx_p, w_p, t_p, interpret=interpret)
+    else:
+        out = embedding_bag_ref(idx_p, w_p, t_p)
+    out = out[:B, :D]
+    if mode == "mean":
+        denom = jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+        out = out / denom.astype(out.dtype)
+    return out

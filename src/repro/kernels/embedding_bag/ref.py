@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["embedding_bag_ref"]
+
+
+def embedding_bag_ref(idx, weights, table, mode: str = "sum"):
+    """idx: (B, K) int32 rows; weights: (B, K) per-sample weights (0 = padded
+    slot); table: (V, D). out[b] = reduce_k weights[b,k] * table[idx[b,k]]."""
+    gathered = table[idx]                              # (B, K, D)
+    w = weights[..., None].astype(table.dtype)
+    s = (gathered * w).sum(axis=1)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        denom = jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+        return s / denom.astype(table.dtype)
+    raise ValueError(mode)

@@ -1,0 +1,36 @@
+"""Jit'd wrapper: Pallas forward + exact-recompute XLA backward.
+
+The kernel is the inference/serving hot path; for training we register a
+custom VJP whose backward recomputes attention with the jnp oracle (XLA
+flash-style chunking handles memory) — kernel-forward/XLA-backward is a
+standard production split.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q, k, v, causal: bool = True):
+    return flash_attention_pallas(q, k, v, causal=causal)
+
+
+def _fwd(q, k, v, causal):
+    return flash_attention_pallas(q, k, v, causal=causal), (q, k, v)
+
+
+def _bwd(causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: attention_ref(q, k, v, causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

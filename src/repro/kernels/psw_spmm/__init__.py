@@ -1,0 +1,3 @@
+from .ops import prepare_blocks, psw_spmm, psw_spmm_edges
+from .psw_spmm import psw_spmm_pallas
+from .ref import psw_spmm_ref, spmm_dense_ref

@@ -1,0 +1,64 @@
+"""Jit'd public wrapper for the PSW block-sparse SpMM kernel."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...graph.padding import bucket_edges_by_block
+from ..common import cdiv, round_up
+from .psw_spmm import psw_spmm_pallas
+from .ref import psw_spmm_ref
+
+__all__ = ["prepare_blocks", "psw_spmm", "psw_spmm_edges"]
+
+
+def prepare_blocks(src: np.ndarray, dst: np.ndarray, n_nodes: int,
+                   block: int) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Host-side: bucket an edge list into dense tiles + ensure every dst
+    block appears (zero filler tiles) so the kernel initializes all rows.
+    Returns (coords sorted by dst block, tiles, n_dst_blocks)."""
+    coords, tiles = bucket_edges_by_block(src, dst, n_nodes, block)
+    n_blocks = cdiv(n_nodes, block)
+    present = np.zeros(n_blocks, bool)
+    present[coords[:, 0]] = True
+    missing = np.nonzero(~present)[0]
+    if missing.size:
+        fill_coords = np.stack([missing, np.zeros_like(missing)], 1).astype(np.int32)
+        coords = np.concatenate([coords, fill_coords])
+        tiles = np.concatenate([tiles, np.zeros((missing.size, block, block),
+                                                tiles.dtype)])
+    order = np.argsort(coords[:, 0], kind="stable")
+    return coords[order], tiles[order], n_blocks
+
+
+def psw_spmm(coords, tiles, x, n_dst_blocks: int, block: int,
+             f_block: int = 128, use_kernel: bool = True, interpret=None):
+    """Block-sparse A @ X over PAL tiles. Pads F to the feature block."""
+    F = x.shape[-1]
+    fb = min(f_block, round_up(F, 128))
+    Fp = round_up(F, fb)
+    if Fp != F:
+        x = jnp.pad(x, ((0, 0), (0, Fp - F)))
+    if use_kernel:
+        out = psw_spmm_pallas(jnp.asarray(coords), jnp.asarray(tiles), x,
+                              n_dst_blocks=n_dst_blocks, block=block,
+                              f_block=fb, interpret=interpret)
+    else:
+        out = psw_spmm_ref(jnp.asarray(coords), jnp.asarray(tiles), x,
+                           n_dst_blocks, block)
+    return out[:, :F]
+
+
+def psw_spmm_edges(src, dst, x, n_nodes: int, block: int = 128,
+                   use_kernel: bool = True, interpret=None):
+    """Convenience: edge list -> tiles -> kernel. Host-side prep; returns
+    (n_dst_blocks*block, F) with rows beyond n_nodes zero."""
+    coords, tiles, n_blocks = prepare_blocks(np.asarray(src), np.asarray(dst),
+                                             n_nodes, block)
+    n_src_pad = round_up(n_nodes, block)
+    xp = jnp.pad(x, ((0, n_src_pad - x.shape[0]), (0, 0)))
+    out = psw_spmm(coords, tiles, xp, n_blocks, block,
+                   use_kernel=use_kernel, interpret=interpret)
+    return out[:n_nodes]

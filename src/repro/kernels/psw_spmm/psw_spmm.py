@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: PSW block-sparse SpMM (the PSW inner loop on the MXU).
+
+A PAL edge partition, bucketed into (dst_block × src_block) adjacency tiles
+(graph.padding.bucket_edges_by_block), is multiplied against node features.
+Only ACTIVE tiles are enumerated — the power-law graph's empty blocks cost
+nothing, mirroring the paper's 'only windows that contain edges are read'.
+
+Tiling: grid = (n_feature_blocks, n_active_tiles); the active-tile dimension
+iterates fastest so consecutive tiles hitting the same destination block
+accumulate in the same VMEM output block (output revisiting). Tile coords
+are scalar-prefetched (pltpu.PrefetchScalarGridSpec) so BlockSpec index_maps
+can route x/out blocks by tile coordinate — data-dependent addressing
+resolved at grid-index time, the TPU analogue of the paper's pointer-array
+lookup. Tiles stream HBM→VMEM once each; x/out blocks stay VMEM-resident
+across revisits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import default_interpret
+
+__all__ = ["psw_spmm_pallas"]
+
+
+def _kernel(coords_ref, tiles_ref, x_ref, o_ref):
+    t = pl.program_id(1)
+
+    # zero the output block on its first visit (tiles are dst-sorted, so a
+    # change of dst block == first visit)
+    prev_dst = coords_ref[jnp.maximum(t, 1) - 1, 0]
+    is_first = jnp.logical_or(t == 0, prev_dst != coords_ref[t, 0])
+
+    @pl.when(is_first)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(tiles_ref[0], x_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_dst_blocks", "block",
+                                             "f_block", "interpret"))
+def psw_spmm_pallas(coords, tiles, x, *, n_dst_blocks: int, block: int,
+                    f_block: int = 128, interpret=None):
+    """coords: (T, 2) int32 dst/src block ids, sorted by dst; tiles: (T,B,B);
+    x: (n_src_blocks*B, F) with F % f_block == 0. Returns (n_dst_blocks*B, F).
+
+    Every dst block must appear in coords at least once (ops.py pads with
+    zero tiles) — otherwise its output rows are left uninitialized.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    T, B = tiles.shape[0], tiles.shape[1]
+    F = x.shape[-1]
+    assert B == block and F % f_block == 0
+
+    grid = (F // f_block, T)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, B, B), lambda f, t, c: (t, 0, 0)),
+                pl.BlockSpec((B, f_block), lambda f, t, c: (c[t, 1], f)),
+            ],
+            out_specs=pl.BlockSpec((B, f_block), lambda f, t, c: (c[t, 0], f)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_dst_blocks * B, F), x.dtype),
+        interpret=interpret,
+    )(coords, tiles, x)
+    return out

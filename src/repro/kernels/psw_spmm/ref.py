@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the PSW block-sparse SpMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["psw_spmm_ref", "spmm_dense_ref"]
+
+
+def psw_spmm_ref(coords, tiles, x, n_dst_blocks: int, block: int):
+    """out[db*B:(db+1)*B] += tiles[t] @ x[sb*B:(sb+1)*B] for each active tile.
+
+    coords: (T, 2) int32 (dst_block, src_block); tiles: (T, B, B);
+    x: (n_src_blocks*B, F). Returns (n_dst_blocks*B, F).
+    """
+    B = block
+    F = x.shape[-1]
+    xb = x.reshape(-1, B, F)
+    prods = jnp.einsum("tij,tjf->tif", tiles, xb[coords[:, 1]])
+    out = jnp.zeros((n_dst_blocks, B, F), x.dtype)
+    out = out.at[coords[:, 0]].add(prods)
+    return out.reshape(n_dst_blocks * B, F)
+
+
+def spmm_dense_ref(src, dst, x, n_dst: int):
+    """Edge-list oracle: out[d] = sum_{(s,d) in E} x[s]."""
+    msgs = x[src]
+    out = jnp.zeros((n_dst, x.shape[-1]), x.dtype)
+    return out.at[dst].add(msgs)

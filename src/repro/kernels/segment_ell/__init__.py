@@ -1,0 +1,3 @@
+from .ops import segment_ell, segment_ell_from_edges
+from .ref import segment_ell_ref
+from .segment_ell import segment_ell_pallas

@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the ELL gather-reduce kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...graph.padding import pad_to_ell
+from ..common import round_up
+from .ref import segment_ell_ref
+from .segment_ell import segment_ell_pallas
+
+__all__ = ["segment_ell", "segment_ell_from_edges"]
+
+
+def segment_ell(idx, mask, x, use_kernel: bool = True, interpret=None):
+    """Padding-tolerant entry: pads N to 128 rows and F to 128 cols."""
+    N, K = idx.shape
+    F = x.shape[-1]
+    Np, Fp = round_up(N, 128), round_up(F, 128)
+    idx_p = jnp.pad(idx, ((0, Np - N), (0, 0)))
+    mask_p = jnp.pad(mask, ((0, Np - N), (0, 0)))
+    x_p = jnp.pad(x, ((0, 0), (0, Fp - F)))
+    if use_kernel:
+        out = segment_ell_pallas(idx_p, mask_p, x_p, interpret=interpret)
+    else:
+        out = segment_ell_ref(idx_p, mask_p, x_p)
+    return out[:N, :F]
+
+
+def segment_ell_from_edges(src, dst, x, n_nodes: int, max_degree: int,
+                           use_kernel: bool = True, interpret=None):
+    idx, mask = pad_to_ell(np.asarray(src), np.asarray(dst), n_nodes, max_degree)
+    return segment_ell(jnp.asarray(idx), jnp.asarray(mask), x,
+                       use_kernel=use_kernel, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the ELL gather-reduce kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["segment_ell_ref"]
+
+
+def segment_ell_ref(idx, mask, x):
+    """idx: (N, K) int32 source rows; mask: (N, K) valid; x: (M, F).
+    out[n] = sum_k mask[n,k] * x[idx[n,k]]."""
+    gathered = x[idx]                       # (N, K, F)
+    return (gathered * mask[..., None].astype(x.dtype)).sum(axis=1)

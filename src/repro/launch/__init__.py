@@ -1,0 +1,1 @@
+from .mesh import TPU_V5E, make_production_mesh

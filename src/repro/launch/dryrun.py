@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh and record roofline inputs.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); do not move them. 512 placeholder host devices back
+both the 16×16 single-pod mesh and the 2×16×16 multi-pod mesh.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-34b --shape train_4k \
+      --mesh single --out experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh both --workers 3   # orchestrator
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from collections import Counter
+from concurrent.futures import ThreadPoolExecutor
+
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s/#_\.]*\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(\([^)]*\))?.*{\s*$")
+WHILE_RE = re.compile(r"while\(.*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(shapes_txt: str) -> int:
+    nbytes = 0
+    for dt, dims in SHAPE_RE.findall(shapes_txt):
+        if dt not in DTYPE_BYTES:
+            continue
+        numel = 1
+        for d in dims.split(","):
+            if d:
+                numel *= int(d)
+        nbytes += numel * DTYPE_BYTES[dt]
+    return nbytes
+
+
+def _split_computations(hlo_text: str):
+    """computation name -> list of body lines (coarse HLO text parser)."""
+    comps = {}
+    entry = None
+    cur, cur_lines = None, []
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = COMP_START_RE.match(line)
+            if m and ("->" in line or m.group(1)):
+                cur = m.group(2)
+                if m.group(1):  # ENTRY
+                    entry = cur
+                cur_lines = []
+        else:
+            if line.startswith("}"):
+                comps[cur] = cur_lines
+                cur = None
+            else:
+                cur_lines.append(line)
+    return comps, entry
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Collective bytes with while-loop trip-count multiplication.
+
+    XLA's cost/collective accounting counts a while body ONCE; our train
+    steps scan over layers and microbatches, so collectives inside scan
+    bodies execute trip_count times. We walk the computation tree from
+    ENTRY, multiply body contributions by the trip count (largest integer
+    constant in the loop condition — exact for lax.scan's counter), and
+    sum per kind. Returns (total, bytes-by-kind, op-counts, n_whiles)."""
+    comps, entry = _split_computations(hlo_text)
+    by_kind_bytes = Counter()
+    by_kind_count = Counter()
+    n_whiles = [0]
+
+    def walk(comp_name: str, multiplier: float):
+        lines = comps.get(comp_name, [])
+        for line in lines:
+            wm = WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = 1
+                consts = [int(c) for ln in comps.get(cond, [])
+                          for c in CONST_RE.findall(ln)]
+                if consts:
+                    trip = max(consts)
+                n_whiles[0] += 1
+                walk(body, multiplier * trip)
+                continue
+            m = COLLECTIVE_RE.search(line)
+            if not m or "-done(" in line:
+                continue
+            shapes_txt, kind = m.group(1), m.group(2).lower()
+            nb = _shape_bytes(shapes_txt)
+            by_kind_bytes[kind] += int(nb * multiplier)
+            by_kind_count[kind] += int(multiplier)
+
+    if entry is not None:
+        walk(entry, 1.0)
+    else:  # fallback: flat scan, no multipliers
+        for line in hlo_text.splitlines():
+            m = COLLECTIVE_RE.search(line)
+            if not m or "-done(" in line:
+                continue
+            by_kind_bytes[m.group(2).lower()] += _shape_bytes(m.group(1))
+            by_kind_count[m.group(2).lower()] += 1
+    total = sum(by_kind_bytes.values())
+    return total, dict(by_kind_bytes), dict(by_kind_count), n_whiles[0]
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str) -> dict:
+    import jax
+    from ..configs import get_arch
+    from ..sharding import DEFAULT_RULES, ShardingRules, use_rules
+    from .mesh import make_production_mesh
+    from .steps import build_cell
+
+    t0 = time.time()
+    spec = get_arch(arch)
+    cell = spec.shapes[shape]
+    result = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+              "kind": cell.kind, "dims": cell.dims}
+    if cell.skip:
+        result["status"] = "skipped"
+        result["skip_reason"] = cell.skip
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_shards = mesh.devices.size
+    rules = ShardingRules(rules=dict(DEFAULT_RULES), mesh=mesh)
+    plan = build_cell(spec, shape, rules, n_shards)
+
+    with mesh, use_rules(plan.rules):
+        jitted = (jax.jit(plan.fn, out_shardings=plan.out_shardings)
+                  if plan.out_shardings is not None else jax.jit(plan.fn))
+        lowered = jitted.lower(*plan.args_sds)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll_bytes, coll_by_kind, coll_counts, n_whiles = parse_collective_bytes(hlo)
+
+    result.update({
+        "status": "ok",
+        "n_devices": int(n_shards),
+        "lower_s": round(t_lower - t0, 1),
+        "compile_s": round(t_compile - t_lower, 1),
+        "meta": plan.meta,
+        # per-device numbers (cost/memory analysis run post-SPMD)
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+        },
+        "collective_bytes_per_device": int(coll_bytes),
+        "collective_bytes_by_kind": coll_by_kind,
+        "collective_op_counts": coll_counts,
+        "n_while_loops": n_whiles,
+        "hlo_size_chars": len(hlo),
+    })
+    return result
+
+
+ALL_SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+                   "full_graph_sm", "minibatch_lg", "ogb_products", "molecule",
+                   "train_batch", "serve_p99", "serve_bulk", "retrieval_cand"]
+
+
+def orchestrate(mesh_kinds, out_dir: str, workers: int, only_missing: bool,
+                timeout: int):
+    """Run each cell in its own subprocess (isolation: one bad compile can't
+    take down the sweep; parallelism across CPU cores)."""
+    from ..configs import ARCH_IDS, get_arch
+    os.makedirs(out_dir, exist_ok=True)
+    jobs = []
+    for arch in ARCH_IDS:
+        spec = get_arch(arch)
+        for shape in spec.shapes:
+            for mk in mesh_kinds:
+                fname = f"{arch}__{shape}__{mk}.json".replace("/", "_")
+                fpath = os.path.join(out_dir, fname)
+                if only_missing and os.path.exists(fpath):
+                    with open(fpath) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            continue
+                jobs.append((arch, shape, mk, fpath))
+
+    def run_one(job):
+        arch, shape, mk, fpath = job
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mk, "--out", out_dir]
+        t0 = time.time()
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=timeout,
+                                  env={**os.environ,
+                                       "PYTHONPATH": os.environ.get("PYTHONPATH", "src")})
+            ok = proc.returncode == 0
+            if not ok:
+                with open(fpath, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "mesh": mk,
+                               "status": "error",
+                               "stderr": proc.stderr[-4000:]}, f, indent=1)
+        except subprocess.TimeoutExpired:
+            with open(fpath, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mk,
+                           "status": "timeout", "timeout_s": timeout}, f,
+                          indent=1)
+            ok = False
+        print(f"[{'OK' if ok else 'FAIL'}] {arch} × {shape} × {mk} "
+              f"({time.time() - t0:.0f}s)", flush=True)
+        return ok
+
+    with ThreadPoolExecutor(max_workers=workers) as ex:
+        results = list(ex.map(run_one, jobs))
+    print(f"done: {sum(results)}/{len(results)} ok")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    mesh_kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        orchestrate(mesh_kinds, args.out, args.workers,
+                    only_missing=not args.force, timeout=args.timeout)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    for mk in mesh_kinds:
+        fname = f"{args.arch}__{args.shape}__{mk}.json".replace("/", "_")
+        fpath = os.path.join(args.out, fname)
+        try:
+            result = run_cell(args.arch, args.shape, mk, args.out)
+        except Exception:
+            result = {"arch": args.arch, "shape": args.shape, "mesh": mk,
+                      "status": "error", "traceback": traceback.format_exc()}
+        with open(fpath, "w") as f:
+            json.dump(result, f, indent=1)
+        print(json.dumps({k: v for k, v in result.items()
+                          if k not in ("traceback",)}, indent=1))
+        if result["status"] == "error":
+            print(result["traceback"], file=sys.stderr)
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

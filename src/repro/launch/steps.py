@@ -1,0 +1,451 @@
+"""Per-family step builders: (arch × shape) cell → jit-able function +
+ShapeDtypeStruct inputs + shardings.
+
+This is the glue the dry-run, the trainer, and the server all share. Every
+cell lowers a COMPLETE step: train cells include loss, backward, and the
+AdamW update; serve cells include the full request path (e.g. chunked
+top-k over the PAL-sharded item table, not just logits).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchSpec, ShapeCell
+from ..models import bert4rec, transformer
+from ..models.gnn import equiformer_v2, gin, meshgraphnet, pna
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from ..sharding import ShardingRules
+
+__all__ = ["CellPlan", "build_cell"]
+
+
+@dataclasses.dataclass
+class CellPlan:
+    fn: Callable
+    args_sds: Tuple[Any, ...]
+    out_shardings: Any
+    rules: ShardingRules
+    meta: Dict[str, Any]
+
+
+def _sh(rules: ShardingRules, *axes):
+    return rules.sharding(*axes)
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _tree_sds(shape_tree, sharding_tree):
+    return jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), shape_tree, sharding_tree)
+
+
+def _param_shardings(axes_tree, rules: ShardingRules):
+    return jax.tree.map(lambda ax: rules.sharding(*ax), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))
+
+
+def _opt_shardings(param_sh):
+    return {"m": param_sh, "v": param_sh, "step": None}
+
+
+def _round_to(n: int, k: int) -> int:
+    return -(-n // k) * k
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_cell(spec: ArchSpec, cell: ShapeCell, rules: ShardingRules) -> CellPlan:
+    cfg = spec.config
+    B, S = cell.dims["batch"], cell.dims["seq"]
+    if cell.kind in ("prefill", "decode"):
+        # §Perf H3: inference has no optimizer state — replicate params over
+        # the data axis (TP-only sharding) so serving never re-gathers them
+        rules = ShardingRules(rules={**rules.rules, "fsdp": None},
+                              mesh=rules.mesh)
+    axes = transformer.param_logical_axes(cfg)
+    param_sh = _param_shardings(axes, rules)
+    params_shape = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    params_sds = _tree_sds(params_shape, param_sh)
+    batch_sh = _sh(rules, "batch", None)
+
+    if cell.kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_shape = jax.eval_shape(lambda: adamw_init(params_shape))
+        opt_sh = _opt_shardings(param_sh)
+        opt_sds = _tree_sds(opt_shape, opt_sh)
+
+        # gradient accumulation: pick microbatch count so per-device live
+        # activations (L × d_model × 2B bf16 residual per token, scan+remat)
+        # stay under ~5 GB, while the microbatch still spans every DP shard.
+        mesh = rules.mesh
+        dp = 1
+        if mesh is not None:
+            for ax in ("pod", "data"):
+                if ax in mesh.axis_names:
+                    dp *= mesh.shape[ax]
+        tokens_per_dev = B * S // dp
+        act_bytes = tokens_per_dev * cfg.n_layers * cfg.d_model * 2
+        # MoE dispatch buffers scale with the microbatch too — halve the
+        # activation budget for MoE configs
+        budget = 2_500_000_000 if cfg.moe is not None else 5_000_000_000
+        need = max(1, -(-act_bytes // budget))
+        accum = 1
+        while accum < need and (B // (accum * 2)) >= dp:
+            accum *= 2
+
+        def train_step(params, opt, batch):
+            mb = jax.tree.map(
+                lambda x: x.reshape(accum, B // accum, *x.shape[1:]), batch)
+
+            def cast_and_loss(params, microbatch):
+                # §Perf H1: cast params to bf16 while still SHARDED, so the
+                # per-microbatch FSDP all-gathers move half the bytes; the
+                # cast is differentiable (grads return in fp32)
+                pc = jax.tree.map(
+                    lambda p: p.astype(cfg.compute_dtype) if p.ndim >= 2
+                    else p, params)
+                return transformer.loss_fn(pc, microbatch, cfg)
+
+            def micro(carry, microbatch):
+                loss_sum, grads = carry
+                l, g = jax.value_and_grad(cast_and_loss)(params, microbatch)
+                grads = jax.tree.map(jnp.add, grads, g)
+                return (loss_sum + l, grads), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (loss, grads), _ = jax.lax.scan(jax.checkpoint(micro),
+                                            (0.0, zeros), mb)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            params, opt, metrics = adamw_update(grads, opt, params, opt_cfg)
+            return params, opt, {"loss": loss / accum, **metrics}
+
+        batch_sds = {
+            "tokens": _sds((B, S), jnp.int32, batch_sh),
+            "labels": _sds((B, S), jnp.int32, batch_sh),
+        }
+        return CellPlan(train_step, (params_sds, opt_sds, batch_sds),
+                        (param_sh, _opt_shardings(param_sh), None), rules,
+                        {"tokens_per_step": B * S, "grad_accum": accum})
+
+    if cell.kind == "prefill":
+        cache_sh = _sh(rules, None, "batch", "model", None, None)
+
+        def prefill_step(params, tokens):
+            return transformer.prefill(params, tokens, cfg, max_seq=S)
+
+        tokens_sds = _sds((B, S), jnp.int32, batch_sh)
+        out_sh = (None, {"k": cache_sh, "v": cache_sh})
+        return CellPlan(prefill_step, (params_sds, tokens_sds), out_sh, rules,
+                        {"tokens_per_step": B * S})
+
+    if cell.kind == "decode":
+        cache_sh = _sh(rules, None, "batch", "model", None, None)
+        cache_shape = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, B, S))
+        cache_sds = jax.tree.map(
+            lambda s: _sds(s.shape, s.dtype, cache_sh), cache_shape)
+
+        def decode(params, cache, tokens, pos):
+            return transformer.decode_step(params, cache, tokens, pos, cfg)
+
+        tokens_sds = _sds((B, 1), jnp.int32, batch_sh)
+        pos_sds = _sds((), jnp.int32)
+        out_sh = (None, {"k": cache_sh, "v": cache_sh})
+        return CellPlan(decode, (params_sds, cache_sds, tokens_sds, pos_sds),
+                        out_sh, rules, {"tokens_per_step": B})
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+_GNN_MODULES = {
+    "pna": pna, "gin-tu": gin, "equiformer-v2": equiformer_v2,
+    "meshgraphnet": meshgraphnet,
+}
+
+
+def _adapt_gnn_config(arch: str, base, dims) -> Any:
+    d_feat, n_cls = dims["d_feat"], dims["n_classes"]
+    graph_level = dims["task"] == "graph_reg"
+    E = dims["n_edges"]
+    chunks = 16 if E >= 10_000_000 else (4 if E >= 1_000_000 else 1)
+    if arch == "pna":
+        return dataclasses.replace(base, d_in=d_feat, n_classes=n_cls,
+                                   readout="graph" if graph_level else "node",
+                                   edge_chunks=chunks)
+    if arch == "gin-tu":
+        return dataclasses.replace(base, d_in=d_feat, n_classes=n_cls,
+                                   readout="graph" if graph_level else "node",
+                                   edge_chunks=chunks)
+    if arch == "meshgraphnet":
+        return dataclasses.replace(base, d_node_in=d_feat, d_edge_in=4,
+                                   d_out=n_cls, edge_chunks=chunks,
+                                   remat_blocks=chunks > 1)
+    if arch == "equiformer-v2":
+        # huge partitions: PSW ring gather + per-layer remat (DESIGN.md §2);
+        # remat is ALWAYS on — 12 unrematted layers of per-edge irreps state
+        # exceed HBM even on small graphs
+        echunks, mode = 1, "take"
+        if E >= 10_000_000:
+            echunks, mode = 16, "psw_ring"
+        elif E >= 100_000:
+            echunks, mode = 4, "psw_ring"
+        return dataclasses.replace(base, d_out=n_cls, n_species=128,
+                                   edge_chunks=echunks, gather_mode=mode,
+                                   remat_layers=True)
+    raise ValueError(arch)
+
+
+def _gnn_batch_sds(arch: str, cfg, dims, rules: ShardingRules, shards: int):
+    """ShapeDtypeStructs for one (possibly padded/sharded) graph batch."""
+    batched = "batch" in dims
+    N, E = dims["n_nodes"], dims["n_edges"]
+    big = (not batched) and N >= max(shards, 4096)
+    node_sh = _sh(rules, "nodes", None) if big else None
+    node_sh1 = _sh(rules, "nodes") if big else None
+    edge_sh = _sh(rules, "edges") if big else None
+    edge_sh2 = _sh(rules, "edges", None) if big else None
+    if big:
+        # node padding: divisible by the shard count; edge padding: by
+        # shards × max chunking (so per-chunk slices stay shardable)
+        N = _round_to(N, 512)
+        E = _round_to(E, 512 * 16)
+    lead = ()
+    b_sh = lambda *ax: None
+    if batched:
+        Bt = dims["batch"]
+        lead = (Bt,)
+        b_sh = lambda *ax: _sh(rules, "batch", *ax)
+        node_sh = b_sh(None, None)
+        node_sh1 = b_sh(None)
+        edge_sh = b_sh(None)
+        edge_sh2 = b_sh(None, None)
+
+    batch = {
+        "src": _sds((*lead, E), jnp.int32, edge_sh),
+        "dst": _sds((*lead, E), jnp.int32, edge_sh),
+        "edge_mask": _sds((*lead, E), jnp.bool_, edge_sh),
+        "node_mask": _sds((*lead, N), jnp.bool_, node_sh1),
+    }
+    if arch == "equiformer-v2":
+        batch["species"] = _sds((*lead, N), jnp.int32, node_sh1)
+        batch["pos"] = _sds((*lead, N, 3), jnp.float32, node_sh)
+    else:
+        batch["x"] = _sds((*lead, N, dims["d_feat"]), jnp.float32, node_sh)
+    if arch == "meshgraphnet":
+        batch["edge_attr"] = _sds((*lead, E, 4), jnp.float32, edge_sh2)
+    if dims["task"] == "graph_reg":
+        batch["labels"] = _sds((dims["batch"],), jnp.float32, b_sh())
+    else:
+        batch["labels"] = _sds((*lead, N), jnp.int32, node_sh1)
+    return batch, N, E
+
+
+def _gnn_loss(module, cfg, dims):
+    graph_level = dims["task"] == "graph_reg"
+    batched = "batch" in dims
+
+    def forward_one(params, b):
+        return module.forward(params, b, cfg)
+
+    def loss_fn(params, batch):
+        if batched:
+            labels = batch.pop("labels")
+            out = jax.vmap(lambda b: forward_one(params, b))(batch)
+            batch["labels"] = labels
+            if graph_level:
+                pred = out.reshape(out.shape[0], -1)[:, 0]  # (B,)
+                return jnp.mean((pred - labels) ** 2)
+            raise ValueError("batched node task unsupported")
+        out = forward_one(params, batch)                    # (N, n_cls)
+        labels = batch["labels"]
+        mask = batch["node_mask"]
+        logits = out.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        ce = (logz - gold) * mask
+        return ce.sum() / jnp.maximum(mask.sum(), 1)
+
+    return loss_fn
+
+
+def _gnn_cell(spec: ArchSpec, cell: ShapeCell, rules: ShardingRules,
+              shards: int) -> CellPlan:
+    module = _GNN_MODULES[spec.name]
+    cfg = _adapt_gnn_config(spec.name, spec.config, cell.dims)
+    batched = "batch" in cell.dims
+    big = (not batched) and cell.dims["n_nodes"] >= max(shards, 4096)
+    if not big:
+        # small/batched graphs: replicate graph arrays — null the node/edge
+        # logical axes so in-model constraints don't force 512-way sharding
+        rules = ShardingRules(rules={**rules.rules, "nodes": None,
+                                     "edges": None}, mesh=rules.mesh)
+    batch_sds, N, E = _gnn_batch_sds(spec.name, cfg, cell.dims, rules, shards)
+
+    params_shape = jax.eval_shape(
+        lambda: module.init_params(jax.random.PRNGKey(0), cfg))
+    # GNN params are small: replicate
+    params_sds = jax.tree.map(lambda s: _sds(s.shape, s.dtype), params_shape)
+    opt_shape = jax.eval_shape(lambda: adamw_init(params_shape))
+    opt_sds = jax.tree.map(lambda s: _sds(s.shape, s.dtype), opt_shape)
+
+    loss_fn = _gnn_loss(module, cfg, cell.dims)
+    opt_cfg = AdamWConfig()
+
+    def train_step(params, opt, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt, metrics = adamw_update(grads, opt, params, opt_cfg)
+        return params, opt, {"loss": loss, **metrics}
+
+    return CellPlan(train_step, (params_sds, opt_sds, batch_sds),
+                    None, rules, {"n_nodes": N, "n_edges": E,
+                                  "edges_per_step": E})
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+def _recsys_cell(spec: ArchSpec, cell: ShapeCell,
+                 rules: ShardingRules) -> CellPlan:
+    cfg = spec.config
+    axes = bert4rec.param_logical_axes(cfg)
+    param_sh = _param_shardings(axes, rules)
+    params_shape = jax.eval_shape(
+        lambda: bert4rec.init_params(jax.random.PRNGKey(0), cfg))
+    params_sds = _tree_sds(params_shape, param_sh)
+    B = cell.dims["batch"]
+    batch_sh = _sh(rules, "batch", None) if B > 1 else None
+
+    if cell.kind == "train":
+        opt_shape = jax.eval_shape(lambda: adamw_init(params_shape))
+        opt_sh = _opt_shardings(param_sh)
+        opt_sds = _tree_sds(opt_shape, opt_sh)
+        opt_cfg = AdamWConfig()
+        n_masked = 40                       # ~20% of seq_len=200
+        accum = 8 if B >= 16384 else 1
+
+        def train_step(params, opt, batch):
+            mb = jax.tree.map(
+                lambda x: x.reshape(accum, B // accum, *x.shape[1:]), batch)
+
+            def micro(carry, microbatch):
+                loss_sum, grads = carry
+                l, g = jax.value_and_grad(
+                    functools.partial(bert4rec.masked_lm_loss,
+                                      vocab_chunk=8192))(
+                    params, microbatch, cfg)
+                return (loss_sum + l, jax.tree.map(jnp.add, grads, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (loss, grads), _ = jax.lax.scan(jax.checkpoint(micro),
+                                            (0.0, zeros), mb)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            params, opt, metrics = adamw_update(grads, opt, params, opt_cfg)
+            return params, opt, {"loss": loss / accum, **metrics}
+
+        batch_sds = {
+            "item_seq": _sds((B, cfg.seq_len), jnp.int32, batch_sh),
+            "masked_positions": _sds((B, n_masked), jnp.int32, batch_sh),
+            "labels": _sds((B, n_masked), jnp.int32, batch_sh),
+        }
+        return CellPlan(train_step, (params_sds, opt_sds, batch_sds),
+                        (param_sh, _opt_shardings(param_sh), None), rules,
+                        {"sequences_per_step": B, "grad_accum": accum})
+
+    if cell.kind == "serve":
+        top_k = 100
+        chunk = 65536
+        req_chunk = 16384  # bulk requests stream through in chunks
+
+        def _serve_chunk(params, item_seq):
+            reps = bert4rec.encode(params, item_seq, cfg)
+            last = reps[:, -1]                               # (B, d)
+            vpad = _round_to(cfg.padded_vocab, chunk)
+            n_chunks = vpad // chunk
+            table = jnp.pad(params["item_embed"],
+                            ((0, vpad - cfg.padded_vocab), (0, 0)))
+            bias_all = jnp.pad(params["out_bias"],
+                               (0, vpad - cfg.padded_vocab))
+
+            def body(carry, ci):
+                best_v, best_i = carry
+                start = ci * chunk
+                emb = jax.lax.dynamic_slice_in_dim(
+                    table, start, chunk, 0).astype(last.dtype)
+                bias = jax.lax.dynamic_slice_in_dim(
+                    bias_all, start, chunk, 0).astype(last.dtype)
+                s = last @ emb.T + bias[None, :]
+                ids = start + jnp.arange(chunk)
+                s = jnp.where(ids[None, :] < cfg.vocab, s, -jnp.inf)
+                cat_v = jnp.concatenate([best_v, s], axis=1)
+                cat_i = jnp.concatenate(
+                    [best_i, jnp.broadcast_to(ids, s.shape)], axis=1)
+                v, sel = jax.lax.top_k(cat_v, top_k)
+                return (v, jnp.take_along_axis(cat_i, sel, axis=1)), None
+
+            init = (jnp.full((last.shape[0], top_k), -jnp.inf, last.dtype),
+                    jnp.zeros((last.shape[0], top_k), jnp.int32))
+            (v, i), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+            return v, i
+
+        def serve_step(params, item_seq):
+            """Full-catalog top-k; bulk batches stream through in request
+            chunks (offline scoring is embarrassingly parallel over users)."""
+            Bn = item_seq.shape[0]
+            if Bn <= req_chunk:
+                return _serve_chunk(params, item_seq)
+            nrc = Bn // req_chunk
+            seqs = item_seq.reshape(nrc, req_chunk, -1)
+            v, i = jax.lax.map(lambda s: _serve_chunk(params, s), seqs)
+            return v.reshape(Bn, -1), i.reshape(Bn, -1)
+
+        seq_sds = _sds((B, cfg.seq_len), jnp.int32, batch_sh)
+        return CellPlan(serve_step, (params_sds, seq_sds), None, rules,
+                        {"requests_per_step": B})
+
+    if cell.kind == "retrieval":
+        n_cand = cell.dims["n_candidates"]
+        cand_sh = _sh(rules, "table")
+
+        def retrieval_step(params, item_seq, candidates):
+            scores = bert4rec.score_candidates(params, item_seq, candidates,
+                                               cfg)
+            return jax.lax.top_k(scores, 100)
+
+        seq_sds = _sds((B, cfg.seq_len), jnp.int32)
+        cand_sds = _sds((n_cand,), jnp.int32, cand_sh)
+        return CellPlan(retrieval_step, (params_sds, seq_sds, cand_sds),
+                        None, rules, {"candidates_per_step": n_cand})
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+def build_cell(spec: ArchSpec, shape_name: str, rules: ShardingRules,
+               shards: int) -> CellPlan:
+    cell = spec.shapes[shape_name]
+    if cell.skip:
+        raise ValueError(f"cell {spec.name}×{shape_name} is skipped: {cell.skip}")
+    if spec.family == "lm":
+        return _lm_cell(spec, cell, rules)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, cell, rules, shards)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, cell, rules)
+    raise ValueError(spec.family)

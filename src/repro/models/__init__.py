@@ -1,0 +1,2 @@
+from . import bert4rec, transformer
+from .gnn import equiformer_v2, gin, meshgraphnet, pna

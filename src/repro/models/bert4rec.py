@@ -1,0 +1,202 @@
+"""BERT4Rec (Sun et al., arXiv:1904.06690): bidirectional transformer over
+item interaction sequences, masked-item training, with the item-embedding
+table PAL-sharded (reversible-hash row partitioning over the `table`/model
+mesh axis — the paper's §7.2 technique applied to a recsys table; see
+DESIGN.md §4) and EmbeddingBag-style pooled lookups for bulk scoring.
+
+Config (assigned): embed_dim=64, n_blocks=2, n_heads=2, seq_len=200.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..sharding import constrain
+
+__all__ = ["Bert4RecConfig", "init_params", "encode", "masked_lm_loss",
+           "score_all_items", "score_candidates", "param_logical_axes"]
+
+MASK_OFFSET = 1  # item ids are 1..n_items; 0 = padding; n_items+1 = [MASK]
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    d_ff: Optional[int] = None          # default 4*d
+    dropout: float = 0.0                # kept for config parity (eval mode)
+    compute_dtype: object = jnp.float32
+
+    @property
+    def vocab(self) -> int:
+        return self.n_items + 2          # + padding + [MASK]
+
+    @property
+    def padded_vocab(self) -> int:
+        """Table rows rounded up so PAL row-sharding divides evenly over the
+        model axis (padded rows are masked out of scores/losses)."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def ff(self) -> int:
+        return self.d_ff or 4 * self.embed_dim
+
+
+def init_params(key, cfg: Bert4RecConfig):
+    d, h = cfg.embed_dim, cfg.n_heads
+    keys = jax.random.split(key, cfg.n_blocks + 3)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k = jax.random.split(keys[i], 6)
+        blocks.append({
+            "wq": jax.random.normal(k[0], (d, d)) * d ** -0.5,
+            "wk": jax.random.normal(k[1], (d, d)) * d ** -0.5,
+            "wv": jax.random.normal(k[2], (d, d)) * d ** -0.5,
+            "wo": jax.random.normal(k[3], (d, d)) * d ** -0.5,
+            "w1": jax.random.normal(k[4], (d, cfg.ff)) * d ** -0.5,
+            "w2": jax.random.normal(k[5], (cfg.ff, d)) * cfg.ff ** -0.5,
+            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+            "b1": jnp.zeros((cfg.ff,)), "b2": jnp.zeros((d,)),
+        })
+    return {
+        "item_embed": jax.random.normal(keys[-3], (cfg.padded_vocab, d)) * 0.02,
+        "pos_embed": jax.random.normal(keys[-2], (cfg.seq_len, d)) * 0.02,
+        "blocks": blocks,
+        "out_bias": jnp.zeros((cfg.padded_vocab,)),
+        "final_ln": jnp.ones((d,)),
+    }
+
+
+def param_logical_axes(cfg: Bert4RecConfig):
+    blk = {
+        "wq": ("fsdp", "model"), "wk": ("fsdp", "model"), "wv": ("fsdp", "model"),
+        "wo": ("model", "fsdp"), "w1": ("fsdp", "model"), "w2": ("model", "fsdp"),
+        "ln1": (None,), "ln2": (None,), "b1": ("model",), "b2": (None,),
+    }
+    return {
+        "item_embed": ("table", None),   # PAL-hashed row sharding
+        "pos_embed": (None, None),
+        "blocks": [dict(blk) for _ in range(cfg.n_blocks)],
+        "out_bias": ("table",),
+        "final_ln": (None,),
+    }
+
+
+def _ln(x, scale, eps=1e-6):
+    m = x.mean(-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) * lax.rsqrt(v + eps) * scale
+
+
+def encode(params, item_seq, cfg: Bert4RecConfig):
+    """item_seq: (B, S) int32 (0 = pad). Returns (B, S, d) representations.
+    Bidirectional attention with padding mask (encoder-only; no causal mask,
+    no decode step — see DESIGN.md §4)."""
+    B, S = item_seq.shape
+    d, H = cfg.embed_dim, cfg.n_heads
+    dh = d // H
+    cdt = cfg.compute_dtype
+    pad = item_seq == 0
+
+    # replicate the (row-sharded) table for the lookup — 10⁶×64 is ~256 MB,
+    # vs SPMD's fallback of replicating the (B, S, d) gather OUTPUT
+    table = constrain(params["item_embed"], None, None)
+    x = jnp.take(table, item_seq, axis=0).astype(cdt)
+    x = x + params["pos_embed"][None, :S].astype(cdt)
+    x = constrain(x, "batch", None, None)
+
+    for blk in params["blocks"]:
+        h = _ln(x, blk["ln1"].astype(cdt))
+        q = (h @ blk["wq"].astype(cdt)).reshape(B, S, H, dh)
+        k = (h @ blk["wk"].astype(cdt)).reshape(B, S, H, dh)
+        v = (h @ blk["wv"].astype(cdt)).reshape(B, S, H, dh)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * dh ** -0.5
+        s = jnp.where(pad[:, None, None, :], -jnp.inf, s)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(B, S, d)
+        x = x + o @ blk["wo"].astype(cdt)
+        h = _ln(x, blk["ln2"].astype(cdt))
+        f = jax.nn.gelu(h @ blk["w1"].astype(cdt) + blk["b1"].astype(cdt))
+        f = constrain(f, "batch", None, "model")
+        x = x + f @ blk["w2"].astype(cdt) + blk["b2"].astype(cdt)
+        x = constrain(x, "batch", None, None)
+    return _ln(x, params["final_ln"].astype(cdt))
+
+
+def masked_lm_loss(params, batch, cfg: Bert4RecConfig,
+                   vocab_chunk: int = 16384):
+    """Masked-item CE computed ONLY at masked positions, with a streaming
+    (chunked) logsumexp over the huge item table — never materializing
+    (B, S, vocab) logits (at 1M items those would be petabytes).
+
+    batch: item_seq (B, S) with [MASK] tokens placed; masked_positions
+    (B, M) int32 slot indices (0-padded); labels (B, M) true items at those
+    slots, 0 = unused slot.
+    """
+    reps = encode(params, batch["item_seq"], cfg)          # (B, S, d)
+    pos = batch["masked_positions"]
+    rows = jnp.take_along_axis(reps, pos[..., None], axis=1)  # (B, M, d)
+    d = rows.shape[-1]
+    flat = rows.reshape(-1, d).astype(jnp.float32)         # (R, d)
+    lab = batch["labels"].reshape(-1)                      # (R,)
+    valid = lab > 0
+
+    table = params["item_embed"].astype(jnp.float32)
+    bias = params["out_bias"].astype(jnp.float32)
+    gold = (flat * jnp.take(table, lab, axis=0)).sum(-1) + jnp.take(bias, lab)
+
+    vpad = -(-cfg.padded_vocab // vocab_chunk) * vocab_chunk
+    tpad = jnp.pad(table, ((0, vpad - cfg.padded_vocab), (0, 0)))
+    bpad = jnp.pad(bias, (0, vpad - cfg.padded_vocab))
+    n_chunks = vpad // vocab_chunk
+
+    def body(carry, ci):
+        m, s = carry
+        start = ci * vocab_chunk
+        emb = jax.lax.dynamic_slice_in_dim(tpad, start, vocab_chunk, 0)
+        bc = jax.lax.dynamic_slice_in_dim(bpad, start, vocab_chunk, 0)
+        sc = flat @ emb.T + bc[None, :]                    # (R, chunk)
+        ids = start + jnp.arange(vocab_chunk)
+        sc = jnp.where(ids[None, :] < cfg.vocab, sc, -jnp.inf)
+        m_new = jnp.maximum(m, sc.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(
+            sc - m_new[:, None]).sum(-1)
+        return (m_new, s), None
+
+    m0 = jnp.full((flat.shape[0],), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((flat.shape[0],), jnp.float32)
+    (m, s), _ = jax.lax.scan(jax.checkpoint(body), (m0, s0),
+                             jnp.arange(n_chunks))
+    logz = m + jnp.log(jnp.maximum(s, 1e-30))
+    ce = (logz - gold) * valid
+    return ce.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def score_all_items(params, item_seq, cfg: Bert4RecConfig):
+    """Next-item scores over the FULL table from the last position:
+    (B, vocab). Used by serve_p99 / serve_bulk (table stays row-sharded;
+    logits vocab-sharded)."""
+    reps = encode(params, item_seq, cfg)
+    last = reps[:, -1]
+    logits = last @ params["item_embed"].astype(reps.dtype).T
+    logits = logits + params["out_bias"].astype(reps.dtype)
+    return constrain(logits, "batch", "table")
+
+
+def score_candidates(params, item_seq, candidate_ids, cfg: Bert4RecConfig):
+    """retrieval_cand: score ONE query against a candidate set via a batched
+    dot (gather rows of the PAL-sharded table, single matmul — not a loop).
+    item_seq: (B, S); candidate_ids: (n_cand,). Returns (B, n_cand)."""
+    reps = encode(params, item_seq, cfg)
+    last = reps[:, -1]                                  # (B, d)
+    cand = jnp.take(params["item_embed"], candidate_ids, axis=0)
+    cand = cand.astype(last.dtype)                      # (n_cand, d)
+    bias = jnp.take(params["out_bias"], candidate_ids).astype(last.dtype)
+    return last @ cand.T + bias[None, :]

@@ -1,0 +1,1 @@
+from . import common, equiformer_v2, gin, meshgraphnet, pna, wigner

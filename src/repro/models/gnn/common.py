@@ -1,0 +1,56 @@
+"""Shared GNN building blocks (functional, pytree params)."""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_mlp", "mlp_apply", "init_linear", "linear", "layer_norm",
+           "GraphBatch"]
+
+# A graph minibatch is a plain dict:
+#   x:         (N, d_in) node features
+#   src, dst:  (E,) int32 local edge indices
+#   edge_mask: (E,) bool
+#   node_mask: (N,) bool
+#   edge_attr: optional (E, d_e)
+#   pos:       optional (N, 3) coordinates
+#   labels:    optional (N,) or (B,) targets
+GraphBatch = Dict[str, jnp.ndarray]
+
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (d_in, d_out), dtype) * (d_in ** -0.5),
+        "b": jnp.zeros((d_out,), dtype),
+    }
+
+
+def linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def init_mlp(key, dims: Sequence[int], dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [init_linear(k, a, b, dtype) for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp_apply(layers, x, act=jax.nn.relu, final_act=False):
+    for i, p in enumerate(layers):
+        x = linear(p, x)
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def layer_norm(x, scale=None, bias=None, eps=1e-5):
+    m = x.mean(-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - m) * jax.lax.rsqrt(v + eps)
+    if scale is not None:
+        y = y * scale
+    if bias is not None:
+        y = y + bias
+    return y

@@ -1,0 +1,99 @@
+"""MeshGraphNet (Pfaff et al., arXiv:2010.03409): encode-process-decode with
+15 message-passing blocks, d_hidden=128, 2-layer MLPs + LayerNorm, residual
+edge and node updates, sum aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ...graph.segment_ops import scatter_sum
+from ...sharding import constrain
+from .common import init_mlp, mlp_apply, layer_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshGraphNetConfig:
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 16
+    d_edge_in: int = 8
+    d_out: int = 3
+    edge_chunks: int = 1         # PSW edge chunking for huge partitions
+    remat_blocks: bool = False   # checkpoint processor blocks (huge graphs)
+
+
+def _mlp_dims(cfg, d_in):
+    return [d_in] + [cfg.d_hidden] * cfg.mlp_layers
+
+
+def init_params(key, cfg: MeshGraphNetConfig):
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = []
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(keys[i])
+        blocks.append({
+            "edge_mlp": init_mlp(k1, _mlp_dims(cfg, 3 * cfg.d_hidden)),
+            "node_mlp": init_mlp(k2, _mlp_dims(cfg, 2 * cfg.d_hidden)),
+        })
+    return {
+        "node_encoder": init_mlp(keys[-3], _mlp_dims(cfg, cfg.d_node_in)),
+        "edge_encoder": init_mlp(keys[-2], _mlp_dims(cfg, cfg.d_edge_in)),
+        "blocks": blocks,
+        "decoder": init_mlp(keys[-1], [cfg.d_hidden, cfg.d_hidden, cfg.d_out]),
+    }
+
+
+def forward(params, batch, cfg: MeshGraphNetConfig):
+    src, dst = batch["src"], batch["dst"]
+    emask = batch["edge_mask"].astype(jnp.float32)[:, None]
+    n = batch["x"].shape[0]
+
+    h = layer_norm(mlp_apply(params["node_encoder"], batch["x"], final_act=True))
+    e = layer_norm(mlp_apply(params["edge_encoder"], batch["edge_attr"],
+                             final_act=True))
+    h = constrain(h, "nodes", None)
+    e = constrain(e, "edges", None)
+
+    nc = cfg.edge_chunks
+
+    def block(carry, blk):
+        h, e = carry
+        if nc == 1:
+            e_in = jnp.concatenate([e, h[src], h[dst]], axis=-1)
+            e = layer_norm(e + mlp_apply(blk["edge_mlp"], e_in,
+                                         final_act=True)) * emask
+            agg = scatter_sum(e, dst, n)
+        else:
+            def chunk_step(acc, c):
+                e_in = jnp.concatenate([c["e"], h[c["src"]], h[c["dst"]]], -1)
+                e_new = layer_norm(
+                    c["e"] + mlp_apply(blk["edge_mlp"], e_in, final_act=True)
+                ) * c["m"][:, None]
+                return acc + scatter_sum(e_new, c["dst"], n), e_new
+
+            ch = lambda a: constrain(
+                a.reshape(nc, a.shape[0] // nc, *a.shape[1:]),
+                None, "edges", *([None] * (a.ndim - 1)))
+            chunks = {"e": ch(e), "src": ch(src), "dst": ch(dst),
+                      "m": ch(batch["edge_mask"].astype(e.dtype))}
+            agg, e_new = jax.lax.scan(
+                lambda a, c: jax.checkpoint(chunk_step)(a, c),
+                jnp.zeros((n, e.shape[-1])), chunks)
+            e = e_new.reshape(e.shape)
+        n_in = jnp.concatenate([h, agg], axis=-1)
+        h = layer_norm(h + mlp_apply(blk["node_mlp"], n_in, final_act=True))
+        h = constrain(h, "nodes", None)
+        e = constrain(e, "edges", None)
+        return h, e
+
+    # ONE scan over stacked blocks (separate per-layer while loops would
+    # each hold their own chunk-scan buffers)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params["blocks"])
+    body = jax.checkpoint(block) if cfg.remat_blocks else block
+    (h, e), _ = jax.lax.scan(lambda c, b: (body(c, b), None), (h, e), stacked)
+
+    return mlp_apply(params["decoder"], h)

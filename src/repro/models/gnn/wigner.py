@@ -1,0 +1,145 @@
+"""Real spherical-harmonic rotation matrices (Wigner D in the real basis).
+
+Ivanic & Ruedenberg recursion (J. Phys. Chem. 1996, with 1998 errata):
+builds the (2l+1)x(2l+1) rotation of real SH coefficients for each l from
+the l=1 matrix, batched over edges with jnp ops (static index tables, so it
+jits and differentiates). This is the rotation step of eSCN / EquiformerV2:
+rotate each edge's features into the edge-aligned frame where the SO(2)
+convolution is m-sparse, then rotate back.
+
+Correctness is property-tested: composition homomorphism, orthogonality,
+and agreement with explicit real-SH polynomials for l<=2.
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wigner_rotations", "rotation_to_z", "blockdiag_apply", "irreps_dim"]
+
+
+def irreps_dim(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+def _p_entry(i, l, mu, mp, Mlm1, M1):
+    """Helper P^l_{i,mu,mp} of the recursion; Mlm1: (..., 2l-1, 2l-1)."""
+    # M1 is indexed by m in {-1,0,1} -> offset +1; Mlm1 by offset l-1
+    off = l - 1
+    if mp == l:
+        return (M1[..., i + 1, 2] * Mlm1[..., mu + off, 2 * l - 2]
+                - M1[..., i + 1, 0] * Mlm1[..., mu + off, 0])
+    if mp == -l:
+        return (M1[..., i + 1, 2] * Mlm1[..., mu + off, 0]
+                + M1[..., i + 1, 0] * Mlm1[..., mu + off, 2 * l - 2])
+    return M1[..., i + 1, 1] * Mlm1[..., mu + off, mp + off]
+
+
+def _uvw(l, m, mp):
+    am = abs(m)
+    if abs(mp) < l:
+        denom = (l + mp) * (l - mp)
+    else:
+        denom = (2 * l) * (2 * l - 1)
+    u = math.sqrt((l + m) * (l - m) / denom)
+    d_m0 = 1.0 if m == 0 else 0.0
+    v = 0.5 * math.sqrt((1 + d_m0) * (l + am - 1) * (l + am) / denom) * (1 - 2 * d_m0)
+    w = -0.5 * math.sqrt((l - am - 1) * (l - am) / denom) * (1 - d_m0)
+    return u, v, w
+
+
+def _recurse(Mlm1, M1, l):
+    rows = []
+    for m in range(-l, l + 1):
+        row = []
+        for mp in range(-l, l + 1):
+            u, v, w = _uvw(l, m, mp)
+            term = 0.0
+            if u != 0.0:
+                term = term + u * _p_entry(0, l, m, mp, Mlm1, M1)
+            if v != 0.0:
+                if m == 0:
+                    vv = (_p_entry(1, l, 1, mp, Mlm1, M1)
+                          + _p_entry(-1, l, -1, mp, Mlm1, M1))
+                elif m > 0:
+                    d = 1.0 if m == 1 else 0.0
+                    vv = (_p_entry(1, l, m - 1, mp, Mlm1, M1) * math.sqrt(1 + d)
+                          - _p_entry(-1, l, -m + 1, mp, Mlm1, M1) * (1 - d))
+                else:
+                    d = 1.0 if m == -1 else 0.0
+                    vv = (_p_entry(1, l, m + 1, mp, Mlm1, M1) * (1 - d)
+                          + _p_entry(-1, l, -m - 1, mp, Mlm1, M1) * math.sqrt(1 + d))
+                term = term + v * vv
+            if w != 0.0:
+                if m > 0:
+                    ww = (_p_entry(1, l, m + 1, mp, Mlm1, M1)
+                          + _p_entry(-1, l, -m - 1, mp, Mlm1, M1))
+                else:
+                    ww = (_p_entry(1, l, m - 1, mp, Mlm1, M1)
+                          - _p_entry(-1, l, -m + 1, mp, Mlm1, M1))
+                term = term + w * ww
+            row.append(term)
+        rows.append(jnp.stack(row, axis=-1))
+    return jnp.stack(rows, axis=-2)
+
+
+def wigner_rotations(R: jnp.ndarray, l_max: int) -> List[jnp.ndarray]:
+    """R: (..., 3, 3) rotation matrices → [M_0, ..., M_lmax], each
+    (..., 2l+1, 2l+1), rotating real SH coefficient vectors."""
+    perm = jnp.asarray([1, 2, 0])  # real-SH l=1 basis order (y, z, x)
+    M1 = R[..., perm[:, None], perm[None, :]]
+    mats = [jnp.ones(R.shape[:-2] + (1, 1), R.dtype), M1]
+    for l in range(2, l_max + 1):
+        mats.append(_recurse(mats[-1], M1, l))
+    return mats[: l_max + 1]
+
+
+def rotation_to_z(direction: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
+    """Rotation R with R @ d = ẑ for unit vectors d: (..., 3).
+
+    ẑ is the principal axis of this real-SH convention (m=0 components are
+    z-aligned; rotations about ẑ mix only within (m, -m) pairs), so the
+    SO(2) convolution's m-sparsity holds exactly in the aligned frame.
+    Rodrigues formula with robust handling of d ≈ ±ẑ.
+    """
+    d = direction / jnp.maximum(jnp.linalg.norm(direction, axis=-1, keepdims=True), eps)
+    z = jnp.zeros_like(d).at[..., 2].set(1.0)
+    v = jnp.cross(d, z)
+    c = d[..., 2]                              # cos = d · ẑ
+    s2 = jnp.sum(v * v, axis=-1)               # sin²
+    # K = [v]_x ; R = I + K + K² (1-c)/s²
+    zeros = jnp.zeros_like(c)
+    K = jnp.stack([
+        jnp.stack([zeros, -v[..., 2], v[..., 1]], -1),
+        jnp.stack([v[..., 2], zeros, -v[..., 0]], -1),
+        jnp.stack([-v[..., 1], v[..., 0], zeros], -1),
+    ], -2)
+    eye = jnp.broadcast_to(jnp.eye(3, dtype=d.dtype), K.shape)
+    factor = jnp.where(s2 > eps, (1.0 - c) / jnp.maximum(s2, eps), 0.0)
+    R = eye + K + factor[..., None, None] * (K @ K)
+    # antiparallel (d = -ẑ): rotate π about x̂
+    flip = jnp.broadcast_to(
+        jnp.asarray([[1.0, 0, 0], [0, -1.0, 0], [0, 0, -1.0]], d.dtype), K.shape)
+    anti = (c < -1.0 + 1e-6)[..., None, None]
+    return jnp.where(anti, flip, R)
+
+
+def blockdiag_apply(mats: List[jnp.ndarray], x: jnp.ndarray,
+                    transpose: bool = False) -> jnp.ndarray:
+    """Apply per-l rotations to stacked irreps features.
+
+    mats[l]: (..., 2l+1, 2l+1); x: (..., (lmax+1)^2, C). Returns same shape.
+    """
+    outs = []
+    o = 0
+    for l, M in enumerate(mats):
+        k = 2 * l + 1
+        blk = x[..., o:o + k, :]
+        Ml = jnp.swapaxes(M, -1, -2) if transpose else M
+        outs.append(jnp.einsum("...ij,...jc->...ic", Ml, blk))
+        o += k
+    return jnp.concatenate(outs, axis=-2)

@@ -1,0 +1,532 @@
+"""Decoder-only transformer stack: dense + MoE, GQA/MQA, qk-norm, RoPE.
+
+Pure-pytree params (no flax), `jax.lax.scan` over stacked layers (compact
+HLO at 88 layers / 512 devices), blockwise-chunked attention (flash-style
+online softmax in XLA) with an optional Pallas kernel path, KV-cache decode,
+and MoE with sort-based capacity dispatch (expert-parallel over the `model`
+mesh axis — the PAL interval-exchange pattern, see DESIGN.md §4).
+
+Logical sharding axes are annotated via repro.sharding; the same code runs
+unsharded on the CPU test device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..sharding import constrain
+
+__all__ = [
+    "MoEConfig",
+    "TransformerConfig",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "prefill",
+    "decode_step",
+    "param_logical_axes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01
+    router_dtype: Any = jnp.float32
+    # §Perf H4: which dim of the expert FFN is sharded over `model`:
+    #   "expert" — classic EP (E sharded; dispatch crosses the model axis)
+    #   "ffn"    — f sharded; the dispatch gather/scatter stays group-local
+    #              in BOTH directions, at the cost of one eout all-reduce
+    ep_mode: str = "expert"
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: Optional[int] = None            # default d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    moe: Optional[MoEConfig] = None
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "dots"                     # none | dots | full
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    norm_eps: float = 1e-6
+    attention_impl: str = "xla"             # xla (blockwise) | pallas
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up so the vocab dim shards evenly over the model
+        axis (standard padded-vocab; padded logits are masked in the loss)."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for MODEL_FLOPS = 6·N·D)."""
+        d, h, kv, dh = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * (h * dh) * 2 + d * (kv * dh) * 2  # wq,wo + wk,wv
+        if self.moe is None:
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = self.moe.n_experts * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+        per_layer = attn + mlp + 2 * d + (2 * dh if self.qk_norm else 0)
+        return self.n_layers * per_layer + 2 * self.padded_vocab * d + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if self.moe is None:
+            return self.n_params
+        d = self.d_model
+        dense = self.n_params - self.n_layers * self.moe.n_experts * 3 * d * self.moe.d_ff_expert
+        return dense + self.n_layers * self.moe.top_k * 3 * d * self.moe.d_ff_expert
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: (..., seq, heads, d_head); positions: (..., seq)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_chunk: int, kv_chunk: int,
+                        q_pos0=0, scale: Optional[float] = None):
+    """Flash-style attention in pure XLA: O(S·chunk) memory, exact softmax.
+
+    q: (B, S, H, Dh); k, v: (B, T, Hkv, Dh). GQA via head grouping. Chunks
+    must divide S and T (configs are chosen 128-aligned). Differentiable;
+    pairs with remat for the backward pass.
+    """
+    B, S, H, Dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    nq, nk = S // q_chunk, T // kv_chunk
+    qr = q.reshape(B, nq, q_chunk, Hkv, G, Dh)
+
+    def q_block(qi, q_blk):
+        q_idx = q_pos0 + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, num, den = carry
+            k_blk = lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            v_blk = lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            if causal:
+                kv_idx = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = q_idx[:, None] >= kv_idx[None, :]
+                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            num_new = num * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            den_new = den * corr + p.sum(axis=-1)
+            return (m_new, num_new, den_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32)
+        num0 = jnp.zeros((B, Hkv, G, q_chunk, Dh), jnp.float32)
+        den0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        (m, num, den), _ = lax.scan(kv_step, (m0, num0, den0), jnp.arange(nk))
+        out = num / jnp.maximum(den[..., None], 1e-30)      # (B,Hkv,G,qc,Dh)
+        return out.transpose(0, 3, 1, 2, 4)                 # (B,qc,Hkv,G,Dh)
+
+    outs = lax.map(lambda args: q_block(*args),
+                   (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, Dh)
+    return out.astype(q.dtype)
+
+
+def attention(params, x, cfg: TransformerConfig, positions, kv_cache=None,
+              cache_pos=None):
+    """Self-attention. Train/prefill when kv_cache is None; decode otherwise.
+
+    Returns (out, new_kv) where new_kv is (k, v) for cache construction.
+    """
+    B, S, d = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cdt = cfg.compute_dtype
+    q = (x @ params["wq"].astype(cdt)).reshape(B, S, H, Dh)
+    k = (x @ params["wk"].astype(cdt)).reshape(B, S, Hkv, Dh)
+    v = (x @ params["wv"].astype(cdt)).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"].astype(cdt), cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"].astype(cdt), cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, None, None)
+
+    if kv_cache is None:
+        out = blockwise_attention(q, k, v, causal=True,
+                                  q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        new_kv = (k, v)
+    else:
+        ck, cv = kv_cache                                   # (B, T, Hkv, Dh)
+        ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, 1)
+        cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, 1)
+        T = ck.shape[1]
+        G = H // Hkv
+        qg = q.reshape(B, S, Hkv, G, Dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                       ck.astype(jnp.float32)) * (Dh ** -0.5)
+        kv_idx = jnp.arange(T)
+        # causal within the new tokens + all previous cache entries
+        qpos = cache_pos + jnp.arange(S)
+        mask = kv_idx[None, :] <= qpos[:, None]             # (S, T)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, cv.astype(jnp.float32))
+        out = out.reshape(B, S, H, Dh).astype(cdt)
+        new_kv = (ck, cv)
+
+    out = constrain(out, "batch", None, "model", None)
+    y = out.reshape(B, S, H * Dh) @ params["wo"].astype(cdt)
+    return y, new_kv
+
+
+def dense_mlp(params, x, cfg: TransformerConfig):
+    cdt = cfg.compute_dtype
+    g = x @ params["w_gate"].astype(cdt)
+    u = x @ params["w_up"].astype(cdt)
+    g = constrain(g, "batch", None, "model")
+    u = constrain(u, "batch", None, "model")
+    return (jax.nn.silu(g) * u) @ params["w_down"].astype(cdt)
+
+
+def moe_mlp(params, x, cfg: TransformerConfig):
+    """Sort-based capacity MoE dispatch (GShard-style, gather/scatter instead
+    of one-hot einsum). Expert dim sharded over `model` (EP) — XLA inserts
+    the token all-to-all, the PAL interval-exchange pattern.
+
+    Long sequences are processed in sequence chunks (MoE is pointwise over
+    tokens, so chunking is exact) to bound the dispatch working set.
+
+    x: (B, S, d). Returns (out, aux_loss).
+    """
+    mo = cfg.moe
+    B, S, d = x.shape
+    s_chunk = 2048
+    if S > s_chunk and S % s_chunk == 0:
+        nc = S // s_chunk
+        xc = constrain(x.reshape(B, nc, s_chunk, d).swapaxes(0, 1),
+                       None, "batch", None, None)
+
+        def body(_, xcc):
+            o, a = _moe_core(params, xcc, cfg)
+            return None, (o, a)
+
+        _, (outs, auxes) = jax.lax.scan(jax.checkpoint(body), None, xc)
+        out = constrain(outs, None, "batch", None, None)
+        out = out.swapaxes(0, 1).reshape(B, S, d)
+        return out, auxes.mean()
+    return _moe_core(params, x, cfg)
+
+
+def _moe_core(params, x, cfg: TransformerConfig):
+    """Local-capacity dispatch (§Perf H2, beyond-paper): tokens are grouped
+    by DP shard; routing, the dispatch gather, and the combine scatter are
+    all GROUP-LOCAL (zero dispatch collectives — only the expert einsum is
+    sharded over `model`). Per-group capacity approximates global capacity
+    (standard local-dispatch MoE; with one group it is exactly GShard)."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    t = B * S
+    E, K = mo.n_experts, mo.top_k
+    cdt = cfg.compute_dtype
+
+    from ..sharding import current_rules
+    mesh = current_rules().mesh
+    dp = 1
+    if mesh is not None:
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                dp *= mesh.shape[ax]
+    if B % dp != 0:
+        dp = 1
+    tg = t // dp
+    cap = int(mo.capacity_factor * tg * K / E + 0.5)
+    cap = max(8, -(-cap // 8) * 8)
+    xt = constrain(x.reshape(dp, tg, d), "batch", None, None)
+
+    def route_group(xg):
+        """xg: (tg, d) -> (ein (E, cap, d), tfs, gfs, me, ce)."""
+        logits = (xg.astype(mo.router_dtype)
+                  @ params["router"].astype(mo.router_dtype))
+        probs = jax.nn.softmax(logits, axis=-1)             # (tg, E)
+        gates, idx = lax.top_k(probs, K)                    # (tg, K)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        me = probs.mean(axis=0)
+        ce = jnp.zeros(E, probs.dtype).at[idx.reshape(-1)].add(1.0) / (tg * K)
+
+        expert_of = idx.reshape(-1)                         # (tg*K,)
+        order = jnp.argsort(expert_of)                      # stable
+        sorted_e = expert_of[order]
+        seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+        pos_in_e = jnp.arange(tg * K) - seg_start[sorted_e]
+        ok = pos_in_e < cap
+        slot = jnp.where(ok, sorted_e * cap + pos_in_e, E * cap)
+        tok = order // K
+
+        # gather-based dispatch: invert slot->token with a cheap int scatter
+        # (empty slots -> row 0 with gate 0)
+        token_for_slot = jnp.zeros((E * cap + 1,), jnp.int32)
+        token_for_slot = token_for_slot.at[slot].set(tok.astype(jnp.int32))
+        gate_for_slot = jnp.zeros((E * cap + 1,), cdt)
+        gate_for_slot = gate_for_slot.at[slot].set(
+            (gates.reshape(-1)[order] * ok).astype(cdt))
+        tfs = token_for_slot[: E * cap]
+        gfs = gate_for_slot[: E * cap]
+        ein = xg.astype(cdt)[tfs].reshape(E, cap, d)
+        return ein, tfs, gfs, me, ce
+
+    ein, tfs, gfs, me, ce = jax.vmap(route_group)(xt)
+    aux = mo.aux_coef * E * jnp.sum(me.mean(0) * ce.mean(0))
+    exp_ax = "experts" if mo.ep_mode == "expert" else None
+    ein = constrain(ein, "batch", exp_ax, None, None)       # (dp, E, cap, d)
+
+    g = jnp.einsum("gecd,edf->gecf", ein, params["w_gate"].astype(cdt))
+    u = jnp.einsum("gecd,edf->gecf", ein, params["w_up"].astype(cdt))
+    if mo.ep_mode == "ffn":
+        g = constrain(g, "batch", None, None, "model")
+        u = constrain(u, "batch", None, None, "model")
+    h = jax.nn.silu(g) * u
+    eout = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(cdt))
+    eout = constrain(eout, "batch", exp_ax, None, None)
+
+    # combine: group-local weighted scatter-add back to token rows
+    weighted = eout.reshape(dp, E * cap, d) * gfs[..., None]
+    out = jax.vmap(lambda w, i: jax.ops.segment_sum(w, i, num_segments=tg))(
+        weighted, tfs)
+    out = constrain(out, "batch", None, None)
+    return out.reshape(B, S, d), aux
+
+
+def layer_fn(params, x, cfg: TransformerConfig, positions, kv_cache=None,
+             cache_pos=None):
+    cdt = cfg.compute_dtype
+    h = rms_norm(x, params["ln1"].astype(cdt), cfg.norm_eps)
+    a, new_kv = attention(params["attn"], h, cfg, positions, kv_cache, cache_pos)
+    x = x + a
+    h = rms_norm(x, params["ln2"].astype(cdt), cfg.norm_eps)
+    if cfg.moe is None:
+        m = dense_mlp(params["mlp"], h, cfg)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        m, aux = moe_mlp(params["mlp"], h, cfg)
+    x = x + m
+    x = constrain(x, "batch", None, None)
+    return x, new_kv, aux
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def _layer_shapes(cfg: TransformerConfig) -> Dict[str, Any]:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    attn = {
+        "wq": (d, H * Dh), "wk": (d, Hkv * Dh), "wv": (d, Hkv * Dh),
+        "wo": (H * Dh, d),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = (Dh,)
+        attn["k_norm"] = (Dh,)
+    if cfg.moe is None:
+        mlp = {"w_gate": (d, cfg.d_ff), "w_up": (d, cfg.d_ff),
+               "w_down": (cfg.d_ff, d)}
+    else:
+        E, f = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        mlp = {"router": (d, E), "w_gate": (E, d, f), "w_up": (E, d, f),
+               "w_down": (E, f, d)}
+    return {"attn": attn, "mlp": mlp, "ln1": (d,), "ln2": (d,)}
+
+
+def init_params(key, cfg: TransformerConfig):
+    """Stacked-layer params; eval_shape-friendly."""
+    d = cfg.d_model
+    shapes = _layer_shapes(cfg)
+
+    def init_tree(key, tree, stack: Optional[int]):
+        leaves, treedef = jax.tree.flatten(
+            tree, is_leaf=lambda x: isinstance(x, tuple))
+        keys = jax.random.split(key, len(leaves))
+        out = []
+        for k, shp in zip(keys, leaves):
+            full = (stack, *shp) if stack else shp
+            if len(shp) == 1:  # norm scales
+                out.append(jnp.ones(full, cfg.param_dtype))
+            else:
+                fan_in = shp[-2] if len(shp) >= 2 else d
+                out.append(jax.random.normal(k, full, cfg.param_dtype)
+                           * (fan_in ** -0.5))
+        return jax.tree.unflatten(treedef, out)
+
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": jax.random.normal(k1, (cfg.padded_vocab, d), cfg.param_dtype) * 0.02,
+        "layers": init_tree(k2, shapes, cfg.n_layers),
+        "final_norm": jnp.ones((d,), cfg.param_dtype),
+        "lm_head": jax.random.normal(k3, (cfg.padded_vocab, d), cfg.param_dtype)
+        * (d ** -0.5),
+    }
+
+
+def param_logical_axes(cfg: TransformerConfig):
+    """Pytree of logical-axis tuples mirroring init_params' structure."""
+    attn = {
+        "wq": ("fsdp", "model"), "wk": ("fsdp", "model"), "wv": ("fsdp", "model"),
+        "wo": ("model", "fsdp"),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = (None,)
+        attn["k_norm"] = (None,)
+    if cfg.moe is None:
+        mlp = {"w_gate": ("fsdp", "model"), "w_up": ("fsdp", "model"),
+               "w_down": ("model", "fsdp")}
+    elif cfg.moe.ep_mode == "ffn":
+        mlp = {"router": ("fsdp", None), "w_gate": (None, "fsdp", "model"),
+               "w_up": (None, "fsdp", "model"),
+               "w_down": (None, "model", "fsdp")}
+    else:
+        mlp = {"router": ("fsdp", None), "w_gate": ("experts", "fsdp", None),
+               "w_up": ("experts", "fsdp", None),
+               "w_down": ("experts", None, "fsdp")}
+    layer = {"attn": attn, "mlp": mlp, "ln1": (None,), "ln2": (None,)}
+    # stacked layer dim is unsharded (leading axis of every layer leaf)
+    layer = jax.tree.map(lambda ax: (None, *ax), layer,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": ("model", "fsdp"),
+        "layers": layer,
+        "final_norm": (None,),
+        "lm_head": ("model", "fsdp"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / decode
+# ---------------------------------------------------------------------------
+def _remat(fn, cfg: TransformerConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+
+
+def forward(params, tokens, cfg: TransformerConfig):
+    """tokens: (B, S) -> logits (B, S, vocab) in compute dtype."""
+    B, S = tokens.shape
+    cdt = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        x, _, aux = layer_fn(lp, x, cfg, positions)
+        return x, aux
+
+    x, auxes = lax.scan(_remat(body, cfg), x, params["layers"])
+    x = rms_norm(x, params["final_norm"].astype(cdt), cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(cdt))
+    logits = constrain(logits, "batch", None, "model")
+    return logits, auxes.sum()
+
+
+def loss_fn(params, batch, cfg: TransformerConfig):
+    """Mean next-token cross-entropy (+ MoE aux). batch: tokens, labels."""
+    logits, aux = forward(params, batch["tokens"], cfg)
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:      # mask padded vocab rows
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    return ce + aux
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, tokens, cfg: TransformerConfig, max_seq: int,
+            cache_dtype=jnp.bfloat16):
+    """Run the prompt, return (logits_last, cache)."""
+    B, S = tokens.shape
+    cdt = cfg.compute_dtype
+    cache = init_cache(cfg, B, max_seq, dtype=cache_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        x, kv, _ = layer_fn(lp, x, cfg, positions)
+        return x, kv
+
+    x, (ks, vs) = lax.scan(_remat(body, cfg), x, params["layers"])
+    cache["k"] = lax.dynamic_update_slice_in_dim(
+        cache["k"], ks.astype(cache["k"].dtype), 0, 2)
+    cache["v"] = lax.dynamic_update_slice_in_dim(
+        cache["v"], vs.astype(cache["v"].dtype), 0, 2)
+    x = rms_norm(x, params["final_norm"].astype(cdt), cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"].astype(cdt))
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: TransformerConfig):
+    """One decode step. tokens: (B, 1) int32; pos: () int32 cache position.
+    Returns (logits (B, vocab), new_cache)."""
+    B, S = tokens.shape
+    cdt = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    positions = jnp.broadcast_to(pos + jnp.arange(S), (B, S))
+
+    def body(x, layer):
+        lp, kv = layer
+        x, new_kv, _ = layer_fn(lp, x, cfg, positions, kv_cache=kv, cache_pos=pos)
+        return x, new_kv
+
+    x, (ks, vs) = lax.scan(body, x, (params["layers"], (cache["k"], cache["v"])))
+    x = rms_norm(x, params["final_norm"].astype(cdt), cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"].astype(cdt))
+    logits = constrain(logits, "batch", "model")
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,4 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update,
+                    clip_by_global_norm, cosine_schedule, global_norm,
+                    linear_warmup_cosine)
+from .compression import compressed_psum_tree, ef_compress, ef_decompress

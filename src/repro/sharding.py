@@ -1,0 +1,108 @@
+"""Logical-axis sharding rules (MaxText-style, dependency-free).
+
+Models annotate params/activations with *logical* axis names; a ShardingRules
+instance maps them to mesh axes. Rules silently drop mesh axes that don't
+exist on the current mesh (so the same model code runs on the single-pod
+(data, model) mesh, the multi-pod (pod, data, model) mesh, and the 1-CPU test
+device with no mesh at all).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "use_rules", "current_rules",
+           "constrain", "spec_for", "named_sharding"]
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes, or None)."""
+
+    rules: Dict[str, Axis]
+    mesh: Optional[Mesh] = None
+
+    def _resolve(self, logical: Optional[str]) -> Axis:
+        if logical is None:
+            return None
+        ax = self.rules.get(logical)
+        if ax is None or self.mesh is None:
+            return None
+        names = set(self.mesh.axis_names)
+        if isinstance(ax, str):
+            return ax if ax in names else None
+        ax = tuple(a for a in ax if a in names)
+        return ax if ax else None
+
+    def spec(self, *logical_axes: Optional[str]) -> P:
+        return P(*[self._resolve(a) for a in logical_axes])
+
+    def sharding(self, *logical_axes: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical_axes))
+
+    def constrain(self, x, *logical_axes: Optional[str]):
+        """with_sharding_constraint if a mesh is active; identity otherwise."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*logical_axes)))
+
+
+# Logical axes used across the framework:
+#   batch      token/sample batch             -> pod+data (pure DP)
+#   fsdp       param dim sharded FSDP-style   -> data
+#   model      tensor-parallel dim            -> model (heads / mlp / vocab)
+#   experts    MoE expert dim                 -> model (EP)
+#   nodes      graph vertex-interval dim      -> pod+data+model (PAL intervals)
+#   edges      graph edge dim                 -> pod+data+model (PAL partitions)
+#   table      embedding-table row dim        -> model (PAL-hashed rows)
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "model": "model",
+    "experts": "model",
+    "nodes": ("pod", "data", "model"),
+    "edges": ("pod", "data", "model"),
+    "table": "model",
+    "seq": None,
+}
+
+_state = threading.local()
+
+
+def current_rules() -> ShardingRules:
+    r = getattr(_state, "rules", None)
+    if r is None:
+        r = ShardingRules(rules=dict(DEFAULT_RULES), mesh=None)
+    return r
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    return current_rules().constrain(x, *logical_axes)
+
+
+def spec_for(*logical_axes: Optional[str]) -> P:
+    return current_rules().spec(*logical_axes)
+
+
+def named_sharding(*logical_axes: Optional[str]):
+    return current_rules().sharding(*logical_axes)

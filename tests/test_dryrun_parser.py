@@ -1,0 +1,73 @@
+"""Unit tests for the HLO collective parser (roofline input): shape-byte
+accounting and while-loop trip-count multiplication."""
+from repro.launch.dryrun import parse_collective_bytes
+
+FLAT_HLO = """
+HloModule test
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %a = f32[128,256]{1,0} parameter(0)
+  %ag = f32[256,256]{1,0} all-gather(%a), dimensions={0}
+  %ar = bf16[128,256]{1,0} all-reduce(%a), to_apply=%add
+  ROOT %r = f32[128,256]{1,0} add(%a, %a)
+}
+"""
+
+LOOPED_HLO = """
+HloModule test
+
+%cond.1 (s: (s32[], f32[64])) -> pred[] {
+  %s = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body.2 (s: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %s = (s32[], f32[64]) parameter(0)
+  %x = f32[64]{0} get-tuple-element(%s), index=1
+  %ar = f32[64]{0} all-reduce(%x), to_apply=%add
+  ROOT %t = (s32[], f32[64]) tuple(%i2, %ar)
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %a = f32[64]{0} parameter(0)
+  %w = (s32[], f32[64]) while(%init), condition=%cond.1, body=%body.2
+  %ag = f32[128]{0} all-gather(%a), dimensions={0}
+  ROOT %r = f32[64]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_flat_collective_bytes():
+    total, by_kind, counts, n_whiles = parse_collective_bytes(FLAT_HLO)
+    assert by_kind["all-gather"] == 256 * 256 * 4
+    assert by_kind["all-reduce"] == 128 * 256 * 2   # bf16
+    assert counts == {"all-gather": 1, "all-reduce": 1}
+    assert n_whiles == 0
+    assert total == 256 * 256 * 4 + 128 * 256 * 2
+
+
+def test_while_trip_count_multiplication():
+    total, by_kind, counts, n_whiles = parse_collective_bytes(LOOPED_HLO)
+    assert n_whiles == 1
+    # the in-loop all-reduce executes 7 times
+    assert by_kind["all-reduce"] == 7 * 64 * 4
+    assert counts["all-reduce"] == 7
+    # the entry-level all-gather executes once
+    assert by_kind["all-gather"] == 128 * 4
+    assert total == 7 * 64 * 4 + 128 * 4
+
+
+def test_async_done_not_double_counted():
+    hlo = """
+ENTRY %main (a: f32[32]) -> f32[32] {
+  %a = f32[32]{0} parameter(0)
+  %s = f32[64]{0} all-gather-start(%a), dimensions={0}
+  %d = f32[64]{0} all-gather-done(%s)
+  ROOT %r = f32[32]{0} slice(%d), slice={[0:32]}
+}
+"""
+    total, by_kind, counts, _ = parse_collective_bytes(hlo)
+    assert counts.get("all-gather", 0) == 1
+    assert by_kind["all-gather"] == 64 * 4

@@ -1,0 +1,333 @@
+"""Model-layer tests: transformer (dense/MoE/decode), GNNs (incl. exact
+equivariance for EquiformerV2), BERT4Rec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import bert4rec, transformer
+from repro.models.gnn import equiformer_v2, gin, meshgraphnet, pna, wigner
+
+
+def tiny_lm_cfg(**kw):
+    base = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                vocab_size=97, q_chunk=8, kv_chunk=8,
+                compute_dtype=jnp.float32)
+    base.update(kw)
+    return transformer.TransformerConfig(**base)
+
+
+def rand_rot(key):
+    A = jax.random.normal(key, (3, 3))
+    Q, _ = jnp.linalg.qr(A)
+    return Q * jnp.sign(jnp.linalg.det(Q))
+
+
+def graph_batch(key, n=40, e=160, d_in=16, with_pos=False, n_species=8):
+    ks = jax.random.split(key, 6)
+    b = {
+        "x": jax.random.normal(ks[0], (n, d_in)),
+        "src": jax.random.randint(ks[1], (e,), 0, n),
+        "dst": jax.random.randint(ks[2], (e,), 0, n),
+        "edge_mask": jnp.ones((e,), bool).at[-5:].set(False),
+        "node_mask": jnp.ones((n,), bool),
+        "edge_attr": jax.random.normal(ks[3], (e, 8)),
+    }
+    if with_pos:
+        b["pos"] = jax.random.normal(ks[4], (n, 3))
+        b["species"] = jax.random.randint(ks[5], (n,), 0, n_species)
+    return b
+
+
+class TestTransformer:
+    def test_train_step_dense(self):
+        cfg = tiny_lm_cfg(qk_norm=True)
+        key = jax.random.PRNGKey(0)
+        p = transformer.init_params(key, cfg)
+        toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": toks}
+        loss, grads = jax.value_and_grad(transformer.loss_fn)(p, batch, cfg)
+        assert np.isfinite(float(loss))
+        leaf_sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), grads)
+        assert np.isfinite(float(jax.tree.reduce(lambda a, b: a + b, leaf_sq)))
+
+    def test_train_step_moe(self):
+        cfg = tiny_lm_cfg(moe=transformer.MoEConfig(n_experts=4, top_k=2,
+                                                    d_ff_expert=64))
+        key = jax.random.PRNGKey(1)
+        p = transformer.init_params(key, cfg)
+        toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+        loss, grads = jax.value_and_grad(transformer.loss_fn)(
+            p, {"tokens": toks, "labels": toks}, cfg)
+        assert np.isfinite(float(loss))
+        # router grads flow
+        rg = grads["layers"]["mlp"]["router"]
+        assert float(jnp.abs(rg).sum()) > 0
+
+    def test_decode_matches_forward_fp32(self):
+        cfg = tiny_lm_cfg(qk_norm=True)
+        key = jax.random.PRNGKey(2)
+        p = transformer.init_params(key, cfg)
+        toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+        full, _ = transformer.forward(p, toks, cfg)
+        lpre, cache = transformer.prefill(p, toks[:, :8], cfg, max_seq=16,
+                                          cache_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lpre), np.asarray(full[:, 7]),
+                                   rtol=1e-4, atol=1e-4)
+        pos = jnp.int32(8)
+        for i in range(8, 12):
+            lg, cache = transformer.decode_step(p, cache, toks[:, i:i + 1], pos, cfg)
+            np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, i]),
+                                       rtol=1e-4, atol=1e-4)
+            pos = pos + 1
+
+    def test_blockwise_attention_vs_direct(self):
+        key = jax.random.PRNGKey(3)
+        B, S, H, Hkv, D = 2, 32, 4, 2, 16
+        q = jax.random.normal(key, (B, S, H, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, D))
+        out = transformer.blockwise_attention(q, k, v, causal=True,
+                                              q_chunk=8, kv_chunk=8)
+        # direct reference
+        G = H // Hkv
+        qg = q.reshape(B, S, Hkv, G, D)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * D ** -0.5
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, -1)
+        ref = jnp.einsum("bhgqk,bkhd->bqhgd", p, v).reshape(B, S, H, D)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_moe_all_tokens_routed_when_capacity_ample(self):
+        cfg = tiny_lm_cfg(moe=transformer.MoEConfig(
+            n_experts=4, top_k=2, d_ff_expert=64, capacity_factor=8.0))
+        key = jax.random.PRNGKey(4)
+        p = transformer.init_params(key, cfg)
+        x = jax.random.normal(key, (2, 8, cfg.d_model))
+        # moe params are stacked over layers; take layer 0
+        lp = jax.tree.map(lambda w: w[0], p["layers"]["mlp"])
+        out, aux = transformer.moe_mlp(lp, x.astype(cfg.compute_dtype), cfg)
+        assert out.shape == x.shape
+        assert np.isfinite(np.asarray(out)).all()
+        assert float(aux) >= 0
+
+    def test_param_count_formula(self):
+        cfg = tiny_lm_cfg()
+        p = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(x.size for x in jax.tree.leaves(p))
+        assert actual == cfg.n_params
+
+    def test_logical_axes_tree_matches_params(self):
+        cfg = tiny_lm_cfg(qk_norm=True,
+                          moe=transformer.MoEConfig(4, 2, 64))
+        p = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        axes = transformer.param_logical_axes(cfg)
+        jax.tree.map(lambda arr, ax: None if len(ax) == arr.ndim else
+                     (_ for _ in ()).throw(AssertionError(f"{arr.shape} vs {ax}")),
+                     p, axes, is_leaf=lambda x: isinstance(x, tuple) and all(
+                         isinstance(a, (str, type(None))) for a in x))
+
+
+class TestGNNs:
+    def test_pna_forward(self):
+        cfg = pna.PNAConfig(n_layers=2, d_hidden=24, d_in=16, n_classes=5)
+        key = jax.random.PRNGKey(0)
+        p = pna.init_params(key, cfg)
+        out = pna.forward(p, graph_batch(key), cfg)
+        assert out.shape == (40, 5)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_pna_grad(self):
+        cfg = pna.PNAConfig(n_layers=2, d_hidden=24, d_in=16, n_classes=5)
+        key = jax.random.PRNGKey(0)
+        p = pna.init_params(key, cfg)
+        b = graph_batch(key)
+
+        def loss(p):
+            return (pna.forward(p, b, cfg) ** 2).mean()
+        g = jax.grad(loss)(p)
+        assert np.isfinite(float(jax.tree.reduce(
+            lambda a, x: a + jnp.abs(x).sum(), g, 0.0)))
+
+    def test_gin_forward_graph_readout(self):
+        cfg = gin.GINConfig(n_layers=3, d_hidden=16, d_in=16, n_classes=4)
+        key = jax.random.PRNGKey(1)
+        p = gin.init_params(key, cfg)
+        out = gin.forward(p, graph_batch(key), cfg)
+        assert out.shape == (1, 4)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_gin_sum_aggregation_counts_multiplicity(self):
+        """GIN must distinguish multisets: double edges change the output."""
+        cfg = gin.GINConfig(n_layers=1, d_hidden=8, d_in=4, n_classes=2,
+                            readout="node")
+        key = jax.random.PRNGKey(2)
+        p = gin.init_params(key, cfg)
+        b1 = {
+            "x": jnp.ones((3, 4)), "src": jnp.asarray([0, 1]),
+            "dst": jnp.asarray([2, 2]), "edge_mask": jnp.ones(2, bool),
+            "node_mask": jnp.ones(3, bool),
+        }
+        b2 = dict(b1, src=jnp.asarray([0, 0]), dst=jnp.asarray([2, 2]))
+        o1 = gin.forward(p, b1, cfg)
+        o2 = gin.forward(p, b2, cfg)
+        # same multiset here (features equal) -> equal; now make features differ
+        b1d = dict(b1, x=b1["x"].at[1].set(2.0))
+        b2d = dict(b2, x=b1["x"].at[1].set(2.0))
+        o1d = gin.forward(p, b1d, cfg)
+        o2d = gin.forward(p, b2d, cfg)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
+        assert np.abs(np.asarray(o1d[2]) - np.asarray(o2d[2])).max() > 1e-6
+
+    def test_meshgraphnet_forward(self):
+        cfg = meshgraphnet.MeshGraphNetConfig(n_layers=3, d_hidden=32,
+                                              d_node_in=16, d_edge_in=8, d_out=3)
+        key = jax.random.PRNGKey(3)
+        p = meshgraphnet.init_params(key, cfg)
+        out = meshgraphnet.forward(p, graph_batch(key), cfg)
+        assert out.shape == (40, 3)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_equiformer_forward(self):
+        cfg = equiformer_v2.EquiformerV2Config(n_layers=2, d_hidden=16,
+                                               l_max=3, m_max=2, n_heads=4)
+        key = jax.random.PRNGKey(4)
+        p = equiformer_v2.init_params(key, cfg)
+        b = graph_batch(key, n=12, e=40, with_pos=True)
+        out = equiformer_v2.forward(p, b, cfg)
+        assert out.shape == (12, 1)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_equiformer_rotation_invariance(self):
+        """The invariant output must be exactly invariant under global
+        rotation of the input coordinates — the core eSCN property."""
+        cfg = equiformer_v2.EquiformerV2Config(n_layers=2, d_hidden=16,
+                                               l_max=4, m_max=2, n_heads=4)
+        key = jax.random.PRNGKey(5)
+        p = equiformer_v2.init_params(key, cfg)
+        b = graph_batch(key, n=10, e=30, with_pos=True)
+        out1 = equiformer_v2.forward(p, b, cfg)
+        R = rand_rot(jax.random.PRNGKey(77))
+        b_rot = dict(b, pos=b["pos"] @ R.T)
+        out2 = equiformer_v2.forward(p, b_rot, cfg)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_equiformer_translation_invariance(self):
+        cfg = equiformer_v2.EquiformerV2Config(n_layers=1, d_hidden=16,
+                                               l_max=2, m_max=1, n_heads=4)
+        key = jax.random.PRNGKey(6)
+        p = equiformer_v2.init_params(key, cfg)
+        b = graph_batch(key, n=10, e=30, with_pos=True)
+        out1 = equiformer_v2.forward(p, b, cfg)
+        b_t = dict(b, pos=b["pos"] + jnp.asarray([1.0, -2.0, 0.5]))
+        out2 = equiformer_v2.forward(p, b_t, cfg)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestWigner:
+    @pytest.mark.parametrize("l_max", [2, 4, 6])
+    def test_homomorphism_and_orthogonality(self, l_max):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        R1, R2 = rand_rot(k1), rand_rot(k2)
+        M1 = wigner.wigner_rotations(R1, l_max)
+        M2 = wigner.wigner_rotations(R2, l_max)
+        M12 = wigner.wigner_rotations(R1 @ R2, l_max)
+        for l in range(l_max + 1):
+            np.testing.assert_allclose(np.asarray(M1[l] @ M2[l]),
+                                       np.asarray(M12[l]), atol=2e-5)
+            np.testing.assert_allclose(np.asarray(M1[l] @ M1[l].T),
+                                       np.eye(2 * l + 1), atol=2e-5)
+
+    def test_l2_against_explicit_sh(self):
+        R = rand_rot(jax.random.PRNGKey(9))
+        M = wigner.wigner_rotations(R, 2)[2]
+
+        def Y2(v):
+            x, y, z = v
+            s15 = jnp.sqrt(15.0)
+            return jnp.stack([s15 * x * y, s15 * y * z,
+                              jnp.sqrt(5.0) / 2 * (3 * z * z - 1),
+                              s15 * x * z, s15 / 2 * (x * x - y * y)])
+        v = jax.random.normal(jax.random.PRNGKey(10), (3,))
+        v = v / jnp.linalg.norm(v)
+        np.testing.assert_allclose(np.asarray(Y2(R @ v)),
+                                   np.asarray(M @ Y2(v)), atol=1e-5)
+
+    def test_rotation_to_z(self):
+        d = jax.random.normal(jax.random.PRNGKey(11), (20, 3))
+        R = wigner.rotation_to_z(d)
+        dn = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
+        out = jnp.einsum("eij,ej->ei", R, dn)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.tile([0.0, 0.0, 1.0], (20, 1)), atol=1e-5)
+        # determinant +1 (proper rotations)
+        np.testing.assert_allclose(np.asarray(jnp.linalg.det(R)), 1.0, atol=1e-5)
+
+
+class TestBert4Rec:
+    def test_masked_lm(self):
+        cfg = bert4rec.Bert4RecConfig(n_items=50, embed_dim=16, n_blocks=2,
+                                      n_heads=2, seq_len=12)
+        key = jax.random.PRNGKey(0)
+        p = bert4rec.init_params(key, cfg)
+        seq = jax.random.randint(key, (4, 12), 1, cfg.n_items + 1)
+        mpos = jnp.full((4, 2), 5, jnp.int32).at[:, 1].set(7)
+        labels = jnp.stack([seq[:, 5], seq[:, 7]], axis=1)
+        seq = seq.at[:, 5].set(cfg.vocab - 1).at[:, 7].set(cfg.vocab - 1)
+        batch = {"item_seq": seq, "masked_positions": mpos, "labels": labels}
+        loss, g = jax.value_and_grad(bert4rec.masked_lm_loss)(p, batch, cfg)
+        assert np.isfinite(float(loss))
+        assert float(jnp.abs(g["item_embed"]).sum()) > 0
+
+    def test_masked_lm_chunked_logsumexp_exact(self):
+        """Streaming CE must equal the dense softmax CE."""
+        cfg = bert4rec.Bert4RecConfig(n_items=50, embed_dim=16, n_blocks=1,
+                                      n_heads=2, seq_len=12)
+        key = jax.random.PRNGKey(3)
+        p = bert4rec.init_params(key, cfg)
+        seq = jax.random.randint(key, (4, 12), 1, cfg.n_items + 1)
+        mpos = jnp.full((4, 1), 5, jnp.int32)
+        labels = seq[:, 5:6]
+        seq = seq.at[:, 5].set(cfg.vocab - 1)
+        batch = {"item_seq": seq, "masked_positions": mpos, "labels": labels}
+        l1 = bert4rec.masked_lm_loss(p, batch, cfg, vocab_chunk=7)
+        # dense reference
+        reps = bert4rec.encode(p, seq, cfg)
+        logits = reps[:, 5] @ p["item_embed"].T + p["out_bias"]
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab,
+                           logits, -jnp.inf)
+        logz = jax.scipy.special.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, labels, axis=-1)[:, 0]
+        ref = (logz - gold).mean()
+        np.testing.assert_allclose(float(l1), float(ref), rtol=1e-5)
+
+    def test_scoring_consistency(self):
+        cfg = bert4rec.Bert4RecConfig(n_items=50, embed_dim=16, n_blocks=1,
+                                      n_heads=2, seq_len=8)
+        key = jax.random.PRNGKey(1)
+        p = bert4rec.init_params(key, cfg)
+        seq = jax.random.randint(key, (2, 8), 1, cfg.n_items + 1)
+        all_scores = bert4rec.score_all_items(p, seq, cfg)
+        cand = jnp.asarray([3, 17, 42])
+        cand_scores = bert4rec.score_candidates(p, seq, cand, cfg)
+        np.testing.assert_allclose(np.asarray(cand_scores),
+                                   np.asarray(all_scores[:, cand]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_padding_masked_out(self):
+        cfg = bert4rec.Bert4RecConfig(n_items=50, embed_dim=16, n_blocks=1,
+                                      n_heads=2, seq_len=8)
+        p = bert4rec.init_params(jax.random.PRNGKey(2), cfg)
+        seq = jnp.asarray([[1, 2, 3, 4, 0, 0, 0, 5]])
+        seq2 = jnp.asarray([[1, 2, 3, 4, 9, 9, 9, 5]])  # different pads->items
+        r1 = bert4rec.encode(p, seq, cfg)
+        r2 = bert4rec.encode(p, seq2, cfg)
+        # non-pad positions must ignore pad slots in seq1
+        assert np.abs(np.asarray(r1[0, 0]) - np.asarray(r2[0, 0])).max() > 0
+        seq3 = jnp.asarray([[1, 2, 3, 4, 0, 0, 0, 5]])
+        r3 = bert4rec.encode(p, seq3, cfg)
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r3))
