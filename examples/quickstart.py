@@ -27,11 +27,14 @@ v = int(src[0])
 print(f"out-neighbors of {v}: {len(db.out_neighbors(v))}")
 print(f"in-neighbors  of {v}: {len(db.in_neighbors(v))}")
 
-# 4. graph queries
+# 4. graph queries — and the batched set-at-a-time engine (DESIGN.md §5)
 fof = friends_of_friends(db, v)
 print(f"friends-of-friends of {v}: {fof.size}")
 d = shortest_path(db, int(src[1]), int(dst[2]), max_depth=5)
 print(f"shortest path: {d}")
+frontier = np.unique(src[:64])
+vals, offsets = db.storage_engine().out_neighbors_batch(frontier)
+print(f"one batched hop from {frontier.size} vertices: {vals.size} edges")
 
 # 5. updates and deletes (tombstones, purged at merges — paper §5.3)
 db.update_edge_column(int(src[0]), int(dst[0]), "weight", 9.9)
@@ -41,4 +44,16 @@ db.delete_edge(int(src[1]), int(dst[1]))
 ranks = pagerank_host(db, n_iters=5)
 top = np.argsort(ranks)[-3:]
 print(f"top-3 pagerank (internal ids): {top}, scores {ranks[top].round(3)}")
+
+# 7. device analytics on the LIVE store: snapshot() compiles all levels +
+#    in-memory buffers into immutable jnp arrays (no flush, read-only)
+from repro.core import pagerank_device
+db.insert_edges(rng.integers(0, 100_000, 2_000),      # fresh arrivals since
+                rng.integers(0, 100_000, 2_000),      # the host sweep —
+                columns={"weight": rng.random(2_000,  # these stay buffered
+                                              dtype=np.float32)})
+dg = db.snapshot()
+r = pagerank_device(dg, n_iters=3, mode="dense_gather")
+print(f"device pagerank over {dg.n_edges:,} live edges "
+      f"(incl. {db.total_buffered():,} buffered): shape {tuple(r.shape)}")
 print("done.")

@@ -1,6 +1,14 @@
 """GraphChi-DB core: PAL + LSM + PSW + queries (the paper's contribution)."""
 from .pal import EdgePartition, GraphPAL, IntervalMap, build_partition
-from .lsm import EdgeBuffer, LSMStats, LSMTree
+from .lsm import BufferStaging, EdgeBuffer, LSMStats, LSMTree
+from .engine import (
+    EdgeBatch,
+    EdgeChunk,
+    LSMEngine,
+    PALEngine,
+    StorageEngine,
+    as_engine,
+)
 from .psw import (
     DeviceGraph,
     build_device_graph,
@@ -21,7 +29,9 @@ from .codec import (
 
 __all__ = [
     "EdgePartition", "GraphPAL", "IntervalMap", "build_partition",
-    "EdgeBuffer", "LSMStats", "LSMTree",
+    "BufferStaging", "EdgeBuffer", "LSMStats", "LSMTree",
+    "EdgeBatch", "EdgeChunk", "LSMEngine", "PALEngine", "StorageEngine",
+    "as_engine",
     "DeviceGraph", "build_device_graph", "edge_centric_sweep",
     "edge_centric_sweep_arrays", "pagerank_device", "pagerank_host",
     "psw_sweep_host",

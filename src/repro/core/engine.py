@@ -1,0 +1,364 @@
+"""StorageEngine — the unified, vectorized read path over PAL / LSM storage.
+
+DESIGN.md §5. The paper's promise is ONE structure serving both online
+queries and analytical computation; this module is the interface that makes
+the promise hold on both backends without the query layer knowing which one
+it is talking to.
+
+Primitives are *set-at-a-time*: a whole frontier of vertices goes in, a
+CSR-grouped result comes out. Per storage slab (an immutable edge partition
+on any LSM level, or a live in-memory edge buffer) the engine issues ONE
+vectorized `searchsorted` of the frontier against the slab's pointer-array
+(partitions) or staged sort order (buffers), expands the hit ranges without
+a Python loop, and regroups the union by query vertex. This is the paper's
+frontier-batched FoF strategy (§8.1) generalized to every traversal
+operator.
+
+Slab layout recap (why the binary searches below are correct):
+  * a partition's edge-array is (src, dst)-sorted with a sparse CSR over
+    sources (`src_vertices`/`src_ptr`) and a CSC permutation over
+    destinations (`dst_vertices`/`dst_ptr`/`dst_perm`);
+  * partitions on one level cover disjoint destination intervals, and each
+    buffer feeds exactly one top-level partition — so in-edge queries may
+    probe every slab: non-owners miss in O(log) with zero hits;
+  * tombstoned edges (`dead`) are filtered after range expansion.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "EdgeBatch",
+    "EdgeChunk",
+    "StorageEngine",
+    "PALEngine",
+    "LSMEngine",
+    "as_engine",
+]
+
+
+# ---------------------------------------------------------------------------
+# Result containers
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EdgeBatch:
+    """CSR-grouped result of a batched edge query: the edges adjacent to
+    vs[i] occupy flat positions offsets[i]:offsets[i+1]. IDs are original."""
+
+    vs: np.ndarray                  # (Q,) the queried vertices
+    offsets: np.ndarray             # (Q+1,) int64
+    src: np.ndarray                 # (T,) int64 original IDs
+    dst: np.ndarray                 # (T,) int64 original IDs
+    etype: np.ndarray               # (T,) int8
+    columns: Dict[str, np.ndarray]  # requested attribute columns, positional
+
+    def slice_of(self, i: int) -> slice:
+        return slice(int(self.offsets[i]), int(self.offsets[i + 1]))
+
+
+@dataclasses.dataclass
+class EdgeChunk:
+    """One physical slab of live edges in INTERNAL IDs — what bottom-up
+    sweeps and degree passes stream instead of branching on storage class."""
+
+    src: np.ndarray
+    dst: np.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Vectorized range machinery
+# ---------------------------------------------------------------------------
+def _expand_ranges(starts: np.ndarray, ends: np.ndarray,
+                   owners: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Concatenate [starts[k], ends[k]) ranges into one position array plus
+    the owner id repeated per element — no Python loop. The classic
+    cumsum-of-ones trick: within a run steps are +1; at each run boundary the
+    step jumps to the next range's start."""
+    counts = (ends - starts).astype(np.int64)
+    nz = counts > 0
+    if not nz.all():
+        starts, counts, owners = starts[nz], counts[nz], owners[nz]
+    if counts.size == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    cum = np.cumsum(counts)
+    steps = np.ones(int(cum[-1]), np.int64)
+    steps[0] = starts[0]
+    steps[cum[:-1]] = starts[1:] - starts[:-1] - counts[:-1] + 1
+    return np.cumsum(steps), np.repeat(owners, counts)
+
+
+def _searchsorted_ranges(keys: np.ndarray,
+                         vis: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """One binary search of the whole frontier against a slab's sorted key
+    array. Returns (hit query indices, index into keys per hit)."""
+    if keys.shape[0] == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    idx = np.searchsorted(keys, vis)
+    idx = np.minimum(idx, keys.shape[0] - 1)
+    hit = np.nonzero(keys[idx] == vis)[0]
+    return hit, idx[hit]
+
+
+# ---------------------------------------------------------------------------
+# Slab adapters: one batched lookup protocol over partitions and buffers
+# ---------------------------------------------------------------------------
+class _PartitionSlab:
+    def __init__(self, part):
+        self.part = part
+
+    def positions_batch(self, vis: np.ndarray,
+                        direction: str) -> Tuple[np.ndarray, np.ndarray]:
+        """(edge-array positions, query-owner index) of live adjacent edges."""
+        part = self.part
+        if part.n_edges == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        if direction == "out":
+            hit, ki = _searchsorted_ranges(part.src_vertices, vis)
+            pos, owner = _expand_ranges(part.src_ptr[ki], part.src_ptr[ki + 1], hit)
+        else:
+            hit, ki = _searchsorted_ranges(part.dst_vertices, vis)
+            perm_pos, owner = _expand_ranges(part.dst_ptr[ki], part.dst_ptr[ki + 1], hit)
+            pos = np.asarray(part.dst_perm[perm_pos], np.int64)
+        if part.dead is not None and pos.size:
+            live = ~part.dead[pos]
+            pos, owner = pos[live], owner[live]
+        return pos, owner
+
+    def src_at(self, pos):
+        return self.part.src[pos]
+
+    def dst_at(self, pos):
+        return self.part.dst[pos]
+
+    def etype_at(self, pos):
+        return self.part.etype[pos]
+
+    def column_at(self, name, pos, dtype):
+        col = self.part.columns.get(name)
+        if col is None:
+            return np.zeros(pos.shape[0], dtype)
+        return col[pos]
+
+    def column_names(self):
+        return self.part.columns.keys()
+
+    def column_dtype(self, name):
+        col = self.part.columns.get(name)
+        return None if col is None else col.dtype
+
+    def chunk(self) -> Optional[EdgeChunk]:
+        part = self.part
+        if part.n_edges == 0:
+            return None
+        if part.dead is None or not part.dead.any():
+            return EdgeChunk(part.src, part.dst)
+        live = ~part.dead
+        return EdgeChunk(part.src[live], part.dst[live])
+
+
+class _BufferSlab:
+    def __init__(self, buf):
+        self.buf = buf
+
+    def positions_batch(self, vis: np.ndarray,
+                        direction: str) -> Tuple[np.ndarray, np.ndarray]:
+        st = self.buf.staging()
+        order, keys = (st.src_sorted_view() if direction == "out"
+                       else st.dst_sorted_view())
+        lo = np.searchsorted(keys, vis, side="left")
+        hi = np.searchsorted(keys, vis, side="right")
+        spos, owner = _expand_ranges(lo, hi, np.arange(vis.shape[0], dtype=np.int64))
+        return order[spos], owner
+
+    def src_at(self, pos):
+        return self.buf.staging().src[pos]
+
+    def dst_at(self, pos):
+        return self.buf.staging().dst[pos]
+
+    def etype_at(self, pos):
+        return self.buf.staging().etype[pos]
+
+    def column_at(self, name, pos, dtype):
+        col = self.buf.staging().columns.get(name)
+        if col is None:
+            return np.zeros(pos.shape[0], dtype)
+        return col[pos]
+
+    def column_names(self):
+        return self.buf.staging().columns.keys()
+
+    def column_dtype(self, name):
+        col = self.buf.staging().columns.get(name)
+        return None if col is None else col.dtype
+
+    def chunk(self) -> Optional[EdgeChunk]:
+        if len(self.buf) == 0:
+            return None
+        st = self.buf.staging()
+        return EdgeChunk(st.src, st.dst)
+
+
+def _group(chunks: List[np.ndarray], owners: List[np.ndarray],
+           n_queries: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Regroup concatenated per-slab hits by query vertex. Returns
+    (stable sort order over the concatenation, owner per element, offsets)."""
+    offsets = np.zeros(n_queries + 1, np.int64)
+    if not chunks:
+        return np.empty(0, np.int64), np.empty(0, np.int64), offsets
+    owner = np.concatenate(owners)
+    order = np.argsort(owner, kind="stable")
+    counts = np.bincount(owner, minlength=n_queries)
+    np.cumsum(counts, out=offsets[1:])
+    return order, owner, offsets
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+class StorageEngine:
+    """Vectorized set-at-a-time read interface over a graph store.
+
+    Subclasses provide `_slabs()`; everything else is shared. All public
+    methods take and return ORIGINAL vertex IDs (the reversible hash is
+    applied at the boundary, paper §7.2).
+    """
+
+    def __init__(self, graph):
+        self.graph = graph
+
+    @property
+    def intervals(self):
+        return self.graph.intervals
+
+    @property
+    def n_internal_vertices(self) -> int:
+        return self.graph.intervals.max_vertices
+
+    def _slabs(self) -> Iterator:
+        raise NotImplementedError
+
+    # -- batched traversal primitives ----------------------------------------
+    def out_neighbors_batch(self, vs: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+        """Out-neighbors of every v in vs. Returns (values, offsets):
+        values[offsets[i]:offsets[i+1]] are vs[i]'s out-neighbors."""
+        return self._neighbors_batch(vs, "out")
+
+    def in_neighbors_batch(self, vs: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+        return self._neighbors_batch(vs, "in")
+
+    def _neighbors_batch(self, vs, direction: str):
+        vs = np.asarray(vs, dtype=np.int64).ravel()
+        iv = self.intervals
+        vis = np.asarray(iv.to_internal(vs))
+        vals, owners = [], []
+        for slab in self._slabs():
+            pos, owner = slab.positions_batch(vis, direction)
+            if pos.size:
+                vals.append(slab.dst_at(pos) if direction == "out"
+                            else slab.src_at(pos))
+                owners.append(owner)
+        order, _, offsets = _group(vals, owners, vs.shape[0])
+        if order.size == 0:
+            return np.empty(0, np.int64), offsets
+        flat = np.concatenate(vals)[order]
+        return np.asarray(iv.to_original(flat), np.int64), offsets
+
+    def edge_columns_batch(self, vs: Sequence[int],
+                           names: Optional[Sequence[str]] = None,
+                           direction: str = "out") -> EdgeBatch:
+        """Adjacent edges of every v in vs with their attribute columns —
+        the set-at-a-time analogue of the paper's positional column reads
+        (§4.3), grouped CSR-style by query vertex."""
+        vs = np.asarray(vs, dtype=np.int64).ravel()
+        iv = self.intervals
+        vis = np.asarray(iv.to_internal(vs))
+        slabs = list(self._slabs())
+        # declared dtypes (LSM) or whatever columns the slabs carry (PAL)
+        dtypes = dict(getattr(self.graph, "column_dtypes", {}) or {})
+        if names is None:
+            names = list(dtypes) or sorted(
+                {k for s in slabs for k in s.column_names()})
+
+        def dtype_of(name):
+            if name in dtypes:
+                return dtypes[name]
+            for s in slabs:
+                dt = s.column_dtype(name)
+                if dt is not None:
+                    return dt
+            return np.float64
+
+        hits = []  # (slab, pos, owner)
+        for slab in slabs:
+            pos, owner = slab.positions_batch(vis, direction)
+            if pos.size:
+                hits.append((slab, pos, owner))
+        order, _, offsets = _group([h[1] for h in hits],
+                                   [h[2] for h in hits], vs.shape[0])
+        if order.size == 0:
+            return EdgeBatch(vs, offsets, np.empty(0, np.int64),
+                             np.empty(0, np.int64), np.empty(0, np.int8),
+                             {k: np.empty(0, dtype_of(k)) for k in names})
+        src = np.concatenate([s.src_at(p) for s, p, _ in hits])[order]
+        dst = np.concatenate([s.dst_at(p) for s, p, _ in hits])[order]
+        etype = np.concatenate([s.etype_at(p) for s, p, _ in hits])[order]
+        columns = {}
+        for k in names:
+            dt = dtype_of(k)
+            columns[k] = np.concatenate(
+                [s.column_at(k, p, dt) for s, p, _ in hits])[order]
+        return EdgeBatch(
+            vs, offsets,
+            np.asarray(iv.to_original(src), np.int64),
+            np.asarray(iv.to_original(dst), np.int64),
+            etype, columns,
+        )
+
+    # -- whole-store streaming (bottom-up sweeps, degree passes) -------------
+    def edge_chunks(self) -> Iterator[EdgeChunk]:
+        """Stream every live edge once, slab by slab, in internal IDs."""
+        for slab in self._slabs():
+            chunk = slab.chunk()
+            if chunk is not None and chunk.src.shape[0]:
+                yield chunk
+
+    def to_coo(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self.graph.to_coo()
+
+
+class PALEngine(StorageEngine):
+    """StorageEngine over a bulk-built GraphPAL (one slab per partition)."""
+
+    def _slabs(self):
+        for part in self.graph.partitions:
+            yield _PartitionSlab(part)
+
+
+class LSMEngine(StorageEngine):
+    """StorageEngine over a live LSMTree: every partition of every level,
+    plus the in-memory edge buffers (newest data, staged sorted views)."""
+
+    def _slabs(self):
+        for level in self.graph.levels:
+            for part in level:
+                yield _PartitionSlab(part)
+        for buf in self.graph.buffers:
+            if len(buf):
+                yield _BufferSlab(buf)
+
+
+def as_engine(g) -> StorageEngine:
+    """Coerce a graph store (or an engine) to its StorageEngine — the only
+    dispatch point; the query layer never inspects storage classes."""
+    if isinstance(g, StorageEngine):
+        return g
+    maker = getattr(g, "storage_engine", None)
+    if maker is None:
+        raise TypeError(
+            f"{type(g).__name__} exposes no storage_engine(); expected a "
+            "GraphPAL, LSMTree, or StorageEngine")
+    return maker()

@@ -30,14 +30,47 @@ import numpy as np
 
 from .pal import EdgePartition, IntervalMap, build_partition
 
-__all__ = ["EdgeBuffer", "LSMTree", "LSMStats"]
+__all__ = ["BufferStaging", "EdgeBuffer", "LSMTree", "LSMStats"]
+
+
+@dataclasses.dataclass
+class BufferStaging:
+    """Immutable numpy view of a buffer's contents, rebuilt lazily after
+    mutations. The src/dst sort orders (binary-searchable like a
+    partition's pointer-array) are built on first *batched* use only, so a
+    workload that interleaves single-edge mutations with point queries
+    pays the old O(n) scan, never a per-mutation re-sort."""
+
+    src: np.ndarray                 # (B,) int64, append order
+    dst: np.ndarray                 # (B,) int64
+    etype: np.ndarray               # (B,) int8
+    columns: Dict[str, np.ndarray]  # positional, append order
+    _src_order: Optional[np.ndarray] = None   # (B,) argsort(src), stable
+    _src_sorted: Optional[np.ndarray] = None  # (B,) src[_src_order]
+    _dst_order: Optional[np.ndarray] = None
+    _dst_sorted: Optional[np.ndarray] = None
+
+    def src_sorted_view(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(order, sorted) over src — built once per staging generation."""
+        if self._src_order is None:
+            self._src_order = np.argsort(self.src, kind="stable")
+            self._src_sorted = self.src[self._src_order]
+        return self._src_order, self._src_sorted
+
+    def dst_sorted_view(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._dst_order is None:
+            self._dst_order = np.argsort(self.dst, kind="stable")
+            self._dst_sorted = self.dst[self._dst_order]
+        return self._dst_order, self._dst_sorted
 
 
 class EdgeBuffer:
     """In-memory buffer of new edges for one top-level partition (paper §5.1).
 
     Buffers also hold the edge attribute columns, and are searched by
-    queries/computation alongside the on-disk partitions.
+    queries/computation alongside the on-disk partitions. Array staging is
+    cached and invalidated on mutation, so repeated queries between inserts
+    never re-convert the Python lists.
     """
 
     def __init__(self, column_dtypes: Dict[str, np.dtype]):
@@ -46,9 +79,26 @@ class EdgeBuffer:
         self.etype: List[int] = []
         self.columns: Dict[str, list] = {k: [] for k in column_dtypes}
         self.column_dtypes = dict(column_dtypes)
+        self._staging: Optional[BufferStaging] = None
 
     def __len__(self) -> int:
         return len(self.src)
+
+    def _invalidate(self) -> None:
+        self._staging = None
+
+    def staging(self) -> BufferStaging:
+        if self._staging is None:
+            self._staging = BufferStaging(
+                src=np.asarray(self.src, dtype=np.int64),
+                dst=np.asarray(self.dst, dtype=np.int64),
+                etype=np.asarray(self.etype, dtype=np.int8),
+                columns={
+                    k: np.asarray(v, dtype=self.column_dtypes[k])
+                    for k, v in self.columns.items()
+                },
+            )
+        return self._staging
 
     def append(self, src: int, dst: int, etype: int, cols: Dict) -> None:
         self.src.append(src)
@@ -56,6 +106,7 @@ class EdgeBuffer:
         self.etype.append(etype)
         for k in self.columns:
             self.columns[k].append(cols.get(k, 0))
+        self._invalidate()
 
     def extend(self, src, dst, etype, cols: Dict) -> None:
         self.src.extend(int(x) for x in src)
@@ -68,26 +119,48 @@ class EdgeBuffer:
                 self.columns[k].extend([0] * n)
             else:
                 self.columns[k].extend(v)
+        self._invalidate()
 
     def drain(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Dict[str, np.ndarray]]:
-        out = (
-            np.asarray(self.src, dtype=np.int64),
-            np.asarray(self.dst, dtype=np.int64),
-            np.asarray(self.etype, dtype=np.int8),
-            {k: np.asarray(v, dtype=self.column_dtypes[k]) for k, v in self.columns.items()},
-        )
+        st = self.staging()
+        out = (st.src, st.dst, st.etype, st.columns)
         self.src, self.dst, self.etype = [], [], []
         self.columns = {k: [] for k in self.columns}
+        self._invalidate()
         return out
 
-    # queries against the buffer (linear scans over the small buffer)
+    def set_column(self, name: str, pos: int, value) -> None:
+        self.columns[name][pos] = value
+        self._invalidate()
+
+    def filter_mask(self, keep: np.ndarray) -> None:
+        """Drop rows where keep is False (buffer-side delete, paper §5.3)."""
+        st = self.staging()
+        self.src = st.src[keep].tolist()
+        self.dst = st.dst[keep].tolist()
+        self.etype = st.etype[keep].tolist()
+        self.columns = {k: v[keep].tolist() for k, v in st.columns.items()}
+        self._invalidate()
+
+    # point queries: binary search when the sorted view already exists (a
+    # batched query built it), linear scan on the staged array otherwise
     def out_edges_of(self, v: int):
-        s = np.asarray(self.src, dtype=np.int64)
-        return np.nonzero(s == v)[0]
+        st = self.staging()
+        if st._src_order is None:
+            return np.nonzero(st.src == v)[0]
+        order, keys = st.src_sorted_view()
+        a = np.searchsorted(keys, v, side="left")
+        b = np.searchsorted(keys, v, side="right")
+        return order[a:b]  # stable sort → ascending positions
 
     def in_edges_of(self, v: int):
-        d = np.asarray(self.dst, dtype=np.int64)
-        return np.nonzero(d == v)[0]
+        st = self.staging()
+        if st._dst_order is None:
+            return np.nonzero(st.dst == v)[0]
+        order, keys = st.dst_sorted_view()
+        a = np.searchsorted(keys, v, side="left")
+        b = np.searchsorted(keys, v, side="right")
+        return order[a:b]
 
 
 @dataclasses.dataclass
@@ -156,6 +229,15 @@ class LSMTree:
         self._wal = None
         if durable:
             self._wal = open(wal_path or "/tmp/graphchi_db.wal", "ab", buffering=0)
+        self._engine = None
+
+    def storage_engine(self):
+        """Vectorized set-at-a-time read interface across ALL levels and the
+        live buffers (engine.py, DESIGN.md §5)."""
+        if self._engine is None:
+            from .engine import LSMEngine
+            self._engine = LSMEngine(self)
+        return self._engine
 
     # -- geometry ---------------------------------------------------------------
     @property
@@ -311,7 +393,7 @@ class LSMTree:
             if len(buf):
                 idx = buf.out_edges_of(vi)
                 if idx.size:
-                    chunks.append(np.asarray(buf.dst, np.int64)[idx])
+                    chunks.append(buf.staging().dst[idx])
         if not chunks:
             return np.empty(0, np.int64)
         return np.asarray(self.intervals.to_original(np.concatenate(chunks)))
@@ -329,7 +411,7 @@ class LSMTree:
             if len(buf):
                 idx = buf.in_edges_of(vi)
                 if idx.size:
-                    chunks.append(np.asarray(buf.src, np.int64)[idx])
+                    chunks.append(buf.staging().src[idx])
         if not chunks:
             return np.empty(0, np.int64)
         return np.asarray(self.intervals.to_original(np.concatenate(chunks)))
@@ -343,11 +425,10 @@ class LSMTree:
         bj = self._top_index_of(idst)
         buf = self.buffers[bj]
         if len(buf):
-            s = np.asarray(buf.src, np.int64)
-            d = np.asarray(buf.dst, np.int64)
-            hit = np.nonzero((s == isrc) & (d == idst))[0]
+            st = buf.staging()
+            hit = np.nonzero((st.src == isrc) & (st.dst == idst))[0]
             if hit.size:
-                buf.columns[name][int(hit[-1])] = value
+                buf.set_column(name, int(hit[-1]), value)
                 return True
         for level in self.levels:
             span = self.intervals.max_vertices // len(level)
@@ -369,16 +450,11 @@ class LSMTree:
         bj = self._top_index_of(idst)
         buf = self.buffers[bj]
         if len(buf):
-            s = np.asarray(buf.src, np.int64)
-            d = np.asarray(buf.dst, np.int64)
-            keep = ~((s == isrc) & (d == idst))
+            st = buf.staging()
+            keep = ~((st.src == isrc) & (st.dst == idst))
             if not keep.all():
                 found = True
-                buf.src = list(s[keep])
-                buf.dst = list(d[keep])
-                buf.etype = list(np.asarray(buf.etype, np.int8)[keep])
-                for k in buf.columns:
-                    buf.columns[k] = list(np.asarray(buf.columns[k])[keep])
+                buf.filter_mask(keep)
         for level in self.levels:
             span = self.intervals.max_vertices // len(level)
             part = level[idst // span]
@@ -403,6 +479,17 @@ class LSMTree:
     def all_partitions(self) -> List[EdgePartition]:
         return [p for lv in self.levels for p in lv]
 
+    def snapshot(self, with_window_plan: bool = True):
+        """Compile ALL levels plus the live in-memory buffers into an
+        immutable `DeviceGraph` (jnp arrays) for the PSW / Pallas compute
+        path — analytics run directly against the online store without
+        flushing or otherwise mutating it. Edges are re-bucketed by
+        destination interval and canonically (dst, src)-sorted, so the
+        snapshot of an LSM store is bit-identical to the snapshot of a
+        bulk-built GraphPAL holding the same live edges."""
+        from .psw import build_device_graph
+        return build_device_graph(self, with_window_plan=with_window_plan)
+
     def to_coo(self):
         ss, dd = [], []
         for part in self.all_partitions():
@@ -410,8 +497,10 @@ class LSMTree:
             ss.append(part.src[live])
             dd.append(part.dst[live])
         for buf in self.buffers:
-            ss.append(np.asarray(buf.src, np.int64))
-            dd.append(np.asarray(buf.dst, np.int64))
+            if len(buf):
+                st = buf.staging()
+                ss.append(st.src)
+                dd.append(st.dst)
         s = np.concatenate(ss) if ss else np.empty(0, np.int64)
         d = np.concatenate(dd) if dd else np.empty(0, np.int64)
         return (np.asarray(self.intervals.to_original(s)),

@@ -261,6 +261,14 @@ class GraphPAL:
         self.partitions = partitions
         # vertex columns: name -> list of per-interval arrays (positional)
         self.vertex_columns: Dict[str, List[np.ndarray]] = vertex_columns or {}
+        self._engine = None
+
+    def storage_engine(self):
+        """Vectorized set-at-a-time read interface (engine.py, DESIGN.md §5)."""
+        if self._engine is None:
+            from .engine import PALEngine
+            self._engine = PALEngine(self)
+        return self._engine
 
     # -- construction ---------------------------------------------------------
     @classmethod
@@ -376,26 +384,10 @@ class GraphPAL:
         return np.asarray(self.intervals.to_original(part.src[pos]))
 
     def out_neighbors_batch(self, vs: Sequence[int]) -> List[np.ndarray]:
-        """Batched out-neighbor query — the paper parallelizes across
-        partitions; we vectorize the per-partition binary searches."""
-        vis = self.intervals.to_internal(np.asarray(list(vs), dtype=np.int64))
-        results = [[] for _ in vs]
-        for part in self.partitions:
-            if part.n_edges == 0:
-                continue
-            idx = np.searchsorted(part.src_vertices, vis)
-            ok = (idx < part.src_vertices.shape[0])
-            ok &= np.where(ok, part.src_vertices[np.minimum(idx, part.src_vertices.shape[0] - 1)] == vis, False)
-            for j in np.nonzero(ok)[0]:
-                a, b = int(part.src_ptr[idx[j]]), int(part.src_ptr[idx[j] + 1])
-                pos = part._live(np.arange(a, b, dtype=np.int64))
-                if pos.size:
-                    results[int(j)].append(part.dst[pos])
-        return [
-            np.asarray(self.intervals.to_original(np.concatenate(r)))
-            if r else np.empty(0, dtype=np.int64)
-            for r in results
-        ]
+        """Batched out-neighbor query, one array per queried vertex (legacy
+        shape; the flat CSR-grouped form lives on `storage_engine()`)."""
+        vals, offsets = self.storage_engine().out_neighbors_batch(vs)
+        return [vals[offsets[i]:offsets[i + 1]] for i in range(len(offsets) - 1)]
 
     # -- exports ----------------------------------------------------------------
     def to_coo(self) -> Tuple[np.ndarray, np.ndarray]:

@@ -35,6 +35,14 @@ from .pal import GraphPAL, IntervalMap
 
 GraphLike = Union[GraphPAL, LSMTree]
 
+
+def _host_partitions(g: GraphLike) -> list:
+    """Every physical partition of the store (all LSM levels, or the PAL
+    partition list) — duck-typed, no storage-class branching."""
+    all_parts = getattr(g, "all_partitions", None)
+    return list(all_parts()) if all_parts is not None else list(g.partitions)
+
+
 __all__ = [
     "DeviceGraph",
     "build_device_graph",
@@ -62,7 +70,9 @@ def psw_sweep_host(
     have issued (Θ(P²)), for the benchmark I/O-proxy.
     """
     iv = g.intervals
-    parts = g.partitions if isinstance(g, GraphPAL) else None
+    # PAL: one owner partition per interval; LSM: one owner per level +
+    # windows from every partition (duck-typed on the partition layout)
+    parts = g.partitions if not hasattr(g, "all_partitions") else None
     seeks = 0
     for i in range(iv.n_partitions):
         lo, hi = iv.interval_range(i)
@@ -70,7 +80,6 @@ def psw_sweep_host(
             owner = parts[i]
             all_parts = parts
         else:
-            # LSM: one owner partition per level + windows from every partition
             all_parts = g.all_partitions()
             owner = None
         windows = []
@@ -99,10 +108,12 @@ def pagerank_host(g: GraphLike, n_iters: int = 5, damping: float = 0.85) -> np.n
     """
     iv = g.intervals
     n = iv.max_vertices
-    parts = g.partitions if isinstance(g, GraphPAL) else g.all_partitions()
-    if isinstance(g, LSMTree):
-        g.flush_all()
-        parts = g.all_partitions()
+    # edge-state PageRank writes the 'pr' column in place, so an LSM store
+    # merges its buffers first (read-only analytics use snapshot() instead)
+    flush_all = getattr(g, "flush_all", None)
+    if flush_all is not None:
+        flush_all()
+    parts = _host_partitions(g)
 
     # out-degree (global pass)
     outdeg = np.zeros(n, dtype=np.int64)
@@ -174,12 +185,15 @@ def build_device_graph(g: GraphLike, with_window_plan: bool = True) -> DeviceGra
     src = np.asarray(iv.to_internal(src_o))
     dst = np.asarray(iv.to_internal(dst_o))
     part = dst // L
-    # bucket edges per interval, dst-sorted within the bucket
+    # bucket edges per interval, canonically (dst, src)-sorted within the
+    # bucket — segment ops see monotone ids, and the arrays are independent
+    # of the source store's physical edge order, so an LSMTree.snapshot()
+    # is bit-identical to a bulk-built GraphPAL's DeviceGraph
     buckets_src, buckets_dst = [], []
     for i in range(P):
         m = part == i
         s, d = src[m], dst[m] - i * L
-        order = np.argsort(d, kind="stable")
+        order = np.lexsort((s, d))
         buckets_src.append(s[order])
         buckets_dst.append(d[order])
     e_max = max(1, max(b.shape[0] for b in buckets_src))

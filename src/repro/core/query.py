@@ -1,22 +1,27 @@
-"""Graph queries over PAL / LSM storage (paper §4.2, §7.4, §8.4).
+"""Graph queries over any StorageEngine (paper §4.2, §7.4, §8.4).
 
 Implements the paper's query set:
-  * out-edge / in-edge primitive queries (on GraphPAL and LSMTree),
   * friends-of-friends (FoF) with the frontier-batched out-edge strategy,
   * frontier traversal with the direction-optimizing top-down/bottom-up
     switch of Beamer et al. that the paper adopts in §7.4,
   * depth-limited unweighted shortest path (one- or two-sided BFS, §8.4).
+
+Every operator speaks only the vectorized set-at-a-time `StorageEngine`
+interface (engine.py, DESIGN.md §5) — the same code path serves a bulk-built
+`GraphPAL` and a live `LSMTree` (all levels + in-memory buffers), with no
+storage-class branching anywhere in this module.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Any, Optional, Sequence
 
 import numpy as np
 
-from .lsm import LSMTree
-from .pal import GraphPAL
+from .engine import StorageEngine, as_engine
 
-GraphLike = Union[GraphPAL, LSMTree]
+# a StorageEngine, or any store exposing storage_engine() — duck-typed via
+# as_engine(), deliberately not a Union over concrete storage classes
+GraphLike = Any
 
 __all__ = ["Frontier", "friends_of_friends", "bfs", "shortest_path", "traverse_out"]
 
@@ -36,42 +41,19 @@ class Frontier:
         return bool(i < self.ids.shape[0] and self.ids[i] == v)
 
 
-def _out_neighbors_batch(g: GraphLike, vs: np.ndarray) -> np.ndarray:
-    """Union of out-neighborhoods (top-down step)."""
-    if isinstance(g, GraphPAL):
-        chunks = g.out_neighbors_batch(vs)
-        if not chunks:
-            return np.empty(0, np.int64)
-        return np.concatenate([c for c in chunks if c.size] or
-                              [np.empty(0, np.int64)])
-    chunks = [g.out_neighbors(int(v)) for v in vs]
-    chunks = [c for c in chunks if c.size]
-    return np.concatenate(chunks) if chunks else np.empty(0, np.int64)
-
-
-def _bottom_up_step(g: GraphLike, frontier_mask: np.ndarray,
-                    iv) -> np.ndarray:
+def _bottom_up_step(eng: StorageEngine, frontier_mask: np.ndarray) -> np.ndarray:
     """Bottom-up sweep (paper §7.4 / Beamer): stream ALL edges once and emit
     destinations whose source is in the frontier. Cost O(|E|/B) sequential —
-    cheaper than per-vertex queries when the frontier is a large fraction of V."""
-    parts = g.partitions if isinstance(g, GraphPAL) else g.all_partitions()
+    cheaper than per-vertex queries when the frontier is a large fraction of
+    V. Streams the engine's edge chunks (partitions of every level AND live
+    buffers) instead of branching on the storage class."""
+    iv = eng.intervals
     next_ids = []
-    for part in parts:
-        if part.n_edges == 0:
-            continue
-        live = np.ones(part.n_edges, bool) if part.dead is None else ~part.dead
-        src_orig = np.asarray(iv.to_original(part.src), dtype=np.int64)
-        m = live & frontier_mask[src_orig]
+    for chunk in eng.edge_chunks():
+        src_orig = np.asarray(iv.to_original(chunk.src), dtype=np.int64)
+        m = frontier_mask[src_orig]
         if m.any():
-            next_ids.append(np.asarray(iv.to_original(part.dst[m]), np.int64))
-    if isinstance(g, LSMTree):
-        for buf in g.buffers:
-            if len(buf):
-                s = np.asarray(iv.to_original(np.asarray(buf.src, np.int64)))
-                d = np.asarray(iv.to_original(np.asarray(buf.dst, np.int64)))
-                m = frontier_mask[s]
-                if m.any():
-                    next_ids.append(d[m])
+            next_ids.append(np.asarray(iv.to_original(chunk.dst[m]), np.int64))
     return np.concatenate(next_ids) if next_ids else np.empty(0, np.int64)
 
 
@@ -79,15 +61,15 @@ def traverse_out(g: GraphLike, frontier: Frontier,
                  bottom_up_threshold: float = 0.05) -> Frontier:
     """One traversal hop with the direction-optimizing switch (paper §7.4):
     if the frontier exceeds a fraction of |V|, sweep bottom-up over all
-    edges instead of issuing per-vertex out-edge queries."""
-    iv = g.intervals
-    n_vert = iv.max_vertices
+    edges instead of issuing batched out-edge queries."""
+    eng = as_engine(g)
+    n_vert = eng.n_internal_vertices
     if len(frontier) > bottom_up_threshold * n_vert:
         mask = np.zeros(n_vert + 1, dtype=bool)
         mask[np.minimum(frontier.ids, n_vert)] = True
-        nbrs = _bottom_up_step(g, mask, iv)
+        nbrs = _bottom_up_step(eng, mask)
     else:
-        nbrs = _out_neighbors_batch(g, frontier.ids)
+        nbrs, _ = eng.out_neighbors_batch(frontier.ids)
     return Frontier(nbrs)
 
 
@@ -95,13 +77,14 @@ def friends_of_friends(g: GraphLike, v: int,
                        max_friends: Optional[int] = None) -> np.ndarray:
     """Paper §8.4: W = {w : ∃u, (v,u) ∈ E, (u,w) ∈ E}, excluding the friends
     themselves (and v). Out-edges of all friends are queried in one batch."""
-    friends = g.out_neighbors(v) if isinstance(g, GraphPAL) else g.out_neighbors(v)
+    eng = as_engine(g)
+    friends, _ = eng.out_neighbors_batch(np.asarray([v], dtype=np.int64))
     friends = np.unique(friends)
     if max_friends is not None and friends.shape[0] > max_friends:
         friends = friends[:max_friends]
     if friends.size == 0:
         return np.empty(0, np.int64)
-    fof = _out_neighbors_batch(g, friends)
+    fof, _ = eng.out_neighbors_batch(friends)
     fof = np.unique(fof)
     # exclude friends and the query vertex (paper's selectOut filter)
     return np.setdiff1d(fof, np.concatenate([friends, [v]]), assume_unique=False)
@@ -110,10 +93,11 @@ def friends_of_friends(g: GraphLike, v: int,
 def bfs(g: GraphLike, source: int, max_depth: int = 5,
         bottom_up_threshold: float = 0.05) -> dict:
     """Direction-optimizing BFS; returns {vertex: depth} for reached vertices."""
+    eng = as_engine(g)
     depth = {int(source): 0}
     frontier = Frontier([source])
     for d in range(1, max_depth + 1):
-        nxt = traverse_out(g, frontier, bottom_up_threshold)
+        nxt = traverse_out(eng, frontier, bottom_up_threshold)
         fresh = [int(u) for u in nxt.ids if int(u) not in depth]
         if not fresh:
             break
@@ -126,12 +110,13 @@ def bfs(g: GraphLike, source: int, max_depth: int = 5,
 def shortest_path(g: GraphLike, s: int, t: int, max_depth: int = 5,
                   two_sided: bool = True) -> Optional[int]:
     """Depth-limited unweighted shortest path (paper §8.4). Two-sided search
-    expands the smaller frontier each round; the backward side uses
-    in-neighbors."""
+    expands the smaller frontier each round; the backward side uses the
+    batched in-neighbor primitive."""
+    eng = as_engine(g)
     if s == t:
         return 0
     if not two_sided:
-        d = bfs(g, s, max_depth)
+        d = bfs(eng, s, max_depth)
         return d.get(int(t))
 
     fwd = {int(s): 0}
@@ -142,7 +127,7 @@ def shortest_path(g: GraphLike, s: int, t: int, max_depth: int = 5,
             return None
         expand_fwd = len(f_front) <= len(b_front) and len(f_front) > 0
         if expand_fwd or len(b_front) == 0:
-            nxt = traverse_out(g, f_front)
+            nxt = traverse_out(eng, f_front)
             fresh = []
             base = max(fwd.values())
             for u in nxt.ids:
@@ -154,10 +139,9 @@ def shortest_path(g: GraphLike, s: int, t: int, max_depth: int = 5,
                     fresh.append(u)
             f_front = Frontier(fresh)
         else:
-            # backward hop over in-neighbors
-            chunks = [g.in_neighbors(int(v)) for v in b_front.ids]
-            chunks = [c for c in chunks if c.size]
-            nbrs = np.unique(np.concatenate(chunks)) if chunks else np.empty(0, np.int64)
+            # backward hop over in-neighbors, one batched query
+            nbrs, _ = eng.in_neighbors_batch(b_front.ids)
+            nbrs = np.unique(nbrs)
             fresh = []
             base = max(bwd.values())
             for u in nbrs:

@@ -26,9 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from jax import shard_map as _shard_map_mod  # jax>=0.8
-
-shard_map = jax.shard_map
+from ..jax_compat import mesh_axis_types, pvary, shard_map
 
 __all__ = ["ring_mesh", "ring_gather", "ring_scatter_sum", "local_gather",
            "local_scatter_sum", "local_edge_softmax"]
@@ -36,8 +34,7 @@ __all__ = ["ring_mesh", "ring_gather", "ring_scatter_sum", "local_gather",
 
 def ring_mesh(mesh: Mesh) -> Mesh:
     """1-D view of a production mesh (same devices, flattened)."""
-    return Mesh(mesh.devices.reshape(-1), ("ring",),
-                axis_types=(jax.sharding.AxisType.Auto,))
+    return Mesh(mesh.devices.reshape(-1), ("ring",), **mesh_axis_types(1))
 
 
 def _expand(sel, ndim):
@@ -50,7 +47,7 @@ def _expand(sel, ndim):
 def _ring_fwd_local(x_loc, idx_loc, *, P_size: int, n_loc: int):
     my = jax.lax.axis_index("ring")
     fwd_perm = [(j, (j + 1) % P_size) for j in range(P_size)]
-    out0 = jax.lax.pvary(
+    out0 = pvary(
         jnp.zeros((idx_loc.shape[0],) + x_loc.shape[1:], x_loc.dtype),
         ("ring",))
 
@@ -88,8 +85,8 @@ def _ring_bwd_local(idx_loc, g_loc, *, P_size: int, n_loc: int,
         gbuf = jax.lax.ppermute(gbuf, "ring", bwd_perm)
         return gbuf, None
 
-    gbuf0 = jax.lax.pvary(jnp.zeros((n_loc,) + feat_shape, jnp.float32),
-                          ("ring",))
+    gbuf0 = pvary(jnp.zeros((n_loc,) + feat_shape, jnp.float32),
+                  ("ring",))
     gbuf, _ = jax.lax.scan(step, gbuf0, jnp.arange(P_size))
     return gbuf.astype(dtype)
 

@@ -1,0 +1,45 @@
+"""Version tolerance for the jax APIs this repo leans on.
+
+The sources target jax >= 0.8 (`jax.shard_map`, `jax.lax.pvary`, explicit
+`AxisType` meshes). CI containers ship an older CPU-only jax (0.4.x) where
+`shard_map` still lives in `jax.experimental`, `pvary` does not exist (the
+varying-type system it belongs to was introduced later), and meshes take no
+`axis_types`. Importing from here keeps one set of sources running on both.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+__all__ = ["shard_map", "pvary", "mesh_axis_types"]
+
+
+try:  # jax >= 0.8: shard_map is a top-level export
+    from jax import shard_map as _shard_map_mod  # noqa: F401
+
+    shard_map = jax.shard_map
+except ImportError:  # jax 0.4.x: experimental API, needs check_rep=False
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+        kwargs.setdefault("check_rep", False)
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
+
+def _pvary_fallback(x, axis_names):
+    """Old jax has no varying types — every value is already 'varying'."""
+    return x
+
+
+pvary = getattr(jax.lax, "pvary", _pvary_fallback)
+
+
+def mesh_axis_types(n_axes: int) -> dict:
+    """kwargs for Mesh()/jax.make_mesh(): explicit Auto axes when the
+    installed jax has AxisType, nothing otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}

@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax
 
+from ..jax_compat import mesh_axis_types
+
 __all__ = ["make_production_mesh", "TPU_V5E"]
 
 # TPU v5e hardware constants (per chip) for the roofline model
@@ -22,6 +24,4 @@ TPU_V5E = {
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **mesh_axis_types(len(axes)))

@@ -1,0 +1,48 @@
+"""`hypothesis` is an optional dev dependency: when it is installed the
+property tests run for real; when it is missing they skip (instead of
+erroring the whole module at collection, which used to take every other
+test in the file down with it).
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, st
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for `hypothesis.strategies`: every attribute is a
+        callable returning None — only ever consumed by the stub `given`."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def decorate(fn):
+            # *args/**kwargs so pytest requests no fixtures and the wrapper
+            # works both as a function and as a method.
+            def skipper(*a, **k):
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return decorate
+
+    def settings(*args, **kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate

@@ -1,7 +1,7 @@
 """PAL data-structure tests: construction, queries, invariants (paper §4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import GraphPAL, IntervalMap, build_partition
 
