@@ -1,83 +1,301 @@
-"""Paper Fig 7a: online insert throughput over time — LSM vs no-LSM vs
-durable buffers, plus inserts with concurrent PageRank (incremental
-computation, paper §6.1.2)."""
+"""Paper Fig 7a: online insert throughput — plus the ISSUE 2 acceptance
+harness: old (pre-PR, per-edge Python) write path vs the new columnar +
+linear-merge write path, best-of-3, emitted to BENCH_insert.json.
+
+The legacy classes below reproduce the pre-PR write path faithfully:
+Python-list buffers with per-element int() conversion, an O(#buffers)
+`total_buffered()` sum on every insert, a full `np.lexsort` re-sort of the
+merged partition on every flush, and an unbuffered per-record WAL. They
+exist only as the benchmark baseline.
+"""
 from __future__ import annotations
 
+import struct
 import time
 
 import numpy as np
 
 from repro.core import IntervalMap, LSMTree, pagerank_host
+from repro.core.lsm import BufferStaging
+from repro.core.pal import build_partition
 
 from .common import power_law_graph, save
 
 
-def _stream_insert(tree: LSMTree, src, dst, batch: int = 20_000,
-                   pagerank_every: int = 0):
+# ---------------------------------------------------------------------------
+# Legacy (pre-PR) reference write path
+# ---------------------------------------------------------------------------
+class _LegacyEdgeBuffer:
+    """Pre-PR buffer: Python lists, list→array staging conversion."""
+
+    def __init__(self, column_dtypes):
+        self.src, self.dst, self.etype = [], [], []
+        self.column_dtypes = dict(column_dtypes)
+        self.columns = {k: [] for k in column_dtypes}
+        self._staging = None
+
+    def __len__(self):
+        return len(self.src)
+
+    def staging(self):
+        if self._staging is None:
+            self._staging = BufferStaging(
+                src=np.asarray(self.src, dtype=np.int64),
+                dst=np.asarray(self.dst, dtype=np.int64),
+                etype=np.asarray(self.etype, dtype=np.int8),
+                columns={k: np.asarray(v, dtype=self.column_dtypes[k])
+                         for k, v in self.columns.items()},
+            )
+        return self._staging
+
+    def append(self, src, dst, etype, cols):
+        self.src.append(src)
+        self.dst.append(dst)
+        self.etype.append(etype)
+        for k in self.columns:
+            self.columns[k].append(cols.get(k, 0))
+        self._staging = None
+
+    def extend(self, src, dst, etype, cols):
+        self.src.extend(int(x) for x in src)
+        self.dst.extend(int(x) for x in dst)
+        self.etype.extend(int(x) for x in etype)
+        n = len(src)
+        for k in self.columns:
+            v = cols.get(k)
+            self.columns[k].extend([0] * n if v is None else v)
+        self._staging = None
+
+    def drain(self):
+        st = self.staging()
+        out = (st.src, st.dst, st.etype, st.columns)
+        self.src, self.dst, self.etype = [], [], []
+        self.columns = {k: [] for k in self.columns}
+        self._staging = None
+        return out
+
+
+class _LegacyLSMTree(LSMTree):
+    """Pre-PR write path on top of the current read path."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.buffers = [_LegacyEdgeBuffer(self.column_dtypes)
+                        for _ in self.levels[0]]
+        if self._wal is not None:  # unbuffered, per-record writes
+            path = self._wal.name
+            self._wal.close()
+            self._wal = open(path, "ab", buffering=0)
+
+    def total_buffered(self):
+        return sum(len(b) for b in self.buffers)
+
+    def insert_edge(self, src, dst, etype=0, **cols):
+        isrc = int(self.intervals.to_internal(src))
+        idst = int(self.intervals.to_internal(dst))
+        if self._wal is not None:
+            self._wal.write(struct.pack("<qqb", isrc, idst, etype))
+        self.buffers[self._top_index_of(idst)].append(isrc, idst, etype, cols)
+        self.stats.inserts += 1
+        if self.total_buffered() > self.buffer_cap:
+            self.flush_fullest_buffer()
+
+    def insert_edges(self, src, dst, etype=None, columns=None):
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        etype = np.zeros(src.shape[0], np.int8) if etype is None else np.asarray(etype)
+        columns = columns or {}
+        isrc = self.intervals.to_internal(src)
+        idst = self.intervals.to_internal(dst)
+        if self._wal is not None:
+            rec = np.rec.fromarrays([isrc, idst, etype.astype(np.int8)],
+                                    names="s,d,t")
+            self._wal.write(rec.tobytes())
+        span = self.intervals.max_vertices // len(self.levels[0])
+        top = idst // span
+        for i in np.unique(top):
+            m = top == i
+            self.buffers[int(i)].extend(
+                isrc[m], idst[m], etype[m],
+                {k: np.asarray(v)[m] for k, v in columns.items()})
+        self.stats.inserts += int(src.shape[0])
+        while self.total_buffered() > self.buffer_cap:
+            self.flush_fullest_buffer()
+
+    def flush_fullest_buffer(self):
+        j = int(np.argmax([len(b) for b in self.buffers]))
+        if len(self.buffers[j]) == 0:
+            return
+        bsrc, bdst, btype, bcols = self.buffers[j].drain()
+        self.levels[0][j] = self._merge_into(
+            self.levels[0][j], bsrc, bdst, btype, bcols)
+        self.stats.buffer_flushes += 1
+        self._maybe_pushdown(0, j)
+
+    def _merge_into(self, part, src, dst, etype, cols, presorted=False,
+                    run=None):
+        # full O(n log n) re-sort of the entire merged partition
+        live = np.ones(part.n_edges, bool) if part.dead is None else ~part.dead
+        self.stats.purged_tombstones += int(part.n_edges - live.sum())
+        msrc = np.concatenate([part.src[live], src])
+        mdst = np.concatenate([part.dst[live], dst])
+        mtyp = np.concatenate([part.etype[live], etype])
+        mcols = {}
+        for k, dt in self.column_dtypes.items():
+            old = part.columns.get(k, np.zeros(part.n_edges, dt))[live]
+            new = cols.get(k, np.zeros(src.shape[0], dt))
+            mcols[k] = np.concatenate([old, new])
+        self.stats.edges_rewritten += int(msrc.shape[0])
+        return build_partition(part.interval, msrc, mdst, mtyp, mcols)
+
+    def _maybe_pushdown(self, level, j):
+        # pre-PR push-down: materialize live masks, re-sort in child merges
+        part = self.levels[level][j]
+        if part.n_edges <= self.max_partition_edges:
+            return
+        if level == self.n_levels - 1:
+            self.stats.splits += 1
+            return
+        child_span = self.intervals.max_vertices // len(self.levels[level + 1])
+        live = np.ones(part.n_edges, bool) if part.dead is None else ~part.dead
+        csrc, cdst, ctyp = part.src[live], part.dst[live], part.etype[live]
+        ccols = {k: part.columns.get(k, np.zeros(part.n_edges, dt))[live]
+                 for k, dt in self.column_dtypes.items()}
+        child_of = cdst // child_span
+        for c in np.unique(child_of):
+            m = child_of == c
+            self.levels[level + 1][int(c)] = self._merge_into(
+                self.levels[level + 1][int(c)], csrc[m], cdst[m], ctyp[m],
+                {k: v[m] for k, v in ccols.items()})
+        self.levels[level][j] = build_partition(
+            part.interval, np.empty(0, np.int64), np.empty(0, np.int64),
+            columns={k: np.empty(0, dt) for k, dt in self.column_dtypes.items()})
+        self.stats.pushdown_merges += 1
+        for c in np.unique(child_of):
+            self._maybe_pushdown(level + 1, int(c))
+
+
+# ---------------------------------------------------------------------------
+# Workloads
+# ---------------------------------------------------------------------------
+def _make(cls, n_vertices, p=16, levels=3, f=4, buffer_cap=50_000,
+          max_partition_edges=150_000, **kw):
+    iv = IntervalMap.for_capacity(n_vertices - 1, p)
+    return cls(iv, n_levels=levels, branching=f, buffer_cap=buffer_cap,
+               max_partition_edges=max_partition_edges, **kw)
+
+
+def _bulk(tree, src, dst, batch=20_000):
     t0 = time.perf_counter()
-    progress = []
     for k in range(0, src.shape[0], batch):
         tree.insert_edges(src[k:k + batch], dst[k:k + batch])
-        if pagerank_every and (k // batch + 1) % pagerank_every == 0:
-            pagerank_host(tree, n_iters=1)
-        progress.append({"edges": k + min(batch, src.shape[0] - k),
-                         "elapsed_s": time.perf_counter() - t0})
-    total = time.perf_counter() - t0
-    return progress, total
+    return time.perf_counter() - t0
 
 
-def run(scale: float = 1.0):
+def _single(tree, src, dst):
+    ie = tree.insert_edge
+    t0 = time.perf_counter()
+    for s, d in zip(src.tolist(), dst.tolist()):
+        ie(s, d)
+    return time.perf_counter() - t0
+
+
+def _mix_op_count(n_edges, batch, queries_per_batch=64):
+    """Total ops _mix performs — the single source of truth for the
+    ops/sec denominator."""
+    return n_edges + queries_per_batch * ((n_edges + batch - 1) // batch)
+
+
+def _mix(tree, src, dst, batch=20_000, queries_per_batch=64):
+    """LinkBench-style sustained mix: bulk insert batches interleaved with
+    batched out-neighbor frontier queries against the live store. Op
+    accounting lives in `_mix_op_count` only."""
+    rng = np.random.default_rng(7)
+    eng = tree.storage_engine()
+    t0 = time.perf_counter()
+    for k in range(0, src.shape[0], batch):
+        tree.insert_edges(src[k:k + batch], dst[k:k + batch])
+        vs = rng.choice(src[: k + batch], size=queries_per_batch)
+        eng.out_neighbors_batch(vs)
+    return time.perf_counter() - t0
+
+
+def _best_of(fn, repeats):
+    import gc
+    times = []
+    for _ in range(repeats):
+        gc.collect()  # identical allocator/GC state for every rep
+        times.append(fn())
+    return min(times), times
+
+
+def run(scale: float = 1.0, repeats: int = 3):
     n_vertices = int(100_000 * scale)
     n_edges = int(1_000_000 * scale)
     src, dst = power_law_graph(n_vertices, n_edges, seed=2)
-    iv_args = dict(max_id=n_vertices - 1)
+    n_single = max(1, n_edges // 5)  # single-edge stream (per-call Python cost)
+    # keep caps proportional so reduced scales still exercise flushes and
+    # push-down merges (CI smoke runs at tiny --scale)
+    caps = dict(buffer_cap=max(1000, int(50_000 * scale)),
+                max_partition_edges=max(3000, int(150_000 * scale)))
+    batch = max(250, int(20_000 * scale))
 
-    results = {}
+    results = {"n_vertices": n_vertices, "n_edges": n_edges,
+               "repeats": repeats, **caps}
 
-    def make(p, levels, f, **kw):
-        iv = IntervalMap.for_capacity(n_vertices - 1, p)
-        return LSMTree(iv, n_levels=levels, branching=f,
-                       buffer_cap=50_000, max_partition_edges=150_000, **kw)
+    def compare(name, workload, n_items, **tree_kw):
+        entry = {}
+        for label, cls in (("legacy", _LegacyLSMTree), ("new", LSMTree)):
+            def once():
+                t = _make(cls, n_vertices, **caps, **tree_kw)
+                out = workload(t)
+                t.close()
+                return out
+            best, times = _best_of(once, repeats)
+            entry[label] = {"best_s": best, "times_s": times,
+                            "per_s": n_items / best}
+        entry["speedup"] = entry["legacy"]["best_s"] / entry["new"]["best_s"]
+        results[name] = entry
+        print(f"  {name}: legacy {entry['legacy']['per_s']:,.0f}/s, "
+              f"new {entry['new']['per_s']:,.0f}/s "
+              f"→ {entry['speedup']:.1f}x")
 
-    # (1) LSM, memory-only buffers
-    t = make(16, 3, 4)
-    prog, total = _stream_insert(t, src, dst)
-    results["lsm"] = {
-        "total_s": total, "edges_per_s": n_edges / total,
-        "edges_rewritten": t.stats.edges_rewritten,
-        "rewrite_amplification": t.stats.edges_rewritten / n_edges,
-        "progress": prog[::5],
+    print("— BENCH_insert (old vs new write path, best-of-%d) —" % repeats)
+    compare("bulk", lambda t: _bulk(t, src, dst, batch=batch), n_edges)
+    compare("single_edge",
+            lambda t: _single(t, src[:n_single], dst[:n_single]), n_single)
+    compare("bulk_durable",
+            lambda t: _bulk(t, src, dst, batch=batch), n_edges,
+            durable=True, wal_path="/tmp/bench_insert.wal")
+    mix_ops = _mix_op_count(n_edges, batch)
+    compare("mix", lambda t: _mix(t, src, dst, batch=batch), mix_ops)
+
+    # paper Fig 7a invariants on the new path: LSM vs no-LSM rewrite
+    # amplification, and inserts with concurrent PageRank (§6.1.2)
+    lsm = _make(LSMTree, n_vertices, **caps)
+    _bulk(lsm, src, dst, batch=batch)
+    flat = _make(LSMTree, n_vertices, levels=1, f=1, **caps)
+    _bulk(flat, src, dst, batch=batch)
+    results["rewrite_amplification"] = {
+        "lsm": lsm.stats.edges_rewritten / n_edges,
+        "no_lsm": flat.stats.edges_rewritten / n_edges,
     }
+    assert results["rewrite_amplification"]["lsm"] < \
+        results["rewrite_amplification"]["no_lsm"], "LSM must reduce rewrites"
 
-    # (2) no LSM (single level — the paper's 'basic edge buffer' baseline)
-    t = make(16, 1, 1)
-    prog, total = _stream_insert(t, src, dst)
-    results["no_lsm"] = {
-        "total_s": total, "edges_per_s": n_edges / total,
-        "edges_rewritten": t.stats.edges_rewritten,
-        "rewrite_amplification": t.stats.edges_rewritten / n_edges,
-    }
+    t = _make(LSMTree, n_vertices, **caps)
+    t0 = time.perf_counter()
+    for k in range(0, n_edges, batch):
+        t.insert_edges(src[k:k + batch], dst[k:k + batch])
+        if (k // batch + 1) % 10 == 0:
+            pagerank_host(t, n_iters=1)
+    results["lsm_with_pagerank"] = {
+        "edges_per_s": n_edges / (time.perf_counter() - t0)}
 
-    # (3) LSM + durable buffers (WAL fsync'd per batch)
-    t = make(16, 3, 4, durable=True, wal_path="/tmp/bench_insert.wal")
-    prog, total = _stream_insert(t, src, dst)
-    t.close()
-    results["lsm_durable"] = {"total_s": total, "edges_per_s": n_edges / total}
-
-    # (4) LSM + concurrent PageRank (incremental analytics, §6.1.2)
-    t = make(16, 3, 4)
-    prog, total = _stream_insert(t, src, dst, pagerank_every=10)
-    results["lsm_with_pagerank"] = {"total_s": total,
-                                    "edges_per_s": n_edges / total}
-
-    save("insert", results)
-    print("— Fig 7a (insert throughput) —")
-    for k, v in results.items():
-        print(f"  {k}: {v['edges_per_s']:.0f} edges/s"
-              + (f", rewrite x{v['rewrite_amplification']:.1f}"
-                 if "rewrite_amplification" in v else ""))
-    assert results["lsm"]["rewrite_amplification"] < \
-        results["no_lsm"]["rewrite_amplification"], "LSM must reduce rewrites"
+    save("BENCH_insert", results)
+    print(f"  rewrite amplification: lsm x"
+          f"{results['rewrite_amplification']['lsm']:.1f} vs no-lsm x"
+          f"{results['rewrite_amplification']['no_lsm']:.1f}")
     return results
 
 

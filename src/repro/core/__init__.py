@@ -1,5 +1,18 @@
 """GraphChi-DB core: PAL + LSM + PSW + queries (the paper's contribution)."""
-from .pal import EdgePartition, GraphPAL, IntervalMap, build_partition
+from .pal import (
+    EdgePartition,
+    GraphPAL,
+    IntervalMap,
+    SortedRun,
+    build_partition,
+    merge_runs,
+    merge_runs_into_partition,
+    merge_sorted_runs,
+    partition_from_run,
+    run_from_arrays,
+    run_from_partition,
+    sorted_run_index,
+)
 from .lsm import BufferStaging, EdgeBuffer, LSMStats, LSMTree
 from .engine import (
     EdgeBatch,
@@ -28,7 +41,10 @@ from .codec import (
 )
 
 __all__ = [
-    "EdgePartition", "GraphPAL", "IntervalMap", "build_partition",
+    "EdgePartition", "GraphPAL", "IntervalMap", "SortedRun",
+    "build_partition", "merge_runs", "merge_runs_into_partition",
+    "merge_sorted_runs", "partition_from_run",
+    "run_from_arrays", "run_from_partition", "sorted_run_index",
     "BufferStaging", "EdgeBuffer", "LSMStats", "LSMTree",
     "EdgeBatch", "EdgeChunk", "LSMEngine", "PALEngine", "StorageEngine",
     "as_engine",

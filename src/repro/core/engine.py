@@ -108,6 +108,7 @@ def _searchsorted_ranges(keys: np.ndarray,
 class _PartitionSlab:
     def __init__(self, part):
         self.part = part
+        self.interval = part.interval  # [lo, hi) of internal destinations
 
     def positions_batch(self, vis: np.ndarray,
                         direction: str) -> Tuple[np.ndarray, np.ndarray]:
@@ -160,12 +161,16 @@ class _PartitionSlab:
 
 
 class _BufferSlab:
-    def __init__(self, buf):
+    def __init__(self, buf, interval):
         self.buf = buf
+        self.interval = interval  # the fed top-level partition's interval
+        # zero-copy staging views, snapped once per slab (one batched call);
+        # sort-order caches live on the staging, shared across calls
+        self.st = buf.staging()
 
     def positions_batch(self, vis: np.ndarray,
                         direction: str) -> Tuple[np.ndarray, np.ndarray]:
-        st = self.buf.staging()
+        st = self.st
         order, keys = (st.src_sorted_view() if direction == "out"
                        else st.dst_sorted_view())
         lo = np.searchsorted(keys, vis, side="left")
@@ -174,32 +179,48 @@ class _BufferSlab:
         return order[spos], owner
 
     def src_at(self, pos):
-        return self.buf.staging().src[pos]
+        return self.st.src[pos]
 
     def dst_at(self, pos):
-        return self.buf.staging().dst[pos]
+        return self.st.dst[pos]
 
     def etype_at(self, pos):
-        return self.buf.staging().etype[pos]
+        return self.st.etype[pos]
 
     def column_at(self, name, pos, dtype):
-        col = self.buf.staging().columns.get(name)
+        col = self.st.columns.get(name)
         if col is None:
             return np.zeros(pos.shape[0], dtype)
         return col[pos]
 
     def column_names(self):
-        return self.buf.staging().columns.keys()
+        return self.st.columns.keys()
 
     def column_dtype(self, name):
-        col = self.buf.staging().columns.get(name)
+        col = self.st.columns.get(name)
         return None if col is None else col.dtype
 
     def chunk(self) -> Optional[EdgeChunk]:
         if len(self.buf) == 0:
             return None
-        st = self.buf.staging()
-        return EdgeChunk(st.src, st.dst)
+        return EdgeChunk(self.st.src, self.st.dst)
+
+
+def _slab_positions(slab, vis: np.ndarray,
+                    direction: str) -> Tuple[np.ndarray, np.ndarray]:
+    """Probe one slab with the frontier. Destinations partition by interval,
+    so for in-edge queries only the sub-frontier inside the slab's interval
+    can hit — the rest is masked off before the binary search (a buffer or
+    partition is never probed for vertices it cannot own)."""
+    if direction == "in":
+        lo, hi = slab.interval
+        m = (vis >= lo) & (vis < hi)
+        if not m.any():
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        sel = np.flatnonzero(m)
+        pos, owner = slab.positions_batch(vis[sel], direction)
+        return pos, sel[owner]
+    return slab.positions_batch(vis, direction)
 
 
 def _group(chunks: List[np.ndarray], owners: List[np.ndarray],
@@ -256,7 +277,7 @@ class StorageEngine:
         vis = np.asarray(iv.to_internal(vs))
         vals, owners = [], []
         for slab in self._slabs():
-            pos, owner = slab.positions_batch(vis, direction)
+            pos, owner = _slab_positions(slab, vis, direction)
             if pos.size:
                 vals.append(slab.dst_at(pos) if direction == "out"
                             else slab.src_at(pos))
@@ -294,7 +315,7 @@ class StorageEngine:
 
         hits = []  # (slab, pos, owner)
         for slab in slabs:
-            pos, owner = slab.positions_batch(vis, direction)
+            pos, owner = _slab_positions(slab, vis, direction)
             if pos.size:
                 hits.append((slab, pos, owner))
         order, _, offsets = _group([h[1] for h in hits],
@@ -346,9 +367,9 @@ class LSMEngine(StorageEngine):
         for level in self.graph.levels:
             for part in level:
                 yield _PartitionSlab(part)
-        for buf in self.graph.buffers:
+        for buf, top in zip(self.graph.buffers, self.graph.levels[0]):
             if len(buf):
-                yield _BufferSlab(buf)
+                yield _BufferSlab(buf, top.interval)
 
 
 def as_engine(g) -> StorageEngine:

@@ -28,7 +28,18 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .pal import EdgePartition, IntervalMap, build_partition
+from .pal import (
+    _MAX_PACKED_BOUND,
+    EdgePartition,
+    IntervalMap,
+    SortedRun,
+    build_partition,
+    merge_runs,
+    merge_runs_into_partition,
+    partition_from_run,
+    run_from_arrays,
+    run_from_partition,
+)
 
 __all__ = ["BufferStaging", "EdgeBuffer", "LSMTree", "LSMStats"]
 
@@ -65,81 +76,124 @@ class BufferStaging:
 
 
 class EdgeBuffer:
-    """In-memory buffer of new edges for one top-level partition (paper §5.1).
+    """Columnar in-memory buffer of new edges for one top-level partition
+    (paper §5.1, DESIGN.md §6).
 
-    Buffers also hold the edge attribute columns, and are searched by
-    queries/computation alongside the on-disk partitions. Array staging is
-    cached and invalidated on mutation, so repeated queries between inserts
-    never re-convert the Python lists.
+    All state lives in amortized-doubling numpy arrays (`_src/_dst/_etype`
+    plus one array per declared attribute column) with a length counter, so
+    `append`/`extend` are pure vectorized writes and `staging()` is a
+    zero-copy slice view of the backing arrays. Staging views are cached
+    and invalidated on any length-changing mutation; holders must not cache
+    a staging across buffer mutations.
     """
 
+    _INITIAL_CAP = 256
+
     def __init__(self, column_dtypes: Dict[str, np.dtype]):
-        self.src: List[int] = []
-        self.dst: List[int] = []
-        self.etype: List[int] = []
-        self.columns: Dict[str, list] = {k: [] for k in column_dtypes}
         self.column_dtypes = dict(column_dtypes)
+        self._cap = self._INITIAL_CAP
+        self._len = 0
+        self._src = np.empty(self._cap, np.int64)
+        self._dst = np.empty(self._cap, np.int64)
+        self._etype = np.empty(self._cap, np.int8)
+        self._cols: Dict[str, np.ndarray] = {
+            k: np.empty(self._cap, dt) for k, dt in self.column_dtypes.items()
+        }
         self._staging: Optional[BufferStaging] = None
 
     def __len__(self) -> int:
-        return len(self.src)
+        return self._len
 
     def _invalidate(self) -> None:
         self._staging = None
 
+    def _reserve(self, extra: int) -> None:
+        need = self._len + int(extra)
+        if need <= self._cap:
+            return
+        cap = self._cap
+        while cap < need:
+            cap *= 2
+
+        def grow(arr):
+            out = np.empty(cap, arr.dtype)
+            out[: self._len] = arr[: self._len]
+            return out
+
+        self._src = grow(self._src)
+        self._dst = grow(self._dst)
+        self._etype = grow(self._etype)
+        self._cols = {k: grow(v) for k, v in self._cols.items()}
+        self._cap = cap
+
     def staging(self) -> BufferStaging:
         if self._staging is None:
+            n = self._len
             self._staging = BufferStaging(
-                src=np.asarray(self.src, dtype=np.int64),
-                dst=np.asarray(self.dst, dtype=np.int64),
-                etype=np.asarray(self.etype, dtype=np.int8),
-                columns={
-                    k: np.asarray(v, dtype=self.column_dtypes[k])
-                    for k, v in self.columns.items()
-                },
+                src=self._src[:n],
+                dst=self._dst[:n],
+                etype=self._etype[:n],
+                columns={k: v[:n] for k, v in self._cols.items()},
             )
         return self._staging
 
     def append(self, src: int, dst: int, etype: int, cols: Dict) -> None:
-        self.src.append(src)
-        self.dst.append(dst)
-        self.etype.append(etype)
-        for k in self.columns:
-            self.columns[k].append(cols.get(k, 0))
+        self._reserve(1)
+        i = self._len
+        self._src[i] = src
+        self._dst[i] = dst
+        self._etype[i] = etype
+        for k, col in self._cols.items():
+            col[i] = cols.get(k, 0)
+        self._len = i + 1
         self._invalidate()
 
     def extend(self, src, dst, etype, cols: Dict) -> None:
-        self.src.extend(int(x) for x in src)
-        self.dst.extend(int(x) for x in dst)
-        self.etype.extend(int(x) for x in etype)
-        n = len(src)
-        for k in self.columns:
+        src = np.asarray(src, dtype=np.int64)
+        n = src.shape[0]
+        if n == 0:
+            return
+        self._reserve(n)
+        i = self._len
+        self._src[i:i + n] = src
+        self._dst[i:i + n] = np.asarray(dst, dtype=np.int64)
+        self._etype[i:i + n] = np.asarray(etype, dtype=np.int8)
+        for k, col in self._cols.items():
             v = cols.get(k)
-            if v is None:
-                self.columns[k].extend([0] * n)
-            else:
-                self.columns[k].extend(v)
+            col[i:i + n] = 0 if v is None else np.asarray(v, dtype=col.dtype)
+        self._len = i + n
         self._invalidate()
 
     def drain(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Dict[str, np.ndarray]]:
+        """Hand out the staged views and reset. The views alias the backing
+        arrays and are only valid until the next mutation — the merge that
+        consumes them copies during its reorder/scatter."""
         st = self.staging()
         out = (st.src, st.dst, st.etype, st.columns)
-        self.src, self.dst, self.etype = [], [], []
-        self.columns = {k: [] for k in self.columns}
+        self._len = 0
         self._invalidate()
         return out
 
     def set_column(self, name: str, pos: int, value) -> None:
-        self.columns[name][pos] = value
-        self._invalidate()
+        # staging columns alias the backing arrays and sort orders are
+        # unaffected by an attribute write, so no invalidation needed
+        self._cols[name][pos] = value
 
     def filter_mask(self, keep: np.ndarray) -> None:
-        """Drop rows where keep is False (buffer-side delete, paper §5.3)."""
-        st = self.staging()
-        self.src = st.src[keep].tolist()
-        self.dst = st.dst[keep].tolist()
-        self.etype = st.etype[keep].tolist()
-        self.columns = {k: v[keep].tolist() for k, v in st.columns.items()}
+        """Drop rows where keep is False (buffer-side delete, paper §5.3) by
+        compacting the backing arrays in place — array-native, no list
+        round-trip. Boolean fancy-indexing copies before the assignment, so
+        the overlapping write is safe."""
+        keep = np.asarray(keep, dtype=bool)
+        n = self._len
+        m = int(keep.sum())
+        if m != n:
+            self._src[:m] = self._src[:n][keep]
+            self._dst[:m] = self._dst[:n][keep]
+            self._etype[:m] = self._etype[:n][keep]
+            for col in self._cols.values():
+                col[:m] = col[:n][keep]
+            self._len = m
         self._invalidate()
 
     # point queries: binary search when the sorted view already exists (a
@@ -192,6 +246,7 @@ class LSMTree:
         column_dtypes: Optional[Dict[str, np.dtype]] = None,
         durable: bool = False,
         wal_path: Optional[str] = None,
+        wal_sync: str = "commit",
     ):
         p = intervals.n_partitions
         assert p % (branching ** (n_levels - 1)) == 0, (
@@ -223,13 +278,32 @@ class LSMTree:
         self.buffers: List[EdgeBuffer] = [
             EdgeBuffer(self.column_dtypes) for _ in self.levels[0]
         ]
+        # O(1) buffered-edge counter (maintained at every buffer mutation);
+        # replaces the per-insert sum over all buffers
+        self._buffered = 0
 
-        # durability (paper §7.3): WAL written+flushed before buffer insert
+        # durability (paper §7.3): group-commit WAL — records of one insert
+        # call coalesce into ONE buffered write, then the sync policy runs:
+        #   "always": flush + fsync per insert call (true durability)
+        #   "commit": flush to the OS per insert call (survives process
+        #             crash, not power loss) — the default
+        #   "close":  buffered until flush()/close()
         self.durable = durable
+        assert wal_sync in ("always", "commit", "close"), wal_sync
+        self.wal_sync = wal_sync
         self._wal = None
         if durable:
-            self._wal = open(wal_path or "/tmp/graphchi_db.wal", "ab", buffering=0)
+            self._wal = open(wal_path or "/tmp/graphchi_db.wal", "ab",
+                             buffering=1 << 20)
         self._engine = None
+
+    def _wal_append(self, payload: bytes) -> None:
+        self._wal.write(payload)
+        if self.wal_sync == "commit":
+            self._wal.flush()
+        elif self.wal_sync == "always":
+            self._wal.flush()
+            os.fsync(self._wal.fileno())
 
     def storage_engine(self):
         """Vectorized set-at-a-time read interface across ALL levels and the
@@ -253,13 +327,14 @@ class LSMTree:
 
     # -- inserts (paper §5) -------------------------------------------------------
     def insert_edge(self, src: int, dst: int, etype: int = 0, **cols) -> None:
-        isrc = int(self.intervals.to_internal(src))
-        idst = int(self.intervals.to_internal(dst))
+        isrc = self.intervals.to_internal_scalar(src)
+        idst = self.intervals.to_internal_scalar(dst)
         if self._wal is not None:
-            self._wal.write(struct.pack("<qqb", isrc, idst, etype))
+            self._wal_append(struct.pack("<qqb", isrc, idst, etype))
         self.buffers[self._top_index_of(idst)].append(isrc, idst, etype, cols)
         self.stats.inserts += 1
-        if self.total_buffered() > self.buffer_cap:
+        self._buffered += 1
+        if self._buffered > self.buffer_cap:
             self.flush_fullest_buffer()
 
     def insert_edges(self, src, dst, etype=None, columns: Optional[Dict] = None) -> None:
@@ -274,38 +349,111 @@ class LSMTree:
             rec = np.rec.fromarrays(
                 [isrc, idst, etype.astype(np.int8)], names="s,d,t"
             )
-            self._wal.write(rec.tobytes())
-        span = self.intervals.max_vertices // len(self.levels[0])
-        top = idst // span
-        for i in np.unique(top):
-            m = top == i
-            self.buffers[int(i)].extend(
-                isrc[m], idst[m], etype[m],
-                {k: np.asarray(v)[m] for k, v in columns.items()},
-            )
+            self._wal_append(rec.tobytes())  # ONE group-commit write
+        if len(self.buffers) == 1:  # single top partition: no routing pass
+            self.buffers[0].extend(isrc, idst, etype, columns)
+        else:
+            span = self.intervals.max_vertices // len(self.levels[0])
+            top = idst // span
+            for i in np.unique(top):
+                m = top == i
+                self.buffers[int(i)].extend(
+                    isrc[m], idst[m], etype[m],
+                    {k: np.asarray(v)[m] for k, v in columns.items()},
+                )
         self.stats.inserts += int(src.shape[0])
-        while self.total_buffered() > self.buffer_cap:
+        self._buffered += int(src.shape[0])
+        while self._buffered > self.buffer_cap:
             self.flush_fullest_buffer()
 
     def total_buffered(self) -> int:
-        return sum(len(b) for b in self.buffers)
+        return self._buffered
 
     # -- merges -------------------------------------------------------------------
+    def _empty_partition(self, interval) -> EdgePartition:
+        return build_partition(
+            interval, np.empty(0, np.int64), np.empty(0, np.int64),
+            columns={k: np.empty(0, dt) for k, dt in self.column_dtypes.items()},
+        )
+
+    def _linear_merge_ok(self, n_total: int) -> bool:
+        kb = self.intervals.max_vertices
+        return kb <= _MAX_PACKED_BOUND and kb * (n_total + 1) < 2 ** 63
+
     def flush_fullest_buffer(self) -> None:
         """Merge the fullest buffer with its top-level partition (paper §5.2)."""
         j = int(np.argmax([len(b) for b in self.buffers]))
-        if len(self.buffers[j]) == 0:
+        buf = self.buffers[j]
+        if len(buf) == 0:
             return
-        bsrc, bdst, btype, bcols = self.buffers[j].drain()
-        self.levels[0][j] = self._merge_into(self.levels[0][j], bsrc, bdst, btype, bcols)
+        self._buffered -= len(buf)
+        bsrc, bdst, btype, bcols = buf.drain()
         self.stats.buffer_flushes += 1
-        self._maybe_pushdown(0, j)
+        if self._linear_merge_ok(self.levels[0][j].n_edges + int(bsrc.shape[0])):
+            run = run_from_arrays(bsrc, bdst, btype, bcols,
+                                  key_bound=self.intervals.max_vertices)
+            self._absorb(0, j, run)
+        else:
+            self.levels[0][j] = self._merge_into(
+                self.levels[0][j], bsrc, bdst, btype, bcols)
+            self._maybe_pushdown(0, j)
 
-    def _merge_into(self, part: EdgePartition, src, dst, etype, cols) -> EdgePartition:
-        """Sorted merge producing a NEW immutable partition; tombstoned edges
-        of the old partition are purged here (paper §5.3)."""
+    def _absorb(self, level: int, j: int, run: "SortedRun") -> None:
+        """Merge a sorted run into partition (level, j). When the merged
+        partition would immediately overflow into its children anyway,
+        short-circuit: combine partition + run into one sorted run and
+        distribute it straight down, skipping a full partition (re)build —
+        this halves rewrites at every non-leaf level."""
+        part = self.levels[level][j]
+        n_dead = 0 if part.dead is None else int(part.dead.sum())
+        n_total = part.n_edges - n_dead + run.n_edges
+        if (n_total > self.max_partition_edges and level < self.n_levels - 1
+                and self._linear_merge_ok(n_total)):
+            a = run_from_partition(
+                part, live=None if part.dead is None else ~part.dead,
+                columns=self.column_dtypes.keys())
+            combined = merge_runs(a, run, self.intervals.max_vertices,
+                                  self.column_dtypes)
+            self.stats.purged_tombstones += n_dead
+            self.stats.edges_rewritten += combined.n_edges
+            self.stats.pushdown_merges += 1
+            self.levels[level][j] = self._empty_partition(part.interval)
+            self._distribute_to_children(level, combined)
+            return
+        self.levels[level][j] = self._merge_into(
+            part, run.src, run.dst, run.etype, run.columns,
+            presorted=True, run=run)
+        self._maybe_pushdown(level, j)
+
+    def _merge_into(self, part: EdgePartition, src, dst, etype, cols,
+                    presorted: bool = False,
+                    run: Optional["SortedRun"] = None) -> EdgePartition:
+        """Linear-time sorted merge producing a NEW immutable partition
+        (DESIGN.md §6); tombstoned edges of the old partition are purged
+        here (paper §5.3). Only the incoming run is sorted (skipped when it
+        is a presorted push-down subset, whose dst order arrives prebuilt in
+        `run`); the partition side and every index rebuild are O(n) off the
+        merge interleave permutation."""
+        n_dead = 0 if part.dead is None else int(part.dead.sum())
+        n_live = part.n_edges - n_dead
+        self.stats.purged_tombstones += n_dead
+        n_total = n_live + int(src.shape[0])
+        self.stats.edges_rewritten += n_total
+        key_bound = self.intervals.max_vertices
+        if key_bound <= _MAX_PACKED_BOUND and key_bound * (n_total + 1) < 2 ** 63:
+            b = run if run is not None else run_from_arrays(
+                src, dst, etype, cols, presorted=presorted,
+                key_bound=key_bound)
+            if n_live == 0:  # empty target: index the run directly
+                return partition_from_run(part.interval, b, self.column_dtypes)
+            a = run_from_partition(
+                part, live=None if part.dead is None else ~part.dead,
+                columns=self.column_dtypes.keys())
+            return merge_runs_into_partition(
+                part.interval, a, b, key_bound, self.column_dtypes)
+        # (src, dst) does not pack into an int64 merge key at this vertex
+        # capacity — fall back to the full re-sort build
         live = np.ones(part.n_edges, bool) if part.dead is None else ~part.dead
-        self.stats.purged_tombstones += int(part.n_edges - live.sum())
         msrc = np.concatenate([part.src[live], src])
         mdst = np.concatenate([part.dst[live], dst])
         mtyp = np.concatenate([part.etype[live], etype])
@@ -314,7 +462,6 @@ class LSMTree:
             old = part.columns.get(k, np.zeros(part.n_edges, dt))[live]
             new = cols.get(k, np.zeros(src.shape[0], dt))
             mcols[k] = np.concatenate([old, new])
-        self.stats.edges_rewritten += int(msrc.shape[0])
         return build_partition(part.interval, msrc, mdst, mtyp, mcols)
 
     def _maybe_pushdown(self, level: int, j: int) -> None:
@@ -328,30 +475,49 @@ class LSMTree:
             # equivalently we grow the leaf cap — record the event.
             self.stats.splits += 1
             return
-        f = len(self.levels[level + 1]) // len(self.levels[level])
-        child_span = self.intervals.max_vertices // len(self.levels[level + 1])
-        live = np.ones(part.n_edges, bool) if part.dead is None else ~part.dead
-        csrc, cdst, ctyp = part.src[live], part.dst[live], part.etype[live]
-        ccols = {
-            k: part.columns.get(k, np.zeros(part.n_edges, dt))[live]
-            for k, dt in self.column_dtypes.items()
-        }
-        child_of = cdst // child_span
-        for c in np.unique(child_of):
-            m = child_of == c
-            self.levels[level + 1][int(c)] = self._merge_into(
-                self.levels[level + 1][int(c)],
-                csrc[m], cdst[m], ctyp[m],
-                {k: v[m] for k, v in ccols.items()},
-            )
+        n_dead = 0 if part.dead is None else int(part.dead.sum())
+        parent = run_from_partition(
+            part, live=None if part.dead is None else ~part.dead,
+            columns=self.column_dtypes.keys())
+        self.stats.purged_tombstones += n_dead
         # emptied parent — new empty immutable partition
-        self.levels[level][j] = build_partition(
-            part.interval, np.empty(0, np.int64), np.empty(0, np.int64),
-            columns={k: np.empty(0, dt) for k, dt in self.column_dtypes.items()},
-        )
+        self.levels[level][j] = self._empty_partition(part.interval)
         self.stats.pushdown_merges += 1
-        for c in np.unique(child_of):
-            self._maybe_pushdown(level + 1, int(c))
+        self._distribute_to_children(level, parent)
+
+    def _distribute_to_children(self, level: int, parent: "SortedRun") -> None:
+        """Split a sorted run by child interval and merge each piece into
+        its child partition (paper §5.2). Children cover disjoint dst
+        ranges, so each child occupies one contiguous slice of the parent's
+        dst order: its parent positions are that slice, its edge order is
+        those positions sorted, and its local dst order is the slice ranked
+        against them — O(m log m) per child, no full-parent passes."""
+        if parent.n_edges == 0:
+            return
+        child_span = self.intervals.max_vertices // len(self.levels[level + 1])
+        order = parent.dst_order
+        pdst_sorted = parent.dst[order]
+        c_lo = int(pdst_sorted[0]) // child_span
+        c_hi = int(pdst_sorted[-1]) // child_span
+        inv = np.empty(parent.n_edges, np.int64)  # parent pos -> child pos
+        children = []
+        for c in range(c_lo, c_hi + 1):
+            lo = np.searchsorted(pdst_sorted, c * child_span, side="left")
+            hi = np.searchsorted(pdst_sorted, (c + 1) * child_span, side="left")
+            if hi == lo:
+                continue
+            slice_pos = order[lo:hi]          # parent positions, dst-ordered
+            pos_c = np.sort(slice_pos)        # = child edges in (src, dst) order
+            inv[pos_c] = np.arange(pos_c.shape[0], dtype=np.int64)
+            child = SortedRun(
+                src=parent.src[pos_c], dst=parent.dst[pos_c],
+                etype=parent.etype[pos_c],
+                columns={k: v[pos_c] for k, v in parent.columns.items()},
+                dst_order=inv[slice_pos],
+            )
+            children.append((c, child))
+        for c, child in children:
+            self._absorb(level + 1, c, child)
 
     def flush_all(self) -> None:
         while self.total_buffered() > 0:
@@ -407,11 +573,13 @@ class LSMTree:
             pos = part.in_edges(vi)
             if pos.size:
                 chunks.append(part.src[pos])
-        for buf in self.buffers:
-            if len(buf):
-                idx = buf.in_edges_of(vi)
-                if idx.size:
-                    chunks.append(buf.staging().src[idx])
+        # buffers partition by destination interval: only the owning buffer
+        # can hold v's in-edges — probe just that one
+        buf = self.buffers[self._top_index_of(vi)]
+        if len(buf):
+            idx = buf.in_edges_of(vi)
+            if idx.size:
+                chunks.append(buf.staging().src[idx])
         if not chunks:
             return np.empty(0, np.int64)
         return np.asarray(self.intervals.to_original(np.concatenate(chunks)))
@@ -452,9 +620,11 @@ class LSMTree:
         if len(buf):
             st = buf.staging()
             keep = ~((st.src == isrc) & (st.dst == idst))
-            if not keep.all():
+            removed = int(keep.shape[0] - keep.sum())
+            if removed:
                 found = True
                 buf.filter_mask(keep)
+                self._buffered -= removed
         for level in self.levels:
             span = self.intervals.max_vertices // len(level)
             part = level[idst // span]
@@ -506,8 +676,17 @@ class LSMTree:
         return (np.asarray(self.intervals.to_original(s)),
                 np.asarray(self.intervals.to_original(d)))
 
+    def wal_flush(self, fsync: bool = True) -> None:
+        """Explicit durability point: push buffered WAL records to the OS
+        and (optionally) to stable storage, regardless of sync policy."""
+        if self._wal is not None:
+            self._wal.flush()
+            if fsync:
+                os.fsync(self._wal.fileno())
+
     def close(self) -> None:
         if self._wal is not None:
+            self.wal_flush(fsync=True)
             self._wal.close()
             self._wal = None
 

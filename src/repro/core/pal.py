@@ -30,7 +30,15 @@ __all__ = [
     "IntervalMap",
     "EdgePartition",
     "GraphPAL",
+    "SortedRun",
     "build_partition",
+    "merge_sorted_runs",
+    "merge_runs",
+    "merge_runs_into_partition",
+    "partition_from_run",
+    "run_from_arrays",
+    "run_from_partition",
+    "sorted_run_index",
 ]
 
 
@@ -70,6 +78,12 @@ class IntervalMap:
         orig = np.asarray(orig, dtype=np.int64)
         p, ell = self.n_partitions, self.interval_len
         return (orig % p) * ell + (orig // p)
+
+    def to_internal_scalar(self, orig: int) -> int:
+        """Scalar reversible hash in pure Python — hot single-edge paths
+        avoid the per-call array round-trip of `to_internal`."""
+        return (orig % self.n_partitions) * self.interval_len \
+            + orig // self.n_partitions
 
     def to_original(self, intern):
         intern = np.asarray(intern, dtype=np.int64)
@@ -242,6 +256,291 @@ def build_partition(
         dst_ptr=dst_ptr,
         columns=columns,
     )
+
+
+# ---------------------------------------------------------------------------
+# Linear-time sorted merges (LSM write path, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+# A partition's edge-array is (src, dst)-sorted, and boolean-masked subsets
+# of it stay sorted. Merging a partition with an incoming run therefore
+# never needs to re-sort the big side: sort only the small run, compute the
+# interleave permutation with two binary searches, and rebuild every index
+# array (CSR over sources, CSC perm over destinations) from that
+# permutation in O(n) — no fresh `unique` / `argsort` over the merged data.
+
+#: Largest vertex-ID bound for which (src, dst) packs into one int64 key.
+_MAX_PACKED_BOUND = 3_037_000_499  # isqrt(2**63 - 1)
+
+
+def sorted_run_index(sorted_vals: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Sparse CSR (vertices, ptr) over an already-sorted key array in O(n) —
+    the linear replacement for `np.unique(..., return_index=True)` on data
+    whose order is known. Bitwise-identical to the unique-based build."""
+    n = int(sorted_vals.shape[0])
+    if n == 0:
+        return sorted_vals[:0].astype(np.int64), np.zeros(1, np.int64)
+    starts = np.concatenate(
+        [[0], np.flatnonzero(sorted_vals[1:] != sorted_vals[:-1]) + 1]
+    ).astype(np.int64)
+    vertices = sorted_vals[starts].astype(np.int64)
+    ptr = np.concatenate([starts, [n]]).astype(np.int64)
+    return vertices, ptr
+
+
+def merge_sorted_runs(
+    a_src: np.ndarray, a_dst: np.ndarray,
+    b_src: np.ndarray, b_dst: np.ndarray,
+    key_bound: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Stable two-way merge of two (src, dst)-sorted edge runs in O(nA+nB).
+
+    Returns `(pos_a, pos_b)`: the merged-array positions of A's and B's
+    elements, with A before B on equal keys — exactly the order
+    `np.lexsort((dst, src))` would give the concatenation [A, B], computed
+    from two `searchsorted` passes instead of an O(n log n) sort.
+
+    Requires `0 <= src, dst < key_bound <= _MAX_PACKED_BOUND` so the pair
+    packs losslessly into one monotone int64 key.
+    """
+    ka = _pack_keys(a_src, a_dst, key_bound)
+    kbq = _pack_keys(b_src, b_dst, key_bound)
+    return _merge_positions(ka, kbq)
+
+
+def _pack_keys(src: np.ndarray, dst: np.ndarray, bound: int) -> np.ndarray:
+    k = src * np.int64(bound)
+    k += dst  # in place: one temporary instead of two
+    return k
+
+
+_ARANGE_SCRATCH = np.empty(0, np.int64)
+
+
+def _arange(n: int) -> np.ndarray:
+    """Read-only view of [0, n) from a grow-only scratch — the merge path
+    needs consecutive-integer vectors constantly and never mutates them.
+    The scratch is marked non-writable so a view escaping through a public
+    return value (merge_sorted_runs' disjoint fast path) cannot be mutated
+    into corrupting later merges."""
+    global _ARANGE_SCRATCH
+    if _ARANGE_SCRATCH.shape[0] < n:
+        _ARANGE_SCRATCH = np.arange(max(n, 2 * _ARANGE_SCRATCH.shape[0]),
+                                    dtype=np.int64)
+        _ARANGE_SCRATCH.flags.writeable = False
+    return _ARANGE_SCRATCH[:n]
+
+
+def _merge_positions(ka: np.ndarray, kbq: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Merged positions of two sorted key arrays (A before B on ties). Only
+    the small side is binary-searched; the big side's shifts come from a
+    bincount + cumsum over the small side's insertion ranks — sequential
+    passes instead of nA random binary searches."""
+    nA, nB = ka.shape[0], kbq.shape[0]
+    if nA == 0 or nB == 0 or ka[-1] <= kbq[0]:  # disjoint: A wholly first
+        return _arange(nA), nA + _arange(nB)
+    if kbq[-1] < ka[0]:  # disjoint: B wholly first
+        return nB + _arange(nA), _arange(nB)
+    rank_b = np.searchsorted(ka, kbq, side="right")  # #{a <= b} per b
+    pos_b = rank_b + _arange(nB)
+    # b precedes a[i] iff rank_b <= i: a[i]'s shift is a step function that
+    # climbs at each insertion rank — expand it by run lengths, then add
+    # i in place (two big temporaries total, not five)
+    lengths = np.empty(nB + 1, np.int64)
+    lengths[0] = rank_b[0]
+    np.subtract(rank_b[1:], rank_b[:-1], out=lengths[1:nB])
+    lengths[nB] = nA - rank_b[-1]
+    pos_a = np.repeat(_arange(nB + 1), lengths)
+    pos_a += _arange(nA)
+    return pos_a, pos_b
+
+
+@dataclasses.dataclass
+class SortedRun:
+    """A (src, dst)-sorted edge run plus its stable dst-sort order — the
+    unit consumed by `merge_runs_into_partition`."""
+
+    src: np.ndarray                 # (n,) int64, (src, dst)-ascending
+    dst: np.ndarray                 # (n,) int64
+    etype: np.ndarray               # (n,) int8
+    columns: Dict[str, np.ndarray]  # positional
+    dst_order: np.ndarray           # (n,) stable argsort of dst
+    dst_sorted: Optional[np.ndarray] = None  # dst[dst_order], if already built
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.shape[0])
+
+
+def run_from_arrays(
+    src: np.ndarray,
+    dst: np.ndarray,
+    etype: Optional[np.ndarray] = None,
+    columns: Optional[Dict[str, np.ndarray]] = None,
+    presorted: bool = False,
+    key_bound: Optional[int] = None,
+) -> SortedRun:
+    """Sort a small incoming run (the only sort on the merge path). With
+    `presorted=True` (push-down merges: masked subsets of a sorted partition
+    stay sorted) the lexsort is skipped entirely; with `key_bound` set the
+    two-key lexsort collapses into one packed-key argsort."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    n = int(src.shape[0])
+    etype = (np.zeros(n, np.int8) if etype is None
+             else np.asarray(etype, dtype=np.int8))
+    columns = dict(columns or {})
+    if presorted or n == 0:
+        dst_order = np.argsort(dst, kind="stable").astype(np.int64)
+        return SortedRun(src=src, dst=dst, etype=etype, columns=columns,
+                         dst_order=dst_order)
+    if key_bound is not None and key_bound * key_bound * (n + 1) < 2 ** 63:
+        # (src, dst, position) packs into one int64, making every key
+        # unique: a plain value sort (no stable argsort, no index array)
+        # recovers both the stable (src, dst) order and — with the roles
+        # swapped — the stable dst order of the sorted run
+        k3 = _pack_keys(src, dst, key_bound) * np.int64(n)
+        k3 += _arange(n)
+        k4 = _pack_keys(dst, src, key_bound) * np.int64(n)
+        k4 += _arange(n)
+        k3.sort()
+        k4.sort()
+        order = k3 % n                      # original pos, (src, dst)-sorted
+        inv = np.empty(n, np.int64)
+        inv[order] = _arange(n)
+        dst_order = inv[k4 % n]             # ties resolved by (src, insertion)
+    else:
+        order = np.lexsort((dst, src))
+        dst_order = None
+    src, dst, etype = src[order], dst[order], etype[order]
+    columns = {k: np.asarray(v)[order] for k, v in columns.items()}
+    if dst_order is None:
+        dst_order = np.argsort(dst, kind="stable").astype(np.int64)
+    return SortedRun(src=src, dst=dst, etype=etype, columns=columns,
+                     dst_order=dst_order)
+
+
+def run_from_partition(
+    part: "EdgePartition",
+    live: Optional[np.ndarray] = None,
+    columns: Optional[Sequence[str]] = None,
+) -> SortedRun:
+    """View a partition's live edges as a SortedRun, reusing the stored
+    `dst_perm` instead of re-sorting: a masked subset of a (src, dst)-sorted
+    array stays sorted, and its stable dst order is the stored perm filtered
+    to live positions and renumbered — all O(n)."""
+    names = part.columns.keys() if columns is None else columns
+    if live is None:
+        cols = {k: part.columns[k] for k in names if k in part.columns}
+        return SortedRun(src=part.src, dst=part.dst, etype=part.etype,
+                         columns=cols,
+                         dst_order=np.asarray(part.dst_perm, np.int64))
+    new_pos = np.cumsum(live) - 1
+    keep = live[part.dst_perm]
+    dst_order = np.asarray(new_pos[part.dst_perm[keep]], np.int64)
+    cols = {k: part.columns[k][live] for k in names if k in part.columns}
+    return SortedRun(src=part.src[live], dst=part.dst[live],
+                     etype=part.etype[live], columns=cols,
+                     dst_order=dst_order)
+
+
+def merge_runs(a: SortedRun, b: SortedRun, key_bound: int,
+               column_dtypes: Optional[Dict[str, np.dtype]] = None) -> SortedRun:
+    """O(n) stable merge of two sorted runs into one SortedRun (A before B
+    on ties) — used when a flush overflows its partition and the combined
+    edges go straight to the children without materializing the partition."""
+    nA, nB = a.n_edges, b.n_edges
+    n = nA + nB
+    column_dtypes = dict(column_dtypes or {})
+    pos_a, pos_b = merge_sorted_runs(a.src, a.dst, b.src, b.dst, key_bound)
+
+    def scatter(xa, xb, dtype):
+        out = np.empty(n, dtype)
+        out[pos_a] = xa
+        out[pos_b] = xb
+        return out
+
+    columns = {}
+    for k, dt in column_dtypes.items():
+        xa = a.columns.get(k)
+        xb = b.columns.get(k)
+        columns[k] = scatter(
+            xa if xa is not None else np.zeros(nA, dt),
+            xb if xb is not None else np.zeros(nB, dt), dt)
+    # dst-sorted streams of each run, expressed in merged positions; keys
+    # (dst, merged position) are strictly increasing within each stream and
+    # globally distinct, so one more merge pass orders them. The merged
+    # dst_order is bitwise identical to np.argsort(dst, kind="stable").
+    ma = pos_a[a.dst_order]
+    mb = pos_b[b.dst_order]
+    da = a.dst[a.dst_order]
+    db = b.dst[b.dst_order]
+    qa, qb = _merge_positions(_pack_keys(da, ma, n), _pack_keys(db, mb, n))
+    dst_order = np.empty(n, np.int64)
+    dst_order[qa] = ma
+    dst_order[qb] = mb
+    # merged dst-sorted values by monotone scatter (no random gather)
+    d_sorted = np.empty(n, np.int64)
+    d_sorted[qa] = da
+    d_sorted[qb] = db
+    return SortedRun(
+        src=scatter(a.src, b.src, np.int64),
+        dst=scatter(a.dst, b.dst, np.int64),
+        etype=scatter(a.etype, b.etype, np.int8),
+        columns=columns,
+        dst_order=dst_order,
+        dst_sorted=d_sorted,
+    )
+
+
+def partition_from_run(
+    interval: Tuple[int, int],
+    run: SortedRun,
+    column_dtypes: Optional[Dict[str, np.dtype]] = None,
+) -> EdgePartition:
+    """Build a partition straight from a SortedRun (the empty-target merge
+    fast path) — indexes in O(n) off the run's existing order. The run's
+    arrays must be freshly owned (not views of a live buffer/partition)."""
+    n = run.n_edges
+    column_dtypes = dict(column_dtypes or {})
+    src_vertices, src_ptr = sorted_run_index(run.src)
+    d_sorted = (run.dst[run.dst_order] if run.dst_sorted is None
+                else run.dst_sorted)
+    dst_vertices, dst_ptr = sorted_run_index(d_sorted)
+    columns = {}
+    for k, dt in column_dtypes.items():
+        col = run.columns.get(k)
+        columns[k] = np.asarray(col, dt) if col is not None else np.zeros(n, dt)
+    return EdgePartition(
+        interval=interval,
+        src=run.src,
+        dst=run.dst,
+        etype=run.etype,
+        src_vertices=src_vertices,
+        src_ptr=src_ptr,
+        dst_perm=run.dst_order,
+        dst_vertices=dst_vertices,
+        dst_ptr=dst_ptr,
+        columns=columns,
+    )
+
+
+def merge_runs_into_partition(
+    interval: Tuple[int, int],
+    a: SortedRun,
+    b: SortedRun,
+    key_bound: int,
+    column_dtypes: Optional[Dict[str, np.dtype]] = None,
+) -> EdgePartition:
+    """O(n) merge of two sorted runs into a NEW immutable partition.
+
+    The edge-array is the stable (src, dst) interleave of A then B
+    (`merge_runs`); the CSR source index comes from run boundaries of the
+    merged (already sorted) src array and the CSC dst permutation from the
+    merged dst order (`partition_from_run`) — bitwise identical to a
+    from-scratch `build_partition`, without sorting.
+    """
+    return partition_from_run(
+        interval, merge_runs(a, b, key_bound, column_dtypes), column_dtypes)
 
 
 # ---------------------------------------------------------------------------

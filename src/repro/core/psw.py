@@ -184,29 +184,27 @@ def build_device_graph(g: GraphLike, with_window_plan: bool = True) -> DeviceGra
     src_o, dst_o = g.to_coo()
     src = np.asarray(iv.to_internal(src_o))
     dst = np.asarray(iv.to_internal(dst_o))
-    part = dst // L
-    # bucket edges per interval, canonically (dst, src)-sorted within the
-    # bucket — segment ops see monotone ids, and the arrays are independent
-    # of the source store's physical edge order, so an LSMTree.snapshot()
-    # is bit-identical to a bulk-built GraphPAL's DeviceGraph
-    buckets_src, buckets_dst = [], []
-    for i in range(P):
-        m = part == i
-        s, d = src[m], dst[m] - i * L
-        order = np.lexsort((s, d))
-        buckets_src.append(s[order])
-        buckets_dst.append(d[order])
-    e_max = max(1, max(b.shape[0] for b in buckets_src))
+    # ONE global (dst, src) lexsort canonically orders every bucket at once:
+    # sorting by dst groups the destination intervals contiguously and
+    # ascending, and within a bucket (dst, src)-order equals the per-bucket
+    # sort — bit-identical to sorting each bucket separately, so an
+    # LSMTree.snapshot() (which feeds the live staging views through
+    # `to_coo`) stays bit-identical to a bulk-built GraphPAL's DeviceGraph.
+    order = np.lexsort((src, dst))
+    s_sorted, d_sorted = src[order], dst[order]
+    counts = np.bincount(d_sorted // L, minlength=P)
+    bounds = np.concatenate([[0], np.cumsum(counts)])
+    e_max = max(1, int(counts.max(initial=0)))
     # round up to a lane-friendly multiple (TPU tiles are 128-wide)
     e_max = -(-e_max // 128) * 128
     S = np.zeros((P, e_max), np.int32)
     D = np.zeros((P, e_max), np.int32)
     M = np.zeros((P, e_max), bool)
     for i in range(P):
-        k = buckets_src[i].shape[0]
-        S[i, :k] = buckets_src[i]
-        D[i, :k] = buckets_dst[i]
-        M[i, :k] = True
+        a, b = int(bounds[i]), int(bounds[i + 1])
+        S[i, : b - a] = s_sorted[a:b]
+        D[i, : b - a] = d_sorted[a:b] - i * L
+        M[i, : b - a] = True
     outdeg = np.zeros(P * L, np.int32)
     np.add.at(outdeg, src, 1)
     dg = DeviceGraph(

@@ -156,6 +156,49 @@ class TestDurability:
         np.testing.assert_array_equal(np.asarray(iv.to_original(d[:200])), dst)
 
 
+    def test_wal_crash_recovery(self, tmp_path):
+        """Group-commit WAL: after insert_edge AND bulk insert_edges return,
+        a crash (no close(), no flush_all()) must lose nothing — replaying
+        the WAL reconstructs exactly the pre-crash live edge set."""
+        wal = str(tmp_path / "crash.wal")
+        t = make_tree(durable=True, wal_path=wal, buffer_cap=200)
+        rng = np.random.default_rng(7)
+        src = rng.integers(0, 10_000, 500)
+        dst = rng.integers(0, 10_000, 500)
+        t.insert_edges(src[:300], dst[:300])   # several flushes + merges
+        for i in range(300, 350):
+            t.insert_edge(int(src[i]), int(dst[i]))
+        t.insert_edges(src[350:], dst[350:])
+        pre_crash = sorted(zip(*map(list, t.to_coo())))
+        # simulate a crash: abandon the tree without close()/flush; the
+        # "commit" sync policy has already pushed every insert call to the OS
+        del t
+        s, d, ty = LSMTree.replay_wal(wal)
+        assert s.shape[0] == 500
+        iv = IntervalMap.for_capacity(10_000 - 1, 16)
+        recovered = LSMTree(iv, n_levels=3, branching=4, buffer_cap=200,
+                            max_partition_edges=2000)
+        recovered.insert_edges(np.asarray(iv.to_original(s)),
+                               np.asarray(iv.to_original(d)), etype=ty)
+        assert sorted(zip(*map(list, recovered.to_coo()))) == pre_crash
+
+    def test_wal_sync_policies(self, tmp_path):
+        for policy in ("always", "commit", "close"):
+            wal = str(tmp_path / f"{policy}.wal")
+            t = make_tree(durable=True, wal_path=wal, wal_sync=policy,
+                          buffer_cap=10**9)
+            t.insert_edges([1, 2], [3, 4])
+            t.insert_edge(5, 6)
+            if policy == "close":
+                t.wal_flush()  # explicit durability point
+            s, d, _ = LSMTree.replay_wal(wal)  # readable pre-close
+            assert s.shape[0] == 3
+            t.close()
+        with pytest.raises(AssertionError):
+            make_tree(durable=True, wal_path=str(tmp_path / "x.wal"),
+                      wal_sync="bogus")
+
+
 @given(st.integers(0, 2**31 - 1), st.integers(50, 400))
 @settings(max_examples=15, deadline=None)
 def test_property_lsm_equals_reference(seed, n_edges):

@@ -1,0 +1,198 @@
+"""Linear-merge write-path properties (ISSUE 2, DESIGN.md §6).
+
+The invariant behind every test: a partition produced by any chain of
+incremental `merge_sorted_runs`-based merges must be bitwise identical to a
+from-scratch `build_partition` re-sort of the same edges — src/dst/etype,
+the CSR/CSC index arrays, and the attribute columns.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import IntervalMap, LSMTree
+from repro.core.pal import (
+    build_partition,
+    merge_runs,
+    merge_runs_into_partition,
+    merge_sorted_runs,
+    run_from_arrays,
+    run_from_partition,
+    sorted_run_index,
+)
+
+INDEX_FIELDS = ("src", "dst", "etype", "src_vertices", "src_ptr",
+                "dst_perm", "dst_vertices", "dst_ptr")
+
+
+def assert_partition_bitwise(got, ref, context=""):
+    for name in INDEX_FIELDS:
+        a, b = getattr(got, name), getattr(ref, name)
+        assert a.dtype == b.dtype, (context, name, a.dtype, b.dtype)
+        assert np.array_equal(a, b), (context, name)
+    assert got.columns.keys() == ref.columns.keys(), context
+    for k in ref.columns:
+        assert np.array_equal(got.columns[k], ref.columns[k]), (context, k)
+
+
+class TestMergePrimitives:
+    def test_merge_sorted_runs_equals_lexsort(self):
+        rng = np.random.default_rng(0)
+        for trial in range(50):
+            n_a, n_b = rng.integers(0, 40, 2)
+            kb = int(rng.integers(2, 50))
+            a = np.sort(rng.integers(0, kb * kb, n_a))
+            b = np.sort(rng.integers(0, kb * kb, n_b))
+            a_s, a_d = a // kb, a % kb
+            b_s, b_d = b // kb, b % kb
+            pos_a, pos_b = merge_sorted_runs(a_s, a_d, b_s, b_d, kb)
+            merged = np.empty(n_a + n_b, np.int64)
+            merged[pos_a] = a
+            merged[pos_b] = b
+            ref = np.sort(np.concatenate([a, b]))
+            assert np.array_equal(merged, ref), trial
+            # stability: equal keys keep A (old) before B (new)
+            order = np.empty(n_a + n_b, np.int64)
+            order[pos_a] = np.arange(n_a)
+            order[pos_b] = n_a + np.arange(n_b)
+            ref_order = np.argsort(np.concatenate([a, b]), kind="stable")
+            assert np.array_equal(order, ref_order), trial
+
+    def test_sorted_run_index_equals_unique(self):
+        rng = np.random.default_rng(1)
+        for n in (0, 1, 5, 1000):
+            vals = np.sort(rng.integers(0, 50, n))
+            vertices, ptr = sorted_run_index(vals)
+            uv, first = np.unique(vals, return_index=True)
+            ref_ptr = np.concatenate([first, [n]]).astype(np.int64)
+            assert np.array_equal(vertices, uv)
+            assert np.array_equal(ptr, ref_ptr)
+
+    def test_merge_into_partition_bitwise_vs_rebuild(self):
+        rng = np.random.default_rng(2)
+        for trial in range(50):
+            n_a, n_b = rng.integers(0, 50, 2)
+            kb = int(rng.integers(4, 64))
+            a_s, a_d = rng.integers(0, kb, n_a), rng.integers(0, kb, n_a)
+            b_s, b_d = rng.integers(0, kb, n_b), rng.integers(0, kb, n_b)
+            wa = np.arange(n_a, dtype=np.float32)
+            wb = 1000 + np.arange(n_b, dtype=np.float32)
+            pa = build_partition((0, kb), a_s, a_d, columns={"w": wa})
+            ref = build_partition(
+                (0, kb),
+                np.concatenate([pa.src, np.asarray(b_s, np.int64)]),
+                np.concatenate([pa.dst, np.asarray(b_d, np.int64)]),
+                None,
+                {"w": np.concatenate([pa.columns["w"], wb])})
+            got = merge_runs_into_partition(
+                (0, kb), run_from_partition(pa),
+                run_from_arrays(b_s, b_d, columns={"w": wb}, key_bound=kb),
+                kb, {"w": np.float32})
+            assert_partition_bitwise(got, ref, f"trial {trial}")
+
+    def test_merge_with_tombstones_purges(self):
+        rng = np.random.default_rng(3)
+        kb = 32
+        a_s, a_d = rng.integers(0, kb, 40), rng.integers(0, kb, 40)
+        pa = build_partition((0, kb), a_s, a_d)
+        dead_pos = rng.choice(40, size=10, replace=False)
+        pa.tombstone(dead_pos)
+        live = ~pa.dead
+        b_s, b_d = rng.integers(0, kb, 15), rng.integers(0, kb, 15)
+        ref = build_partition(
+            (0, kb),
+            np.concatenate([pa.src[live], np.asarray(b_s, np.int64)]),
+            np.concatenate([pa.dst[live], np.asarray(b_d, np.int64)]))
+        got = merge_runs_into_partition(
+            (0, kb), run_from_partition(pa, live=live),
+            run_from_arrays(b_s, b_d, key_bound=kb), kb)
+        assert_partition_bitwise(got, ref, "tombstones")
+
+    def test_merge_runs_matches_partition_build(self):
+        """merge_runs (the overflow short-circuit) and
+        merge_runs_into_partition agree on the same inputs."""
+        rng = np.random.default_rng(4)
+        kb = 40
+        a_s, a_d = rng.integers(0, kb, 30), rng.integers(0, kb, 30)
+        b_s, b_d = rng.integers(0, kb, 20), rng.integers(0, kb, 20)
+        pa = build_partition((0, kb), a_s, a_d)
+        b = run_from_arrays(b_s, b_d, key_bound=kb)
+        part = merge_runs_into_partition((0, kb), run_from_partition(pa), b, kb)
+        combined = merge_runs(run_from_partition(pa), b, kb)
+        assert np.array_equal(combined.src, part.src)
+        assert np.array_equal(combined.dst, part.dst)
+        assert np.array_equal(combined.etype, part.etype)
+        assert np.array_equal(combined.dst_order, part.dst_perm)
+
+
+def _reference_edges(tree):
+    s, d = tree.to_coo()
+    return sorted(zip(s.tolist(), d.tolist()))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_property_lsm_partitions_equal_scratch_rebuild(seed):
+    """Across random insert/delete/flush interleavings, every partition the
+    incremental merge path produced is bitwise identical to a from-scratch
+    build_partition of its own edges — and the store's live edge set
+    matches a dense reference."""
+    rng = np.random.default_rng(seed)
+    iv = IntervalMap.for_capacity(10_000 - 1, 16)
+    t = LSMTree(iv, n_levels=3, branching=4,
+                buffer_cap=int(rng.integers(32, 200)),
+                max_partition_edges=int(rng.integers(150, 600)),
+                column_dtypes={"w": np.float32})
+    ref = []
+    serial = 0
+    for _ in range(int(rng.integers(2, 7))):
+        op = rng.integers(0, 10)
+        if op < 6:  # bulk insert
+            n = int(rng.integers(1, 400))
+            s = rng.integers(0, 10_000, n)
+            d = rng.integers(0, 10_000, n)
+            w = (serial + np.arange(n)).astype(np.float32)
+            serial += n
+            t.insert_edges(s, d, columns={"w": w})
+            ref += list(zip(s.tolist(), d.tolist()))
+        elif op < 8:  # single inserts
+            for _ in range(int(rng.integers(1, 30))):
+                s, d = int(rng.integers(0, 10_000)), int(rng.integers(0, 10_000))
+                t.insert_edge(s, d, w=float(serial))
+                serial += 1
+                ref.append((s, d))
+        elif op == 8 and ref:  # delete an existing edge everywhere
+            s, d = ref[int(rng.integers(0, len(ref)))]
+            if t.delete_edge(s, d):
+                ref = [e for e in ref if e != (s, d)]
+        else:
+            t.flush_all()
+    assert _reference_edges(t) == sorted(ref)
+    # the write-path invariant, partition by partition
+    for part in t.all_partitions():
+        rebuilt = build_partition(
+            part.interval, part.src.copy(), part.dst.copy(),
+            part.etype.copy(), {k: v.copy() for k, v in part.columns.items()})
+        assert_partition_bitwise(part, rebuilt)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(10, 300))
+@settings(max_examples=15, deadline=None)
+def test_property_columns_track_edges_through_merges(seed, n_edges):
+    """Attribute columns stay positionally attached to their edges through
+    arbitrary flush/push-down chains."""
+    rng = np.random.default_rng(seed)
+    iv = IntervalMap.for_capacity(2_000 - 1, 16)
+    t = LSMTree(iv, n_levels=3, branching=4, buffer_cap=48,
+                max_partition_edges=128, column_dtypes={"w": np.float64})
+    s = rng.integers(0, 2_000, n_edges)
+    d = rng.integers(0, 2_000, n_edges)
+    # value derivable from the edge itself (partitions hold internal IDs)
+    w = (np.asarray(iv.to_internal(s)) * 4099.0 + np.asarray(iv.to_internal(d)))
+    k = n_edges // 2
+    t.insert_edges(s[:k], d[:k], columns={"w": w[:k]})
+    t.insert_edges(s[k:], d[k:], columns={"w": w[k:]})
+    t.flush_all()
+    for part in t.all_partitions():
+        if part.n_edges:
+            np.testing.assert_array_equal(
+                part.columns["w"], part.src * 4099.0 + part.dst)
