@@ -1,0 +1,275 @@
+"""Out-of-core benchmark (ISSUE 3): serve a graph ≥4x the memory budget.
+
+Builds a `GraphDB` whose on-disk edge data is at least 4x a configured
+data-memory budget, then runs the full workload out of core — point
+queries, friends-of-friends, and a streaming PSW PageRank sweep — while
+tracking peak RSS. The budget applies to the DELTA over the post-import
+baseline (the Python + numpy + jax footprint is recorded separately and is
+not the paper's claim); the run FAILS (exit 1) if the peak delta exceeds
+the budget, which CI uses as a smoke gate.
+
+Also reproduces the paper's Figure 8c index comparison with REAL I/O:
+  * raw pointer array on disk      — block-granular binary search, every
+    probe a counted `os.pread`;
+  * sparse index                   — resident stride keys + ONE pread;
+  * Elias-Gamma chunked, resident  — compressed blobs pinned in RAM,
+    one chunk decoded per lookup, zero disk reads.
+
+Emits `experiments/bench/BENCH_disk.json`.
+"""
+from __future__ import annotations
+
+import ctypes
+import os
+import resource
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+
+def _pin_mmap_threshold() -> bool:
+    """glibc's dynamic M_MMAP_THRESHOLD retains freed multi-MB merge
+    scratch in the heap (RSS creep of tens of MB that has nothing to do
+    with the storage tier). Pin the threshold so large temporaries always
+    come from (and return to) mmap."""
+    try:
+        libc = ctypes.CDLL("libc.so.6", use_errno=True)
+        return libc.mallopt(-3, 256 * 1024) == 1  # M_MMAP_THRESHOLD
+    except OSError:
+        return False
+
+from repro.core import GraphDB, GammaChunkedIndex
+from repro.core.disk import RawDiskIndex, SparseDiskIndex
+from repro.core.psw import pagerank_out_of_core
+from repro.core.query import friends_of_friends
+
+from .common import save, timer
+
+
+def rss_bytes() -> int:
+    """Peak RSS so far (ru_maxrss is KB on Linux)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+
+
+def current_rss_bytes() -> int:
+    with open("/proc/self/status") as f:
+        for line in f:
+            if line.startswith("VmRSS:"):
+                return int(line.split()[1]) * 1024
+    return rss_bytes()
+
+
+def run(scale: float = 1.0, budget_mb: float = None, keep_dir: str = None):
+    # data budget: 96 MB at scale 1.0, floored at 96 MB — below that the
+    # fixed cost of the process itself (allocator retention from merge
+    # scratch, ~40 MB measured) would dominate and the 4x claim would be
+    # about numpy temporaries, not the storage tier
+    budget = int(max(96.0, (budget_mb if budget_mb is not None
+                            else 96.0 * scale)) * 1e6)
+    pinned = _pin_mmap_threshold()
+    baseline = rss_bytes()
+
+    workdir = keep_dir or tempfile.mkdtemp(prefix="bench_disk_")
+    dbdir = os.path.join(workdir, "db")
+    results = {"budget_bytes": budget, "baseline_rss_bytes": baseline,
+               "mmap_threshold_pinned": pinned}
+
+    # -- out-of-core build ----------------------------------------------------
+    # a partition file costs ~41 B/edge (src+dst+perm int64, etype, raw +
+    # gamma pointer copies); pick n_edges so the on-disk store is >=4x budget
+    n_edges = int(4.2 * budget / 41)
+    # twitter-like density (~30 edges/vertex) keeps the O(V) PageRank state
+    # a small fraction of the budget, as in the paper's §6.1.1 model
+    max_id = max(100_000, n_edges // 30)
+    chunk = 100_000
+    # merge transients hold ~10 array copies of one partition — cap
+    # partition size so the largest merge fits comfortably in the budget
+    max_part = max(50_000, int(budget / (30 * 41)))
+    db = GraphDB.create(
+        dbdir, max_id=max_id - 1, n_partitions=64, n_levels=3, branching=4,
+        buffer_cap=min(chunk, max_part // 2), max_partition_edges=max_part,
+        persist_min_edges=4096, resident_budget_bytes=budget // 8)
+
+    rng = np.random.default_rng(7)
+    probes = []  # (src, dst) pairs re-verified at every stage
+    t_build = time.perf_counter()
+    inserted = 0
+    while inserted < n_edges:
+        m = min(chunk, n_edges - inserted)
+        src = rng.integers(0, max_id, m)
+        dst = rng.integers(0, max_id, m)
+        db.insert_edges(src, dst)
+        if len(probes) < 500:
+            probes.extend(zip(src[:25].tolist(), dst[:25].tolist()))
+        inserted += m
+        if inserted % (chunk * 10) == 0:
+            db.checkpoint()  # bounds store garbage + WAL-covered RAM state
+    db.checkpoint()
+    results["build"] = {
+        "n_edges": inserted,
+        "seconds": time.perf_counter() - t_build,
+        "disk_partitions": len(db._disk_partitions()),
+        "on_disk_bytes": sum(p.nbytes() for p in db._disk_partitions()),
+        "resident": db.resident_nbytes(),
+        "peak_rss_delta_bytes": rss_bytes() - baseline,
+    }
+    on_disk = results["build"]["on_disk_bytes"]
+    print(f"  built {inserted} edges, {on_disk/1e6:.0f} MB on disk "
+          f"({on_disk/max(budget,1):.1f}x budget), peak RSS delta "
+          f"{results['build']['peak_rss_delta_bytes']/1e6:.0f} MB")
+
+    def verify_probes(tag):
+        """Every recorded (s, d) edge must appear in s's out-neighbors AND
+        d's in-neighbors — checked through the engine's batched path (the
+        scalar per-partition path is exercised by the tests; per-probe
+        scalar loops over 80+ slabs would dominate the bench)."""
+        eng_v = db.storage_engine()
+        ps = np.asarray([s for s, _ in probes], np.int64)
+        pd = np.asarray([d for _, d in probes], np.int64)
+        ok = 0
+        vals, offs = eng_v.out_neighbors_batch(ps)
+        ok_out = [pd[i] in vals[offs[i]:offs[i + 1]] for i in range(len(ps))]
+        vals, offs = eng_v.in_neighbors_batch(pd)
+        ok_in = [ps[i] in vals[offs[i]:offs[i + 1]] for i in range(len(pd))]
+        ok = int(np.sum(np.asarray(ok_out) & np.asarray(ok_in)))
+        assert ok == len(probes), f"{tag}: {len(probes)-ok} probes missing"
+        return ok
+
+    # -- point queries --------------------------------------------------------
+    db.evict()
+    db.io.block_reads = db.io.bytes_read = db.io.gathers = 0
+    eng = db.storage_engine()
+    qs = rng.integers(0, max_id, 2000)
+    times = []
+    with timer(times):
+        vals, offsets = eng.out_neighbors_batch(qs)
+    out_t = times[-1]
+    with timer(times):
+        vals_in, off_in = eng.in_neighbors_batch(qs)
+    results["queries"] = {
+        "n_queries": int(qs.shape[0]),
+        "out_batch_seconds": out_t,
+        "in_batch_seconds": times[-1],
+        "io": db.io.snapshot(),
+        "probes_verified": verify_probes("queries"),
+    }
+    db.evict()
+
+    # -- friends of friends ---------------------------------------------------
+    t0 = time.perf_counter()
+    fof_sizes = []
+    n_fof = 50
+    for v in qs[:n_fof]:
+        fof = friends_of_friends(eng, int(v))
+        fof_sizes.append(len(fof))
+    results["fof"] = {
+        "n_queries": n_fof,
+        "seconds": time.perf_counter() - t0,
+        "mean_fof_size": float(np.mean(fof_sizes)),
+    }
+    db.evict()
+
+    # -- streaming PSW sweep --------------------------------------------------
+    t0 = time.perf_counter()
+    ranks = pagerank_out_of_core(db, n_iters=2, evict_each=True)
+    results["psw_sweep"] = {
+        "n_iters": 2,
+        "seconds": time.perf_counter() - t0,
+        "rank_sum": float(ranks.sum()),
+        "peak_rss_delta_bytes": rss_bytes() - baseline,
+    }
+
+    # -- Figure 8c: index variants with real block reads ----------------------
+    big = max(db._disk_partitions(), key=lambda p: p.n_edges)
+    off, dt, n_keys = big._section_spec("src_vertices_raw")
+    keys = np.array(big.src_vertices)
+    lookups = rng.choice(keys, size=min(2000, keys.shape[0]), replace=True)
+    fig8 = {}
+    raw = RawDiskIndex(big.path, off, n_keys)
+    sparse = SparseDiskIndex(big.path, off, n_keys, stride=512)
+    gamma = GammaChunkedIndex(keys, chunk=1024)
+    for name, idx in (("raw_on_disk", raw), ("sparse_index", sparse),
+                      ("elias_gamma_resident", gamma)):
+        t0 = time.perf_counter()
+        for k in lookups:
+            assert idx.lookup(int(k)) >= 0
+        dt_s = time.perf_counter() - t0
+        fig8[name] = {
+            "n_keys": int(n_keys),
+            "lookups": int(lookups.shape[0]),
+            "seconds": dt_s,
+            "us_per_lookup": dt_s / lookups.shape[0] * 1e6,
+            "resident_bytes": int(idx.nbytes()),
+            "block_reads": int(getattr(idx, "block_reads", 0)),
+        }
+    fig8["raw_resident_bytes_for_reference"] = int(keys.nbytes)
+    results["figure8c"] = fig8
+    raw.close()
+    sparse.close()
+    del keys, big
+    db.evict()
+
+    # -- close → reopen must be bitwise-identical ----------------------------
+    sample = np.asarray(qs[:200], np.int64)
+    pre = db.storage_engine().out_neighbors_batch(sample)
+    db.close()
+    db = GraphDB.open(dbdir)
+    post = db.storage_engine().out_neighbors_batch(sample)
+    assert np.array_equal(pre[0], post[0]) and np.array_equal(pre[1], post[1]), \
+        "reopen changed query results"
+    verify_probes("reopen")
+    # crash: insert without checkpoint, copy dir, recover from WAL tail.
+    # The live db is closed BEFORE the copy is opened — one store resident
+    # at a time, and the copy must recover from the files alone anyway.
+    s2 = rng.integers(0, max_id, 20_000)
+    d2 = rng.integers(0, max_id, 20_000)
+    db.insert_edges(s2, d2)
+    pre_n = db.n_edges
+    expect_nbrs = np.sort(db.out_neighbors(int(s2[0]))).tolist()
+    db.tree.wal_flush()
+    crash_dir = os.path.join(workdir, "crash")
+    shutil.copytree(dbdir, crash_dir)
+    db.close()
+    db = GraphDB.open(crash_dir)
+    assert db.n_edges == pre_n, "crash recovery lost edges"
+    assert np.sort(db.out_neighbors(int(s2[0]))).tolist() == expect_nbrs
+    results["recovery"] = {"reopen_bitwise": True, "crash_edges": int(pre_n)}
+    print("  reopen + crash recovery verified")
+
+    # -- verdict --------------------------------------------------------------
+    peak_delta = rss_bytes() - baseline
+    results["peak_rss_delta_bytes"] = peak_delta
+    results["peak_rss_bytes"] = rss_bytes()
+    results["under_budget"] = bool(peak_delta <= budget)
+    results["disk_to_budget_ratio"] = on_disk / max(budget, 1)
+    save("BENCH_disk", results)
+
+    print("— BENCH_disk —")
+    print(f"  on-disk {on_disk/1e6:.0f} MB vs budget {budget/1e6:.0f} MB "
+          f"({results['disk_to_budget_ratio']:.1f}x)")
+    print(f"  peak RSS delta {peak_delta/1e6:.0f} MB "
+          f"({'UNDER' if results['under_budget'] else 'OVER'} budget)")
+    for name, row in fig8.items():
+        if isinstance(row, dict):
+            print(f"  {name}: {row['us_per_lookup']:.1f} us/lookup, "
+                  f"{row['resident_bytes']/1e3:.0f} KB resident, "
+                  f"{row['block_reads']} block reads")
+    db.close()
+    if keep_dir is None:
+        shutil.rmtree(workdir)
+    if not results["under_budget"]:
+        print("FAIL: peak RSS delta exceeded the memory budget", file=sys.stderr)
+        raise SystemExit(1)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--budget-mb", type=float, default=None)
+    args = ap.parse_args()
+    run(scale=args.scale, budget_mb=args.budget_mb)

@@ -149,34 +149,68 @@ class CheckpointManager:
 # ---------------------------------------------------------------------------
 def _partition_digest(part) -> str:
     h = hashlib.sha1()
-    h.update(part.src.tobytes())
-    h.update(part.dst.tobytes())
+    h.update(np.ascontiguousarray(part.src).tobytes())
+    h.update(np.ascontiguousarray(part.dst).tobytes())
     return h.hexdigest()[:16]
 
 
 def save_lsm(tree, directory: str) -> Dict[str, Any]:
-    """Write LSM partitions not already present; returns the graph manifest."""
+    """Write LSM partitions not already present; returns the graph manifest.
+
+    Partitions that already live in a content-addressed `PartitionStore`
+    (a `GraphDB`'s disk tier) are HARD-LINKED into the checkpoint directory
+    instead of re-serialized — the checkpoint is then a set of refs into
+    the same immutable files, costing no data copy and surviving store GC
+    (the inode lives until the last link drops). RAM partitions fall back
+    to the npz path. Accepts a GraphDB or a bare LSMTree."""
+    from ..core.disk import DiskPartition
+
+    if hasattr(tree, "tree"):  # a GraphDB quacks like its tree
+        tree = tree.tree
     os.makedirs(directory, exist_ok=True)
     manifest = {"levels": [], "intervals": {
         "n_partitions": tree.intervals.n_partitions,
         "interval_len": tree.intervals.interval_len,
-    }, "written": 0, "reused": 0}
+    }, "written": 0, "reused": 0, "linked": 0}
     for li, level in enumerate(tree.levels):
         lvl = []
         for pi, part in enumerate(level):
+            if isinstance(part, DiskPartition) and not part.dirty:
+                fname = os.path.basename(part.path)
+                fpath = os.path.join(directory, fname)
+                if not os.path.exists(fpath):
+                    try:
+                        os.link(part.path, fpath)
+                    except OSError:
+                        shutil.copy2(part.path, fpath)
+                    manifest["linked"] += 1
+                else:
+                    manifest["reused"] += 1
+                entry = {"file": fname, "interval": list(part.interval),
+                         "n_edges": part.n_edges, "format": "pal"}
+                if part.dead is not None and part.dead.any():
+                    dname = fname[:-4] + ".dead.npy"
+                    with open(os.path.join(directory, dname), "wb") as df:
+                        np.save(df, np.asarray(part.dead))
+                    entry["dead_file"] = dname
+                lvl.append(entry)
+                continue
             digest = _partition_digest(part)
             fname = f"part_{digest}.npz"
             fpath = os.path.join(directory, fname)
             if not os.path.exists(fpath):
-                cols = {f"col_{k}": v for k, v in part.columns.items()}
-                np.savez(fpath, src=part.src, dst=part.dst, etype=part.etype,
+                cols = {f"col_{k}": np.asarray(v)
+                        for k, v in part.columns.items()}
+                np.savez(fpath, src=np.asarray(part.src),
+                         dst=np.asarray(part.dst),
+                         etype=np.asarray(part.etype),
                          dead=(part.dead if part.dead is not None
                                else np.zeros(0, bool)), **cols)
                 manifest["written"] += 1
             else:
                 manifest["reused"] += 1
             lvl.append({"file": fname, "interval": list(part.interval),
-                        "n_edges": part.n_edges})
+                        "n_edges": part.n_edges, "format": "npz"})
         manifest["levels"].append(lvl)
     tmp = os.path.join(directory, "GRAPH_MANIFEST.json.tmp")
     with open(tmp, "w") as f:
@@ -186,7 +220,8 @@ def save_lsm(tree, directory: str) -> Dict[str, Any]:
 
 
 def restore_lsm(directory: str, column_dtypes=None, **lsm_kwargs):
-    """Rebuild an LSMTree from a graph manifest."""
+    """Rebuild an LSMTree from a graph manifest (npz or linked .pal files)."""
+    from ..core.disk import open_partition_file
     from ..core.lsm import LSMTree
     from ..core.pal import IntervalMap, build_partition
 
@@ -202,7 +237,15 @@ def restore_lsm(directory: str, column_dtypes=None, **lsm_kwargs):
                    column_dtypes=column_dtypes or {}, **lsm_kwargs)
     for li, lvl in enumerate(manifest["levels"]):
         for pi, entry in enumerate(lvl):
-            data = np.load(os.path.join(directory, entry["file"]))
+            fpath = os.path.join(directory, entry["file"])
+            if entry.get("format", "npz") == "pal":
+                part = open_partition_file(fpath)
+                if entry.get("dead_file"):
+                    part.dead = np.load(
+                        os.path.join(directory, entry["dead_file"]))
+                tree.levels[li][pi] = part
+                continue
+            data = np.load(fpath)
             cols = {k[4:]: data[k] for k in data.files if k.startswith("col_")}
             part = build_partition(tuple(entry["interval"]), data["src"],
                                    data["dst"], data["etype"], cols,

@@ -14,6 +14,17 @@ from .pal import (
     sorted_run_index,
 )
 from .lsm import BufferStaging, EdgeBuffer, LSMStats, LSMTree
+from .disk import (
+    DiskPartition,
+    GraphDB,
+    IOStats,
+    PartitionStore,
+    RawDiskIndex,
+    SparseDiskIndex,
+    open_partition_file,
+    partition_digest,
+    write_partition_file,
+)
 from .engine import (
     EdgeBatch,
     EdgeChunk,
@@ -29,15 +40,21 @@ from .psw import (
     edge_centric_sweep_arrays,
     pagerank_device,
     pagerank_host,
+    pagerank_out_of_core,
     psw_sweep_host,
+    stream_interval_buckets,
 )
 from .query import Frontier, bfs, friends_of_friends, shortest_path, traverse_out
 from .codec import (
+    BlockedGammaPointer,
+    GammaChunkedIndex,
     SparseIndex,
     decode_monotonic,
+    decode_monotonic_blocked,
     elias_gamma_decode,
     elias_gamma_encode,
     encode_monotonic,
+    encode_monotonic_blocked,
 )
 
 __all__ = [
@@ -50,8 +67,13 @@ __all__ = [
     "as_engine",
     "DeviceGraph", "build_device_graph", "edge_centric_sweep",
     "edge_centric_sweep_arrays", "pagerank_device", "pagerank_host",
-    "psw_sweep_host",
+    "pagerank_out_of_core", "psw_sweep_host", "stream_interval_buckets",
     "Frontier", "bfs", "friends_of_friends", "shortest_path", "traverse_out",
-    "SparseIndex", "decode_monotonic", "elias_gamma_decode",
-    "elias_gamma_encode", "encode_monotonic",
+    "BlockedGammaPointer", "GammaChunkedIndex", "SparseIndex",
+    "decode_monotonic",
+    "decode_monotonic_blocked", "elias_gamma_decode",
+    "elias_gamma_encode", "encode_monotonic", "encode_monotonic_blocked",
+    "DiskPartition", "GraphDB", "IOStats", "PartitionStore",
+    "RawDiskIndex", "SparseDiskIndex", "open_partition_file",
+    "partition_digest", "write_partition_file",
 ]

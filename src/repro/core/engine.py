@@ -109,19 +109,39 @@ class _PartitionSlab:
     def __init__(self, part):
         self.part = part
         self.interval = part.interval  # [lo, hi) of internal destinations
+        # disk tier (core/disk.py): mmap-backed partitions carry IOStats;
+        # every gather from the edge arrays below is a real page-cache read
+        # of only the hit ranges, and we account the blocks it touches
+        self.io = getattr(part, "io", None)
 
     def positions_batch(self, vis: np.ndarray,
                         direction: str) -> Tuple[np.ndarray, np.ndarray]:
-        """(edge-array positions, query-owner index) of live adjacent edges."""
+        """(edge-array positions, query-owner index) of live adjacent edges.
+        The searchsorted runs against the RAM-resident pointer index; only
+        the hit ranges are then read from the (possibly mmapped) edge
+        arrays."""
         part = self.part
         if part.n_edges == 0:
             return np.empty(0, np.int64), np.empty(0, np.int64)
-        if direction == "out":
+        # disk partitions resolve ranges against their COMPRESSED resident
+        # index (chunked decode of only the touched blocks) instead of the
+        # fully-decoded pointer arrays
+        lookup = getattr(part, "lookup_adj_ranges", None)
+        ranges = lookup(vis, direction) if lookup is not None else None
+        if ranges is not None:
+            hit, starts, ends = ranges
+        elif direction == "out":
             hit, ki = _searchsorted_ranges(part.src_vertices, vis)
-            pos, owner = _expand_ranges(part.src_ptr[ki], part.src_ptr[ki + 1], hit)
+            starts, ends = part.src_ptr[ki], part.src_ptr[ki + 1]
         else:
             hit, ki = _searchsorted_ranges(part.dst_vertices, vis)
-            perm_pos, owner = _expand_ranges(part.dst_ptr[ki], part.dst_ptr[ki + 1], hit)
+            starts, ends = part.dst_ptr[ki], part.dst_ptr[ki + 1]
+        if direction == "out":
+            pos, owner = _expand_ranges(starts, ends, hit)
+        else:
+            perm_pos, owner = _expand_ranges(starts, ends, hit)
+            if self.io is not None:
+                self.io.account_gather(perm_pos, 8)  # dst_perm read
             pos = np.asarray(part.dst_perm[perm_pos], np.int64)
         if part.dead is not None and pos.size:
             live = ~part.dead[pos]
@@ -129,18 +149,26 @@ class _PartitionSlab:
         return pos, owner
 
     def src_at(self, pos):
+        if self.io is not None:
+            self.io.account_gather(pos, 8)
         return self.part.src[pos]
 
     def dst_at(self, pos):
+        if self.io is not None:
+            self.io.account_gather(pos, 8)
         return self.part.dst[pos]
 
     def etype_at(self, pos):
+        if self.io is not None:
+            self.io.account_gather(pos, 1)
         return self.part.etype[pos]
 
     def column_at(self, name, pos, dtype):
         col = self.part.columns.get(name)
         if col is None:
             return np.zeros(pos.shape[0], dtype)
+        if self.io is not None:
+            self.io.account_gather(pos, col.dtype.itemsize)
         return col[pos]
 
     def column_names(self):
@@ -154,6 +182,8 @@ class _PartitionSlab:
         part = self.part
         if part.n_edges == 0:
             return None
+        if self.io is not None:  # sequential whole-slab scan: src + dst
+            self.io.account_range(0, part.n_edges, 16)
         if part.dead is None or not part.dead.any():
             return EdgeChunk(part.src, part.dst)
         live = ~part.dead
@@ -275,6 +305,11 @@ class StorageEngine:
         vs = np.asarray(vs, dtype=np.int64).ravel()
         iv = self.intervals
         vis = np.asarray(iv.to_internal(vs))
+        # disk tier: a batch probes EVERY slab, so a store with a residency
+        # budget can release each slab's decoded index/mmaps as soon as the
+        # batch is done with it (all reads for a slab happen in its loop
+        # iteration; the gathered results are copies)
+        release = getattr(self.graph, "release_slab", None)
         vals, owners = [], []
         for slab in self._slabs():
             pos, owner = _slab_positions(slab, vis, direction)
@@ -282,6 +317,10 @@ class StorageEngine:
                 vals.append(slab.dst_at(pos) if direction == "out"
                             else slab.src_at(pos))
                 owners.append(owner)
+            if release is not None:
+                part = getattr(slab, "part", None)
+                if part is not None:
+                    release(part)
         order, _, offsets = _group(vals, owners, vs.shape[0])
         if order.size == 0:
             return np.empty(0, np.int64), offsets
@@ -332,6 +371,12 @@ class StorageEngine:
             dt = dtype_of(k)
             columns[k] = np.concatenate(
                 [s.column_at(k, p, dt) for s, p, _ in hits])[order]
+        release = getattr(self.graph, "release_slab", None)
+        if release is not None:
+            for slab in slabs:
+                part = getattr(slab, "part", None)
+                if part is not None:
+                    release(part)
         return EdgeBatch(
             vs, offsets,
             np.asarray(iv.to_original(src), np.int64),

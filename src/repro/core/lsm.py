@@ -22,9 +22,11 @@ Immutable edge partitions are stacked in a log-structured merge tree:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import os
 import struct
-from typing import Dict, List, Optional, Sequence, Tuple
+import tempfile
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -217,6 +219,16 @@ class EdgeBuffer:
         return order[a:b]
 
 
+_WAL_COUNTER = itertools.count()
+
+
+def _default_wal_path() -> str:
+    """Per-instance WAL path: pid + a process-wide counter, never shared."""
+    return os.path.join(
+        tempfile.gettempdir(),
+        f"graphchi_db_{os.getpid()}_{next(_WAL_COUNTER)}.wal")
+
+
 @dataclasses.dataclass
 class LSMStats:
     inserts: int = 0
@@ -247,6 +259,8 @@ class LSMTree:
         durable: bool = False,
         wal_path: Optional[str] = None,
         wal_sync: str = "commit",
+        partition_sink: Optional[
+            Callable[[int, int, EdgePartition], EdgePartition]] = None,
     ):
         p = intervals.n_partitions
         assert p % (branching ** (n_levels - 1)) == 0, (
@@ -292,9 +306,17 @@ class LSMTree:
         assert wal_sync in ("always", "commit", "close"), wal_sync
         self.wal_sync = wal_sync
         self._wal = None
+        self.wal_path: Optional[str] = None
         if durable:
-            self._wal = open(wal_path or "/tmp/graphchi_db.wal", "ab",
-                             buffering=1 << 20)
+            # every tree gets its OWN log: the old global /tmp default let
+            # two trees in one process interleave records, and replay_wal
+            # then resurrected foreign edges (regression-tested)
+            self.wal_path = wal_path or _default_wal_path()
+            self._wal = open(self.wal_path, "ab", buffering=1 << 20)
+        # disk tier hook (core/disk.py): every partition a merge installs
+        # is offered to the sink, which may persist it and hand back an
+        # mmap-backed replacement
+        self.partition_sink = partition_sink
         self._engine = None
 
     def _wal_append(self, payload: bytes) -> None:
@@ -370,6 +392,21 @@ class LSMTree:
         return self._buffered
 
     # -- merges -------------------------------------------------------------------
+    def _install(self, level: int, j: int, part: EdgePartition) -> None:
+        """Every partition a merge produces is installed through here so the
+        disk tier (GraphDB's partition_sink) can flush it to a file and
+        substitute an mmap-backed view. The replaced partition's mappings
+        are dropped eagerly — its object may linger briefly in a GC cycle,
+        but its pages must leave RSS now."""
+        if self.partition_sink is not None:
+            part = self.partition_sink(level, j, part)
+        old = self.levels[level][j]
+        self.levels[level][j] = part
+        if old is not part:
+            evict = getattr(old, "evict", None)
+            if evict is not None:
+                evict()
+
     def _empty_partition(self, interval) -> EdgePartition:
         return build_partition(
             interval, np.empty(0, np.int64), np.empty(0, np.int64),
@@ -394,8 +431,8 @@ class LSMTree:
                                   key_bound=self.intervals.max_vertices)
             self._absorb(0, j, run)
         else:
-            self.levels[0][j] = self._merge_into(
-                self.levels[0][j], bsrc, bdst, btype, bcols)
+            self._install(0, j, self._merge_into(
+                self.levels[0][j], bsrc, bdst, btype, bcols))
             self._maybe_pushdown(0, j)
 
     def _absorb(self, level: int, j: int, run: "SortedRun") -> None:
@@ -420,9 +457,9 @@ class LSMTree:
             self.levels[level][j] = self._empty_partition(part.interval)
             self._distribute_to_children(level, combined)
             return
-        self.levels[level][j] = self._merge_into(
+        self._install(level, j, self._merge_into(
             part, run.src, run.dst, run.etype, run.columns,
-            presorted=True, run=run)
+            presorted=True, run=run))
         self._maybe_pushdown(level, j)
 
     def _merge_into(self, part: EdgePartition, src, dst, etype, cols,
@@ -692,6 +729,15 @@ class LSMTree:
 
     # -- WAL recovery (paper §7.3 durability) ----------------------------------------
     @staticmethod
-    def replay_wal(path: str) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        raw = np.fromfile(path, dtype=np.dtype([("s", "<i8"), ("d", "<i8"), ("t", "i1")]))
+    def replay_wal(path: str,
+                   offset: int = 0) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Decode WAL records from byte `offset` on — a GraphDB manifest
+        records the offset its persisted partitions cover, so recovery
+        replays only the tail."""
+        dt = np.dtype([("s", "<i8"), ("d", "<i8"), ("t", "i1")])
+        with open(path, "rb") as f:
+            f.seek(offset)
+            buf = f.read()
+        n = len(buf) // dt.itemsize  # a torn trailing record is dropped
+        raw = np.frombuffer(buf[: n * dt.itemsize], dtype=dt)
         return raw["s"], raw["d"], raw["t"]

@@ -48,8 +48,10 @@ __all__ = [
     "build_device_graph",
     "edge_centric_sweep",
     "pagerank_device",
+    "pagerank_out_of_core",
     "psw_sweep_host",
     "pagerank_host",
+    "stream_interval_buckets",
 ]
 
 
@@ -147,6 +149,106 @@ def pagerank_host(g: GraphLike, n_iters: int = 5, damping: float = 0.85) -> np.n
 
     for _ in range(n_iters):
         psw_sweep_host(g, sweep)
+    return ranks
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core PSW (disk tier, paper §6.1): stream buckets, never materialize
+# ---------------------------------------------------------------------------
+def stream_interval_buckets(g: GraphLike, evict_each: bool = False):
+    """Yield `(i, src, dst)` per destination interval, internal IDs,
+    canonically (dst, src)-sorted — exactly the rows `build_device_graph`
+    would pack, produced ONE interval at a time so the whole edge set is
+    never resident.
+
+    Per interval, each owning partition contributes one contiguous slice of
+    its dst-sorted permutation (read from mmap if the partition is
+    disk-backed), buffers contribute a masked scan, and one small stable
+    lexsort canonicalizes the bucket. Chunk concatenation follows the
+    `to_coo` order, so the per-bucket sort is bit-identical to the global
+    lexsort restricted to the bucket (property-tested). With `evict_each`,
+    disk partitions drop their mappings after every bucket, bounding
+    resident memory by one bucket + the pinned indexes.
+    """
+    iv = g.intervals
+    parts = _host_partitions(g)
+    buffers = getattr(g, "buffers", None) or []
+    for i in range(iv.n_partitions):
+        lo, hi = iv.interval_range(i)
+        chunks_s: list = []
+        chunks_d: list = []
+        for part in parts:
+            plo, phi = part.interval
+            if phi <= lo or plo >= hi or part.n_edges == 0:
+                continue
+            # disk partitions resolve the bucket's perm range against the
+            # compressed resident index; RAM partitions use the arrays
+            bounds = getattr(part, "dst_ptr_bounds", None)
+            res = bounds(lo, hi) if bounds is not None else None
+            if res is not None:
+                pa, pb = res
+            else:
+                dv = part.dst_vertices
+                a = int(np.searchsorted(dv, lo, side="left"))
+                b = int(np.searchsorted(dv, hi, side="left"))
+                pa, pb = int(part.dst_ptr[a]), int(part.dst_ptr[b])
+            if pb == pa:
+                continue
+            # perm slice → ascending edge-array positions = to_coo order
+            pos = np.sort(np.asarray(part.dst_perm[pa:pb], np.int64))
+            if part.dead is not None:
+                pos = pos[~part.dead[pos]]
+            if pos.size:
+                chunks_s.append(np.asarray(part.src[pos], np.int64))
+                chunks_d.append(np.asarray(part.dst[pos], np.int64))
+        for buf in buffers:
+            if len(buf):
+                st = buf.staging()
+                m = (st.dst >= lo) & (st.dst < hi)
+                if m.any():
+                    chunks_s.append(st.src[m].astype(np.int64))
+                    chunks_d.append(st.dst[m].astype(np.int64))
+        if chunks_s:
+            s = np.concatenate(chunks_s)
+            d = np.concatenate(chunks_d)
+            order = np.lexsort((s, d))
+            s, d = s[order], d[order]
+        else:
+            s = np.empty(0, np.int64)
+            d = np.empty(0, np.int64)
+        yield i, s, d
+        if evict_each:
+            for part in parts:
+                ev = getattr(part, "evict", None)
+                if ev is not None:
+                    ev()
+
+
+def pagerank_out_of_core(g: GraphLike, n_iters: int = 5,
+                         damping: float = 0.85,
+                         evict_each: bool = True) -> np.ndarray:
+    """Edge-centric PageRank streaming one destination-interval bucket at a
+    time from the store — the paper's §6.1.1 model executed out-of-core:
+    O(V) vertex state resident, one bucket of edges in flight, everything
+    else on disk. Same synchronous iteration as `pagerank_device` (verified
+    to agree in the tests). Returns ranks indexed by internal ID."""
+    iv = g.intervals
+    n = iv.max_vertices
+    outdeg = np.zeros(n, np.int64)
+    for i, s, d in stream_interval_buckets(g, evict_each=evict_each):
+        if s.size:
+            outdeg += np.bincount(s, minlength=n)
+    ranks = np.ones(n, np.float64)
+    inv_deg = 1.0 / np.maximum(outdeg, 1)
+    for _ in range(n_iters):
+        contrib = ranks * inv_deg
+        acc = np.zeros(n, np.float64)
+        for i, s, d in stream_interval_buckets(g, evict_each=evict_each):
+            if s.size:
+                lo, hi = iv.interval_range(i)
+                acc[lo:hi] = np.bincount(d - lo, weights=contrib[s],
+                                         minlength=hi - lo)
+        ranks = (1.0 - damping) + damping * acc
     return ranks
 
 

@@ -1,0 +1,208 @@
+"""Codec tests: bit-parallel Elias-Gamma vs the reference loops (bitwise),
+round-trip properties, and the resident index structures (paper §4.2.1)."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.codec import (
+    BlockedGammaPointer,
+    GammaChunkedIndex,
+    SparseIndex,
+    decode_monotonic,
+    decode_monotonic_blocked,
+    elias_gamma_decode,
+    elias_gamma_decode_ref,
+    elias_gamma_encode,
+    elias_gamma_encode_ref,
+    encode_monotonic,
+    encode_monotonic_blocked,
+)
+
+
+class TestBitwiseIdentity:
+    """The vectorized codec must produce the exact bytes (and read the exact
+    values) of the original per-value/per-bit loops."""
+
+    def test_encode_identical_small(self):
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            vals = rng.integers(1, 1 << int(rng.integers(1, 40)),
+                                int(rng.integers(1, 120)))
+            p1, b1 = elias_gamma_encode(vals)
+            p2, b2 = elias_gamma_encode_ref(vals)
+            assert b1 == b2
+            assert np.array_equal(p1, p2)
+
+    def test_decode_identical(self):
+        rng = np.random.default_rng(1)
+        for _ in range(50):
+            vals = rng.integers(1, 1 << 20, int(rng.integers(1, 120)))
+            packed, nbits = elias_gamma_encode(vals)
+            assert np.array_equal(elias_gamma_decode(packed, nbits),
+                                  elias_gamma_decode_ref(packed, nbits))
+
+    def test_blocked_stream_identical_to_plain(self):
+        rng = np.random.default_rng(2)
+        seq = np.sort(rng.integers(0, 1 << 45, 3000))
+        pk_b, nb_b, f_b, _ = encode_monotonic_blocked(seq)
+        pk, nb, f = encode_monotonic(seq)
+        assert (nb_b, f_b) == (nb, f)
+        assert np.array_equal(pk_b, pk)
+
+
+class TestRoundTrips:
+    def test_gamma_roundtrip_edge_cases(self):
+        for vals in ([1], [1, 1, 1], [2 ** 40], list(range(1, 300))):
+            vals = np.asarray(vals, np.int64)
+            packed, nbits = elias_gamma_encode(vals)
+            assert np.array_equal(elias_gamma_decode(packed, nbits), vals)
+
+    def test_gamma_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            elias_gamma_encode(np.asarray([0]))
+
+    def test_monotonic_roundtrip(self):
+        rng = np.random.default_rng(3)
+        for n in (0, 1, 2, 63, 64, 65, 1000):
+            seq = np.sort(rng.integers(0, 1 << 30, n))
+            packed, nbits, first = encode_monotonic(seq)
+            assert np.array_equal(decode_monotonic(packed, nbits, first, n), seq)
+
+    def test_blocked_roundtrip(self):
+        rng = np.random.default_rng(4)
+        for n in (0, 1, 2, 63, 64, 65, 128, 129, 1000):
+            seq = np.sort(rng.integers(0, 1 << 50, n))
+            packed, nbits, first, offs = encode_monotonic_blocked(seq)
+            out = decode_monotonic_blocked(packed, nbits, first, n, offs)
+            assert np.array_equal(out, seq), n
+
+    def test_blocked_roundtrip_constant_and_huge(self):
+        for seq in ([0] * 200, [5] * 64, [0, 2 ** 61], list(range(0, 10**7, 10**4))):
+            seq = np.asarray(seq, np.int64)
+            packed, nbits, first, offs = encode_monotonic_blocked(seq)
+            out = decode_monotonic_blocked(packed, nbits, first, len(seq), offs)
+            assert np.array_equal(out, seq)
+
+
+@given(st.lists(st.integers(1, 2 ** 45), min_size=1, max_size=300),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_property_gamma_bitwise_and_roundtrip(vals, _seed):
+    vals = np.asarray(vals, np.int64)
+    p1, b1 = elias_gamma_encode(vals)
+    p2, b2 = elias_gamma_encode_ref(vals)
+    assert b1 == b2 and np.array_equal(p1, p2)
+    assert np.array_equal(elias_gamma_decode(p1, b1), vals)
+    assert np.array_equal(elias_gamma_decode_ref(p1, b1), vals)
+
+
+@given(st.lists(st.integers(0, 2 ** 50), min_size=0, max_size=400))
+@settings(max_examples=40, deadline=None)
+def test_property_blocked_monotonic_roundtrip(raw):
+    seq = np.sort(np.asarray(raw, np.int64))
+    packed, nbits, first, offs = encode_monotonic_blocked(seq)
+    out = decode_monotonic_blocked(packed, nbits, first, len(seq), offs)
+    assert np.array_equal(out, seq)
+
+
+class TestResidentIndexes:
+    def _keys(self, n=5000, seed=5):
+        rng = np.random.default_rng(seed)
+        return np.unique(rng.integers(0, 10 ** 8, n))
+
+    def test_sparse_index_vs_linear_scan(self):
+        keys = self._keys()
+        idx = SparseIndex(keys, stride=64)
+        rng = np.random.default_rng(6)
+        probes = np.concatenate([keys[:: 37], rng.integers(0, 10 ** 8, 200)])
+        for k in probes:
+            hits = np.nonzero(keys == k)[0]
+            expect = int(hits[0]) if hits.size else -1
+            assert idx.lookup(int(k)) == expect
+        assert idx.block_reads == probes.shape[0]
+
+    def test_gamma_chunked_index_vs_linear_scan(self):
+        keys = self._keys()
+        idx = GammaChunkedIndex(keys, chunk=256)
+        rng = np.random.default_rng(7)
+        probes = np.concatenate([keys[:: 41], rng.integers(0, 10 ** 8, 200)])
+        for k in probes:
+            hits = np.nonzero(keys == k)[0]
+            expect = int(hits[0]) if hits.size else -1
+            assert idx.lookup(int(k)) == expect
+        assert np.array_equal(idx.decode_all(), keys)
+        # the whole point: compressed residency
+        assert idx.nbytes() < keys.nbytes
+
+    def test_gamma_chunked_empty(self):
+        idx = GammaChunkedIndex(np.empty(0, np.int64))
+        assert idx.lookup(5) == -1
+        assert idx.decode_all().size == 0
+
+
+class TestBlockedGammaPointer:
+    def test_searchsorted_and_values_match_numpy(self):
+        rng = np.random.default_rng(8)
+        for _ in range(30):
+            arr = np.unique(rng.integers(0, 1 << 40, int(rng.integers(0, 2000))))
+            bp = BlockedGammaPointer.from_array(arr)
+            assert np.array_equal(bp.decode_all(), arr)
+            keys = (np.concatenate([arr[::5], rng.integers(0, arr.max() + 2, 40)])
+                    if arr.size else np.asarray([0, 5], np.int64))
+            assert np.array_equal(bp.searchsorted(keys),
+                                  np.searchsorted(arr, keys))
+            if arr.size:
+                idx = rng.integers(0, arr.size, 30)
+                assert np.array_equal(bp.values_at(idx), arr[idx])
+
+    def test_values_at_nondecreasing_with_duplicates(self):
+        rng = np.random.default_rng(9)
+        arr = np.sort(rng.integers(0, 50, 700))  # ptr-array shape: many dups
+        bp = BlockedGammaPointer.from_array(arr)
+        idx = rng.integers(0, arr.size, 100)
+        assert np.array_equal(bp.values_at(idx), arr[idx])
+        assert np.array_equal(bp.decode_all(), arr)
+
+    def test_compressed_residency(self):
+        arr = np.cumsum(np.random.default_rng(10).integers(1, 30, 50_000))
+        bp = BlockedGammaPointer.from_array(arr)
+        assert bp.nbytes() < arr.nbytes / 2
+
+    def test_block_boundary_sizes(self):
+        """Regression: n = k*64 + 1 gives a final value block with ZERO
+        deltas and no directory entry — lookups must not index past the
+        directory."""
+        rng = np.random.default_rng(11)
+        for n in (64, 65, 128, 129, 4993, 5120, 5121):
+            arr = np.cumsum(rng.integers(1, 9, n))
+            bp = BlockedGammaPointer.from_array(arr)
+            keys = np.concatenate([arr[-3:], [arr[-1] + 5], arr[:3]])
+            assert np.array_equal(bp.searchsorted(keys),
+                                  np.searchsorted(arr, keys)), n
+            assert np.array_equal(bp.values_at(np.asarray([0, n - 1])),
+                                  arr[[0, n - 1]]), n
+            assert np.array_equal(bp.decode_all(), arr), n
+
+
+@given(st.lists(st.integers(0, 2 ** 40), min_size=1, max_size=400),
+       st.lists(st.integers(0, 2 ** 40), min_size=1, max_size=20))
+@settings(max_examples=40, deadline=None)
+def test_property_blocked_pointer_vs_numpy(raw, probes):
+    arr = np.unique(np.asarray(raw, np.int64))
+    bp = BlockedGammaPointer.from_array(arr)
+    keys = np.asarray(probes, np.int64)
+    assert np.array_equal(bp.searchsorted(keys), np.searchsorted(arr, keys))
+    assert np.array_equal(bp.decode_all(), arr)
+
+
+@given(st.lists(st.integers(0, 10 ** 6), min_size=1, max_size=500),
+       st.integers(0, 10 ** 6))
+@settings(max_examples=40, deadline=None)
+def test_property_sparse_and_gamma_lookup_agree_with_scan(raw, probe):
+    keys = np.unique(np.asarray(raw, np.int64))
+    sparse = SparseIndex(keys, stride=16)
+    gamma = GammaChunkedIndex(keys, chunk=32)
+    hits = np.nonzero(keys == probe)[0]
+    expect = int(hits[0]) if hits.size else -1
+    assert sparse.lookup(probe) == expect
+    assert gamma.lookup(probe) == expect

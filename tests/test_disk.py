@@ -1,0 +1,477 @@
+"""Disk tier tests: partition files, DiskPartition queries, GraphDB
+open/close/reopen, crash recovery, eviction, block-read accounting, and
+out-of-core PSW streaming (ISSUE 3)."""
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    GraphDB,
+    GraphPAL,
+    IntervalMap,
+    LSMTree,
+    build_partition,
+    open_partition_file,
+    partition_digest,
+    write_partition_file,
+)
+from repro.core.disk import DiskPartition, IOStats, RawDiskIndex, SparseDiskIndex
+from repro.core.psw import pagerank_out_of_core, stream_interval_buckets
+
+
+def random_partition(rng, n_edges=5000, n_src=2000, interval=(0, 500),
+                     with_cols=True):
+    src = rng.integers(0, n_src, n_edges)
+    dst = rng.integers(interval[0], interval[1], n_edges)
+    cols = {}
+    if with_cols:
+        cols["w"] = rng.random(n_edges).astype(np.float32)
+        cols["t"] = rng.integers(0, 100, n_edges).astype(np.int32)
+    return build_partition(interval, src, dst, columns=cols)
+
+
+def make_db(tmp_path, name="db", **kw):
+    opts = dict(max_id=9999, n_partitions=16, n_levels=3, branching=4,
+                buffer_cap=2000, max_partition_edges=8000,
+                persist_min_edges=512)
+    opts.update(kw)
+    return GraphDB.create(str(tmp_path / name), **opts)
+
+
+class TestPartitionFile:
+    def test_save_mmap_load_equality(self, tmp_path):
+        rng = np.random.default_rng(0)
+        part = random_partition(rng)
+        path = str(tmp_path / "p.pal")
+        write_partition_file(path, part)
+        dp = open_partition_file(path)
+        assert dp.n_edges == part.n_edges
+        assert dp.interval == part.interval
+        for name in ("src", "dst", "etype", "dst_perm"):
+            assert np.array_equal(np.asarray(getattr(dp, name)),
+                                  getattr(part, name)), name
+        for name in ("src_vertices", "src_ptr", "dst_vertices", "dst_ptr"):
+            got = getattr(dp, name)
+            assert got.dtype == np.int64
+            assert np.array_equal(got, getattr(part, name)), name
+        for k in part.columns:
+            assert np.array_equal(np.asarray(dp.columns[k]), part.columns[k])
+            assert dp.columns[k].dtype == part.columns[k].dtype
+
+    def test_query_equality_after_mmap(self, tmp_path):
+        rng = np.random.default_rng(1)
+        part = random_partition(rng)
+        path = str(tmp_path / "p.pal")
+        write_partition_file(path, part)
+        dp = open_partition_file(path)
+        for v in range(0, 2000, 53):
+            assert np.array_equal(dp.out_edges(v), part.out_edges(v))
+        for v in range(0, 500, 13):
+            assert np.array_equal(dp.in_edges(v), part.in_edges(v))
+        a, b = part.window((100, 300))
+        assert dp.window((100, 300)) == (a, b)
+
+    def test_raw_index_mode_matches_gamma(self, tmp_path):
+        rng = np.random.default_rng(2)
+        part = random_partition(rng)
+        path = str(tmp_path / "p.pal")
+        write_partition_file(path, part)
+        g = open_partition_file(path, index_mode="gamma")
+        r = open_partition_file(path, index_mode="raw")
+        for name in ("src_vertices", "src_ptr", "dst_vertices", "dst_ptr"):
+            assert np.array_equal(np.asarray(getattr(r, name)),
+                                  getattr(g, name))
+
+    def test_evict_then_requery(self, tmp_path):
+        rng = np.random.default_rng(3)
+        part = random_partition(rng)
+        path = str(tmp_path / "p.pal")
+        write_partition_file(path, part)
+        dp = open_partition_file(path)
+        before = np.array(dp.out_edges(7))
+        # scalar/batched queries use the chunked path and cache NOTHING;
+        # only explicit full-array access materializes a decoded cache
+        assert dp.cached_nbytes() == 0
+        _ = dp.src_vertices
+        assert dp.cached_nbytes() > 0
+        dp.evict()
+        assert dp.cached_nbytes() == 0
+        assert np.array_equal(dp.out_edges(7), before)
+        assert dp.resident_nbytes() > 0  # pinned blobs survive
+
+    def test_copy_on_write_mutations_mark_dirty(self, tmp_path):
+        rng = np.random.default_rng(4)
+        part = random_partition(rng)
+        path = str(tmp_path / "p.pal")
+        write_partition_file(path, part)
+        dp = open_partition_file(path)
+        assert not dp.dirty
+        dp.set_column("w", 3, 9.5)
+        assert dp.dirty
+        assert float(dp.columns["w"][3]) == 9.5
+        dp2 = open_partition_file(path)
+        assert float(dp2.columns["w"][3]) != 9.5  # file untouched
+        dp2.set_etype([1], 4)
+        assert dp2.dirty and int(dp2.etype[1]) == 4
+        dp3 = open_partition_file(path)
+        dp3.tombstone([0])
+        # tombstones do NOT dirty the file — they live in a sidecar, so the
+        # content-addressed file stays linkable/dedupable
+        assert not dp3.dirty
+        assert 0 not in dp3.out_edges(int(dp3.edge_at(0)[0]))
+
+    def test_digest_content_addressing(self, tmp_path):
+        rng = np.random.default_rng(5)
+        part = random_partition(rng)
+        path = str(tmp_path / "p.pal")
+        write_partition_file(path, part)
+        dp = open_partition_file(path)
+        assert partition_digest(dp) == partition_digest(part)
+
+    def test_empty_partition_roundtrip(self, tmp_path):
+        part = build_partition((0, 10), np.empty(0, np.int64),
+                               np.empty(0, np.int64))
+        path = str(tmp_path / "e.pal")
+        write_partition_file(path, part)
+        dp = open_partition_file(path)
+        assert dp.n_edges == 0
+        assert dp.out_edges(3).size == 0
+
+    def test_bad_magic_rejected(self, tmp_path):
+        path = str(tmp_path / "bad.pal")
+        with open(path, "wb") as f:
+            f.write(b"NOTAPART" + b"\0" * 64)
+        with pytest.raises(ValueError):
+            open_partition_file(path)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 3000))
+@settings(max_examples=15, deadline=None)
+def test_property_partition_file_roundtrip(seed, n_edges):
+    """save → mmap-load → every query agrees with the in-RAM partition."""
+    import tempfile
+    rng = np.random.default_rng(seed)
+    part = random_partition(rng, n_edges=n_edges, n_src=300, interval=(0, 200))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "p.pal")
+        write_partition_file(path, part)
+        dp = open_partition_file(path)
+        for name in ("src_vertices", "src_ptr", "dst_vertices", "dst_ptr"):
+            assert np.array_equal(getattr(dp, name), getattr(part, name))
+        for v in rng.integers(0, 300, 10):
+            assert np.array_equal(dp.out_edges(int(v)), part.out_edges(int(v)))
+        for v in rng.integers(0, 200, 10):
+            assert np.array_equal(dp.in_edges(int(v)), part.in_edges(int(v)))
+
+
+class TestGraphDB:
+    def _fill(self, db, n=40000, seed=10, max_id=10000):
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, max_id, n)
+        dst = rng.integers(0, max_id, n)
+        db.insert_edges(src, dst)
+        return src, dst
+
+    def test_insert_query_with_disk_partitions(self, tmp_path):
+        db = make_db(tmp_path)
+        src, dst = self._fill(db)
+        assert len(db._disk_partitions()) > 0, "nothing was flushed to disk"
+        for v in np.unique(src)[:15]:
+            assert np.array_equal(np.sort(db.out_neighbors(int(v))),
+                                  np.sort(dst[src == v]))
+        for v in np.unique(dst)[:15]:
+            assert np.array_equal(np.sort(db.in_neighbors(int(v))),
+                                  np.sort(src[dst == v]))
+
+    def test_close_reopen_bitwise(self, tmp_path):
+        db = make_db(tmp_path)
+        src, dst = self._fill(db)
+        sample = [int(v) for v in np.unique(src)[:25]]
+        pre_out = {v: db.out_neighbors(v).tolist() for v in sample}
+        pre_coo = sorted(zip(*map(list, db.to_coo())))
+        db.close()
+        db2 = GraphDB.open(str(tmp_path / "db"))
+        assert sorted(zip(*map(list, db2.to_coo()))) == pre_coo
+        for v in sample:
+            assert db2.out_neighbors(v).tolist() == pre_out[v]
+
+    def test_crash_recovery_wal_tail(self, tmp_path):
+        db = make_db(tmp_path)
+        src, dst = self._fill(db)
+        db.checkpoint()
+        rng = np.random.default_rng(11)
+        s2 = rng.integers(0, 10000, 5000)
+        d2 = rng.integers(0, 10000, 5000)
+        db.insert_edges(s2, d2)
+        pre = sorted(zip(*map(list, db.to_coo())))
+        db.tree.wal_flush()
+        # simulated kill: copy the directory while the DB is still "live"
+        crash = str(tmp_path / "crash")
+        shutil.copytree(str(tmp_path / "db"), crash)
+        db2 = GraphDB.open(crash)
+        assert sorted(zip(*map(list, db2.to_coo()))) == pre
+
+    def test_kill_between_manifest_writes(self, tmp_path):
+        """A crash after the tmp manifest is written but before the atomic
+        rename must leave the PREVIOUS manifest fully restorable."""
+        db = make_db(tmp_path)
+        src, dst = self._fill(db, n=20000)
+        db.checkpoint()
+        pre = sorted(zip(*map(list, db.to_coo())))
+        # half-written next manifest: garbage tmp file next to the real one
+        with open(str(tmp_path / "db" / (GraphDB.MANIFEST + ".tmp")), "w") as f:
+            f.write('{"config": TRUNCATED')
+        db.tree.wal_flush()
+        crash = str(tmp_path / "crash")
+        shutil.copytree(str(tmp_path / "db"), crash)
+        db2 = GraphDB.open(crash)
+        assert sorted(zip(*map(list, db2.to_coo()))) == pre
+
+    def test_torn_wal_record_dropped(self, tmp_path):
+        db = make_db(tmp_path)
+        self._fill(db, n=5000)
+        db.tree.wal_flush()
+        wal = str(tmp_path / "db" / "wal.log")
+        size = os.path.getsize(wal)
+        with open(wal, "ab") as f:  # torn trailing record
+            f.write(b"\x01\x02\x03")
+        s, d, t = LSMTree.replay_wal(wal)
+        assert s.shape[0] == 5000
+
+    def test_checkpoint_gcs_unreferenced_files(self, tmp_path):
+        db = make_db(tmp_path)
+        self._fill(db, n=30000)
+        parts_dir = str(tmp_path / "db" / "parts")
+        before_files = set(os.listdir(parts_dir))
+        db.checkpoint()
+        manifest = db._read_manifest()
+        live = {f"part_{e['digest']}.pal" for lv in manifest["levels"]
+                for e in lv if e}
+        on_disk = {f for f in os.listdir(parts_dir) if f.endswith(".pal")}
+        assert on_disk == live
+        # every live digest is openable
+        for e in (e for lv in manifest["levels"] for e in lv if e):
+            db.store.open(e["digest"])
+
+    def test_create_refuses_existing(self, tmp_path):
+        make_db(tmp_path)
+        with pytest.raises(FileExistsError):
+            make_db(tmp_path)
+
+    def test_deletes_survive_checkpoint(self, tmp_path):
+        db = make_db(tmp_path)
+        src, dst = self._fill(db, n=20000)
+        v, w = int(src[0]), int(dst[0])
+        assert db.delete_edge(v, w)
+        db.checkpoint()
+        db.close()
+        db2 = GraphDB.open(str(tmp_path / "db"))
+        assert w not in db2.out_neighbors(v)
+
+    def test_engine_block_read_accounting(self, tmp_path):
+        db = make_db(tmp_path)
+        src, dst = self._fill(db)
+        eng = db.storage_engine()
+        assert db.io.block_reads == 0
+        vals, offsets = eng.out_neighbors_batch(
+            [int(v) for v in np.unique(src)[:50]])
+        assert db.io.block_reads > 0
+        assert db.io.bytes_read > 0
+
+    def test_eviction_bounds_cache(self, tmp_path):
+        db = make_db(tmp_path, resident_budget_bytes=1)
+        src, dst = self._fill(db)
+        # a query materializes decoded indexes...
+        db.storage_engine().out_neighbors_batch([int(src[0])])
+        # ...and the next sink call evicts them back under budget
+        rng = np.random.default_rng(12)
+        db.insert_edges(rng.integers(0, 10000, 10000),
+                        rng.integers(0, 10000, 10000))
+        db.evict()
+        assert sum(p.cached_nbytes() for p in db._disk_partitions()) == 0
+        # queries still work after eviction
+        assert db.out_neighbors(int(src[0])).size >= 0
+
+    def test_update_column_on_disk_partition(self, tmp_path):
+        db = make_db(tmp_path, column_dtypes={"w": np.float32})
+        rng = np.random.default_rng(13)
+        src = rng.integers(0, 10000, 20000)
+        dst = rng.integers(0, 10000, 20000)
+        db.insert_edges(src, dst, columns={"w": np.ones(20000, np.float32)})
+        db.flush_all()
+        assert db.update_edge_column(int(src[0]), int(dst[0]), "w", 7.5)
+        db.close()
+        db2 = GraphDB.open(str(tmp_path / "db"))
+        eng = db2.storage_engine()
+        batch = eng.edge_columns_batch([int(src[0])], names=["w"])
+        hit = np.nonzero(batch.dst == int(dst[0]))[0]
+        assert (batch.columns["w"][hit] == 7.5).any()
+
+
+class TestOutOfCorePSW:
+    def _db(self, tmp_path, n=25000):
+        db = make_db(tmp_path, max_id=2000 - 1, n_partitions=16,
+                     buffer_cap=1500, max_partition_edges=4000,
+                     persist_min_edges=256)
+        rng = np.random.default_rng(20)
+        src = rng.integers(0, 2000, n)
+        dst = rng.integers(0, 2000, n)
+        db.insert_edges(src, dst)
+        return db, src, dst
+
+    def test_buckets_bit_identical_to_device_graph(self, tmp_path):
+        from repro.core.psw import build_device_graph
+        db, src, dst = self._db(tmp_path)
+        dg = build_device_graph(db.tree, with_window_plan=False)
+        S = np.asarray(dg.src)
+        D = np.asarray(dg.dst_local)
+        M = np.asarray(dg.mask)
+        L = dg.interval_len
+        total = 0
+        for i, s, d in stream_interval_buckets(db.tree, evict_each=True):
+            n = s.shape[0]
+            total += n
+            assert np.array_equal(S[i][:n], s.astype(np.int32))
+            assert np.array_equal(D[i][:n], (d - i * L).astype(np.int32))
+            assert M[i][:n].all() and not M[i][n:].any()
+        assert total == dg.n_edges
+
+    def test_pagerank_out_of_core_matches_device(self, tmp_path):
+        from repro.core.psw import build_device_graph, pagerank_device
+        db, src, dst = self._db(tmp_path)
+        pr_dev = np.asarray(pagerank_device(
+            build_device_graph(db.tree), n_iters=3,
+            mode="dense_gather")).ravel()
+        pr_ooc = pagerank_out_of_core(db.tree, n_iters=3)
+        np.testing.assert_allclose(pr_ooc, pr_dev, rtol=1e-4, atol=1e-4)
+
+    def test_streaming_works_on_pal_and_lsm(self):
+        rng = np.random.default_rng(21)
+        src = rng.integers(0, 1000, 8000)
+        dst = rng.integers(0, 1000, 8000)
+        pal = GraphPAL.from_edges(src, dst, n_partitions=8, max_id=999)
+        iv = IntervalMap.for_capacity(999, 8)
+        lsm = LSMTree(iv, n_levels=2, branching=8, buffer_cap=1000,
+                      max_partition_edges=3000)
+        lsm.insert_edges(src, dst)
+        buckets_pal = [s for _, s, _ in stream_interval_buckets(pal)]
+        buckets_lsm = [s for _, s, _ in stream_interval_buckets(lsm)]
+        for a, b in zip(buckets_pal, buckets_lsm):
+            assert np.array_equal(a, b)
+
+
+class TestCheckpointLinks:
+    def test_save_lsm_hard_links_disk_partitions(self, tmp_path):
+        from repro.checkpoint.manager import restore_lsm, save_lsm
+        db = make_db(tmp_path)
+        rng = np.random.default_rng(40)
+        src = rng.integers(0, 10000, 30000)
+        dst = rng.integers(0, 10000, 30000)
+        db.insert_edges(src, dst)
+        db.checkpoint()
+        ck = str(tmp_path / "ckpt")
+        m = save_lsm(db, ck)
+        assert m["linked"] > 0 and m["written"] <= 1  # only the empty npz
+        linked = [f for f in os.listdir(ck) if f.endswith(".pal")]
+        assert os.stat(os.path.join(ck, linked[0])).st_nlink >= 2
+        ref = sorted(zip(*map(list, db.to_coo())))
+        t2 = restore_lsm(ck)
+        assert sorted(zip(*map(list, t2.to_coo()))) == ref
+        # the checkpoint must survive store GC (links keep inodes alive)
+        db.store.gc(set())
+        t3 = restore_lsm(ck)
+        assert sorted(zip(*map(list, t3.to_coo()))) == ref
+
+    def test_save_lsm_links_tombstoned_partition_with_dead_sidecar(self, tmp_path):
+        """A tombstoned disk partition must still take the hard-link path
+        (dead lives in a sidecar, the file is content-clean) and restore
+        with the tombstone applied."""
+        from repro.checkpoint.manager import restore_lsm, save_lsm
+        db = make_db(tmp_path)
+        rng = np.random.default_rng(41)
+        src = rng.integers(0, 10000, 30000)
+        dst = rng.integers(0, 10000, 30000)
+        db.insert_edges(src, dst)
+        db.checkpoint()
+        v, w = int(src[0]), int(dst[0])
+        assert db.delete_edge(v, w)
+        ck = str(tmp_path / "ckpt")
+        m = save_lsm(db, ck)
+        assert m["written"] <= 1  # tombstoned partitions still link
+        assert any(f.endswith(".dead.npy") for f in os.listdir(ck))
+        t2 = restore_lsm(ck)
+        assert sorted(zip(*map(list, t2.to_coo()))) == \
+            sorted(zip(*map(list, db.to_coo())))
+
+    def test_tombstone_durable_at_checkpoint_reopen(self, tmp_path):
+        db = make_db(tmp_path)
+        rng = np.random.default_rng(42)
+        src = rng.integers(0, 10000, 30000)
+        dst = rng.integers(0, 10000, 30000)
+        db.insert_edges(src, dst)
+        db.checkpoint()  # all on disk, clean
+        v, w = int(src[0]), int(dst[0])
+        assert db.delete_edge(v, w)
+        db.checkpoint()  # clean partition + new tombstone → sidecar only
+        db.close()
+        db2 = GraphDB.open(str(tmp_path / "db"))
+        assert w not in db2.out_neighbors(v)
+
+
+class TestFigure8Readers:
+    def test_raw_and_sparse_disk_index(self, tmp_path):
+        rng = np.random.default_rng(30)
+        part = random_partition(rng, n_edges=20000, n_src=8000,
+                                with_cols=False)
+        path = str(tmp_path / "p.pal")
+        write_partition_file(path, part)
+        dp = open_partition_file(path)
+        off, dt, n = dp._section_spec("src_vertices_raw")
+        raw = RawDiskIndex(path, off, n)
+        sparse = SparseDiskIndex(path, off, n, stride=128)
+        keys = part.src_vertices
+        probes = np.concatenate([keys[::97], rng.integers(0, 8000, 50)])
+        for k in probes:
+            hits = np.nonzero(keys == int(k))[0]
+            expect = int(hits[0]) if hits.size else -1
+            assert raw.lookup(int(k)) == expect
+            assert sparse.lookup(int(k)) == expect
+        assert raw.block_reads > probes.shape[0]      # log-blocks per probe
+        # sparse: exactly one data block per probe
+        assert sparse.block_reads - raw.block_reads == probes.shape[0] \
+            or sparse.block_reads >= probes.shape[0]
+        raw.close()
+        sparse.close()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_property_db_equals_reference_after_reopen(seed):
+    """Arbitrary insert batches → close → reopen: queries equal a dense
+    reference edge list."""
+    import tempfile
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(500, 4000))
+    src = rng.integers(0, 3000, n)
+    dst = rng.integers(0, 3000, n)
+    with tempfile.TemporaryDirectory() as d:
+        db = GraphDB.create(os.path.join(d, "db"), max_id=2999,
+                            n_partitions=16, n_levels=3, branching=4,
+                            buffer_cap=300, max_partition_edges=1200,
+                            persist_min_edges=128)
+        k = n // 2
+        db.insert_edges(src[:k], dst[:k])
+        db.insert_edges(src[k:], dst[k:])
+        db.close()
+        db2 = GraphDB.open(os.path.join(d, "db"))
+        assert db2.n_edges == n
+        for v in np.unique(src)[:5]:
+            assert np.array_equal(np.sort(db2.out_neighbors(int(v))),
+                                  np.sort(dst[src == v]))
+        for v in np.unique(dst)[:5]:
+            assert np.array_equal(np.sort(db2.in_neighbors(int(v))),
+                                  np.sort(src[dst == v]))

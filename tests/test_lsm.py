@@ -182,6 +182,38 @@ class TestDurability:
                                np.asarray(iv.to_original(d)), etype=ty)
         assert sorted(zip(*map(list, recovered.to_coo()))) == pre_crash
 
+    def test_two_durable_trees_get_private_wals(self, tmp_path):
+        """Regression: the old default WAL path was a single global
+        /tmp/graphchi_db.wal opened in append mode, so two durable trees in
+        one process interleaved records and replay resurrected the OTHER
+        tree's edges. Defaults must now be per-instance."""
+        t1 = make_tree(durable=True, buffer_cap=10**9)
+        t2 = make_tree(durable=True, buffer_cap=10**9)
+        assert t1.wal_path != t2.wal_path
+        t1.insert_edges([1, 2], [3, 4])
+        t2.insert_edges([5], [6])
+        t1.close()
+        t2.close()
+        s1, d1, _ = LSMTree.replay_wal(t1.wal_path)
+        s2, d2, _ = LSMTree.replay_wal(t2.wal_path)
+        iv = t1.intervals
+        assert sorted(np.asarray(iv.to_original(s1)).tolist()) == [1, 2]
+        assert np.asarray(iv.to_original(s2)).tolist() == [5]
+        os.remove(t1.wal_path)
+        os.remove(t2.wal_path)
+
+    def test_replay_wal_offset(self, tmp_path):
+        wal = str(tmp_path / "off.wal")
+        t = make_tree(durable=True, wal_path=wal, buffer_cap=10**9)
+        t.insert_edges([1, 2, 3], [4, 5, 6])
+        t.wal_flush()
+        offset = os.path.getsize(wal)
+        t.insert_edges([7, 8], [9, 10])
+        t.close()
+        s, d, _ = LSMTree.replay_wal(wal, offset=offset)
+        iv = t.intervals
+        assert sorted(np.asarray(iv.to_original(s)).tolist()) == [7, 8]
+
     def test_wal_sync_policies(self, tmp_path):
         for policy in ("always", "commit", "close"):
             wal = str(tmp_path / f"{policy}.wal")
