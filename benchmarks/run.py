@@ -13,7 +13,7 @@ import sys
 import time
 
 from . import (bench_disk, bench_fof, bench_insert, bench_linkbench,
-               bench_psw, bench_query, bench_storage)
+               bench_psw, bench_query, bench_service, bench_storage)
 
 SUITES = {
     "storage": bench_storage.run,      # paper Table 1
@@ -23,6 +23,7 @@ SUITES = {
     "fof": bench_fof.run,              # paper Table 3 + Fig 8b
     "psw": bench_psw.run,              # paper §6 + device PSW
     "disk": bench_disk.run,            # ISSUE 3: out-of-core + Fig 8c real I/O
+    "service": bench_service.run,      # ISSUE 4: snapshot readers + maintenance
 }
 
 

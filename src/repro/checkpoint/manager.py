@@ -162,7 +162,13 @@ def save_lsm(tree, directory: str) -> Dict[str, Any]:
     instead of re-serialized — the checkpoint is then a set of refs into
     the same immutable files, costing no data copy and surviving store GC
     (the inode lives until the last link drops). RAM partitions fall back
-    to the npz path. Accepts a GraphDB or a bare LSMTree."""
+    to the npz path. Accepts a GraphDB or a bare LSMTree.
+
+    Live buffers are captured too (`buffers.npz`, columns included) — the
+    old checkpoints silently dropped unflushed edges, so a restore lost
+    everything after the last flush. With buffers in the manifest the
+    checkpoint is a complete recovery root on its own; the store's WAL
+    segments are never referenced (restore needs no WAL replay)."""
     from ..core.disk import DiskPartition
 
     if hasattr(tree, "tree"):  # a GraphDB quacks like its tree
@@ -171,7 +177,9 @@ def save_lsm(tree, directory: str) -> Dict[str, Any]:
     manifest = {"levels": [], "intervals": {
         "n_partitions": tree.intervals.n_partitions,
         "interval_len": tree.intervals.interval_len,
-    }, "written": 0, "reused": 0, "linked": 0}
+    }, "written": 0, "reused": 0, "linked": 0,
+        "column_dtypes": {k: np.dtype(dt).str
+                          for k, dt in tree.column_dtypes.items()}}
     for li, level in enumerate(tree.levels):
         lvl = []
         for pi, part in enumerate(level):
@@ -212,6 +220,23 @@ def save_lsm(tree, directory: str) -> Dict[str, Any]:
             lvl.append({"file": fname, "interval": list(part.interval),
                         "n_edges": part.n_edges, "format": "npz"})
         manifest["levels"].append(lvl)
+    # live (unflushed) buffers — staged internal-ID arrays, columns included
+    if any(len(b) for b in getattr(tree, "buffers", [])):
+        arrays = {}
+        for j, b in enumerate(tree.buffers):
+            if len(b) == 0:
+                continue
+            st = b.staging()
+            arrays[f"b{j}_src"] = np.array(st.src)
+            arrays[f"b{j}_dst"] = np.array(st.dst)
+            arrays[f"b{j}_etype"] = np.array(st.etype)
+            for k, v in st.columns.items():
+                arrays[f"b{j}_col_{k}"] = np.array(v)
+        tmp = os.path.join(directory, "buffers.npz.tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, os.path.join(directory, "buffers.npz"))
+        manifest["buffers"] = "buffers.npz"
     tmp = os.path.join(directory, "GRAPH_MANIFEST.json.tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f)
@@ -220,7 +245,9 @@ def save_lsm(tree, directory: str) -> Dict[str, Any]:
 
 
 def restore_lsm(directory: str, column_dtypes=None, **lsm_kwargs):
-    """Rebuild an LSMTree from a graph manifest (npz or linked .pal files)."""
+    """Rebuild an LSMTree from a graph manifest (npz or linked .pal files),
+    live buffers included — restore resumes with the exact unflushed edge
+    set (and attribute values) the checkpoint captured."""
     from ..core.disk import open_partition_file
     from ..core.lsm import LSMTree
     from ..core.pal import IntervalMap, build_partition
@@ -233,6 +260,9 @@ def restore_lsm(directory: str, column_dtypes=None, **lsm_kwargs):
     branching = 1
     if n_levels > 1:
         branching = len(manifest["levels"][1]) // len(manifest["levels"][0])
+    if column_dtypes is None:
+        column_dtypes = {k: np.dtype(s)
+                         for k, s in manifest.get("column_dtypes", {}).items()}
     tree = LSMTree(iv, n_levels=n_levels, branching=max(branching, 1),
                    column_dtypes=column_dtypes or {}, **lsm_kwargs)
     for li, lvl in enumerate(manifest["levels"]):
@@ -253,4 +283,16 @@ def restore_lsm(directory: str, column_dtypes=None, **lsm_kwargs):
             if data["dead"].size:
                 part.dead = data["dead"]
             tree.levels[li][pi] = part
+    if manifest.get("buffers"):
+        data = np.load(os.path.join(directory, manifest["buffers"]))
+        for j in range(len(tree.buffers)):
+            if f"b{j}_src" not in data.files:
+                continue
+            cols = {k[len(f"b{j}_col_"):]: data[k] for k in data.files
+                    if k.startswith(f"b{j}_col_")}
+            # buffer arrays are staged INTERNAL ids: restore them directly
+            # (insert_edges would re-hash and re-route)
+            tree.buffers[j].extend(data[f"b{j}_src"], data[f"b{j}_dst"],
+                                   data[f"b{j}_etype"], cols)
+            tree._buffered += int(data[f"b{j}_src"].shape[0])
     return tree

@@ -30,9 +30,12 @@ from .engine import (
     EdgeChunk,
     LSMEngine,
     PALEngine,
+    SnapshotEngine,
     StorageEngine,
     as_engine,
 )
+from .service import ServiceDB, ServiceStats, Snapshot
+from .walog import SegmentedWAL
 from .psw import (
     DeviceGraph,
     build_device_graph,
@@ -63,8 +66,9 @@ __all__ = [
     "merge_sorted_runs", "partition_from_run",
     "run_from_arrays", "run_from_partition", "sorted_run_index",
     "BufferStaging", "EdgeBuffer", "LSMStats", "LSMTree",
-    "EdgeBatch", "EdgeChunk", "LSMEngine", "PALEngine", "StorageEngine",
-    "as_engine",
+    "EdgeBatch", "EdgeChunk", "LSMEngine", "PALEngine", "SnapshotEngine",
+    "StorageEngine", "as_engine",
+    "SegmentedWAL", "ServiceDB", "ServiceStats", "Snapshot",
     "DeviceGraph", "build_device_graph", "edge_centric_sweep",
     "edge_centric_sweep_arrays", "pagerank_device", "pagerank_host",
     "pagerank_out_of_core", "psw_sweep_host", "stream_interval_buckets",

@@ -33,7 +33,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import json
+import mmap
 import os
 import shutil
 import weakref
@@ -49,6 +51,7 @@ from .codec import (
 )
 from .lsm import LSMTree
 from .pal import EdgePartition, IntervalMap
+from .walog import SegmentedWAL
 
 __all__ = [
     "IOStats",
@@ -58,6 +61,7 @@ __all__ = [
     "RawDiskIndex",
     "SparseDiskIndex",
     "partition_digest",
+    "replay_ops",
     "write_partition_file",
     "open_partition_file",
 ]
@@ -443,6 +447,37 @@ class DiskPartition(EdgePartition):
         self._idx.clear()
         self.columns.evict()
 
+    def advise_dontneed(self) -> None:
+        """Tell the kernel this partition's file pages won't be re-read
+        (PSW sweeps touch each bucket once per pass). Two hints, both
+        advisory and platform-guarded: `madvise(DONTNEED)` drops the
+        mappings' PTEs (RSS), and `posix_fadvise(POSIX_FADV_DONTNEED)`
+        asks the kernel to drop the file's clean PAGE-CACHE pages — for a
+        read-only shared file mapping madvise alone leaves the cache copy
+        in place, so without the fadvise a streaming scan would still
+        churn hotter data out."""
+        advise = getattr(mmap.mmap, "madvise", None)
+        flag = getattr(mmap, "MADV_DONTNEED", None)
+        if advise is not None and flag is not None:
+            for arr in self._mm.values():
+                m = getattr(arr, "_mmap", None)
+                if m is not None:
+                    try:
+                        m.madvise(flag)
+                    except (OSError, ValueError):
+                        pass  # platform refused the hint; purely advisory
+        fadvise = getattr(os, "posix_fadvise", None)
+        fflag = getattr(os, "POSIX_FADV_DONTNEED", None)
+        if fadvise is not None and fflag is not None and self._mm:
+            try:
+                fd = os.open(self.path, os.O_RDONLY)
+                try:
+                    fadvise(fd, 0, 0, fflag)  # whole file
+                finally:
+                    os.close(fd)
+            except OSError:
+                pass
+
     def resident_nbytes(self) -> int:
         """Bytes pinned regardless of eviction: the compressed index
         (gamma blobs + bit-offset directories + block firsts)."""
@@ -514,6 +549,16 @@ class _ColumnDict(dict):
                 super().__setitem__(k, None)
 
 
+def _link_or_copy(src: str, dst: str) -> str:
+    """Hard-link (pin the inode, zero data copy); copy across filesystems."""
+    if not os.path.exists(dst):
+        try:
+            os.link(src, dst)
+        except OSError:
+            shutil.copy2(src, dst)
+    return dst
+
+
 # ---------------------------------------------------------------------------
 # Content-addressed partition store
 # ---------------------------------------------------------------------------
@@ -575,16 +620,39 @@ class PartitionStore:
         return removed
 
     def link_into(self, digest: str, dest_dir: str) -> str:
-        """Hard-link a partition file into `dest_dir` (checkpoints); falls
-        back to a copy across filesystems."""
+        """Hard-link a partition file into `dest_dir` (checkpoints,
+        snapshot pins); falls back to a copy across filesystems."""
         src = self.path_of(digest)
-        dst = os.path.join(dest_dir, os.path.basename(src))
-        if not os.path.exists(dst):
-            try:
-                os.link(src, dst)
-            except OSError:
-                shutil.copy2(src, dst)
-        return dst
+        return _link_or_copy(src, os.path.join(dest_dir,
+                                               os.path.basename(src)))
+
+
+# ---------------------------------------------------------------------------
+# Typed WAL replay (shared by GraphDB recovery and snapshot sessions)
+# ---------------------------------------------------------------------------
+def replay_ops(tree: LSMTree, ops) -> int:
+    """Apply a typed WAL op stream (walog.SegmentedWAL.replay) to a tree in
+    log order. Ops carry INTERNAL ids; the tree API takes original ids, so
+    each op round-trips through the reversible hash. Returns ops applied.
+    The caller must have suspended WAL logging on the tree."""
+    iv = tree.intervals
+    n = 0
+    for op in ops:
+        kind = op[0]
+        if kind == "insert":
+            _, s, d, t, cols = op
+            tree.insert_edges(np.asarray(iv.to_original(s)),
+                              np.asarray(iv.to_original(d)), etype=t,
+                              columns=cols)
+        elif kind == "delete":
+            _, s, d = op
+            tree.delete_edge(int(iv.to_original(s)), int(iv.to_original(d)))
+        else:
+            _, name, s, d, val = op
+            tree.update_edge_column(int(iv.to_original(s)),
+                                    int(iv.to_original(d)), name, val)
+        n += 1
+    return n
 
 
 # ---------------------------------------------------------------------------
@@ -594,7 +662,7 @@ class GraphDB:
     """An LSM graph store that lives in a directory:
 
         dbdir/MANIFEST.json   atomically-renamed recovery root
-        dbdir/wal.log         the LSM write-ahead log (per-instance)
+        dbdir/wal/            segmented typed WAL (walog.SegmentedWAL)
         dbdir/parts/          content-addressed immutable partition files
 
     Merged partitions above `persist_min_edges` are flushed to disk as they
@@ -616,6 +684,9 @@ class GraphDB:
         self.config = config
         self.persist_min_edges = int(config.get("persist_min_edges", 4096))
         self.resident_budget_bytes = config.get("resident_budget_bytes")
+        # per-partition touch recency (monotone clock) for LRU-first
+        # eviction; partitions never touched sort oldest
+        self._touch_clock = itertools.count(1)
         tree.partition_sink = self._sink
         # the engine calls this after it is done with a slab inside one
         # batched query, letting a budgeted store release decoded indexes
@@ -638,6 +709,7 @@ class GraphDB:
         wal_sync: str = "commit",
         persist_min_edges: int = 4096,
         resident_budget_bytes: Optional[int] = None,
+        wal_segment_bytes: int = 4 << 20,
     ) -> "GraphDB":
         os.makedirs(directory, exist_ok=True)
         if os.path.exists(os.path.join(directory, cls.MANIFEST)):
@@ -645,11 +717,15 @@ class GraphDB:
                 f"{directory} already holds a GraphDB — use GraphDB.open")
         iv = IntervalMap.for_capacity(max_id, n_partitions)
         column_dtypes = {k: np.dtype(v) for k, v in (column_dtypes or {}).items()}
+        wal = (SegmentedWAL(os.path.join(directory, "wal"),
+                            column_dtypes=column_dtypes, sync=wal_sync,
+                            segment_bytes=wal_segment_bytes)
+               if durable else None)
         tree = LSMTree(
             iv, n_levels=n_levels, branching=branching, buffer_cap=buffer_cap,
             max_partition_edges=max_partition_edges,
             column_dtypes=column_dtypes, durable=durable,
-            wal_path=os.path.join(directory, "wal.log"), wal_sync=wal_sync)
+            wal=wal, wal_sync=wal_sync)
         config = {
             "n_partitions": iv.n_partitions,
             "interval_len": iv.interval_len,
@@ -662,9 +738,10 @@ class GraphDB:
             "wal_sync": wal_sync,
             "persist_min_edges": persist_min_edges,
             "resident_budget_bytes": resident_budget_bytes,
+            "wal_segment_bytes": wal_segment_bytes,
         }
         db = cls(directory, tree, config)
-        db._write_manifest(wal_offset=db._wal_size())
+        db._write_manifest(wal_offset=db._wal_offset())
         return db
 
     @classmethod
@@ -678,13 +755,17 @@ class GraphDB:
                          interval_len=config["interval_len"])
         column_dtypes = {k: np.dtype(s)
                          for k, s in config["column_dtypes"].items()}
+        wal = (SegmentedWAL(
+                   os.path.join(directory, "wal"),
+                   column_dtypes=column_dtypes, sync=config["wal_sync"],
+                   segment_bytes=int(config.get("wal_segment_bytes", 4 << 20)))
+               if config["durable"] else None)
         tree = LSMTree(
             iv, n_levels=config["n_levels"], branching=config["branching"],
             buffer_cap=config["buffer_cap"],
             max_partition_edges=config["max_partition_edges"],
             column_dtypes=column_dtypes, durable=config["durable"],
-            wal_path=os.path.join(directory, "wal.log"),
-            wal_sync=config["wal_sync"])
+            wal=wal, wal_sync=config["wal_sync"])
         db = cls(directory, tree, config)
         for li, level in enumerate(manifest["levels"]):
             for pi, entry in enumerate(level):
@@ -696,28 +777,45 @@ class GraphDB:
                 if entry.get("dead") and os.path.exists(dead_path):
                     part.dead = np.load(dead_path)
                 tree.levels[li][pi] = part
-        db._replay_wal_tail(int(manifest.get("wal_offset", 0)))
+        legacy = os.path.join(directory, "wal.log")
+        if wal is not None and os.path.exists(legacy):
+            # pre-segmented-WAL database: its manifest's wal_offset indexes
+            # wal.log. Replay the legacy tail WITH logging on (the records
+            # re-enter the segmented WAL), retire the file, and checkpoint
+            # so the manifest's offset re-anchors on the new log.
+            s, d, ty = LSMTree.replay_wal(
+                legacy, offset=int(manifest.get("wal_offset", 0)))
+            if s.shape[0]:
+                iv = tree.intervals
+                tree.insert_edges(np.asarray(iv.to_original(s)),
+                                  np.asarray(iv.to_original(d)), etype=ty)
+            os.replace(legacy, legacy + ".migrated")
+            db.checkpoint()
+        else:
+            db._replay_wal_tail(int(manifest.get("wal_offset", 0)))
         return db
 
-    def _wal_size(self) -> int:
+    def _wal_offset(self) -> int:
+        if self.tree.wal is None:
+            return 0
         self.tree.wal_flush(fsync=False)
-        path = os.path.join(self.dir, "wal.log")
-        return os.path.getsize(path) if os.path.exists(path) else 0
+        return self.tree.wal.tail_offset()
 
-    def _replay_wal_tail(self, offset: int) -> None:
-        path = os.path.join(self.dir, "wal.log")
-        if not os.path.exists(path) or os.path.getsize(path) <= offset:
+    def _replay_wal_tail(self, offset: int,
+                         end: Optional[int] = None) -> None:
+        """Apply the typed WAL tail in log order — inserts (with their
+        attribute columns), tombstones, and column writes all replay, so
+        recovery restores EVERY mutation since the covered offset, not just
+        the edge triples (ISSUE 4 satellite: buffered columns survived)."""
+        if self.tree.wal is None:
             return
-        s, d, ty = LSMTree.replay_wal(path, offset=offset)
-        iv = self.tree.intervals
-        # the tail records are already in the WAL — re-inserting must not
+        # the tail records are already in the WAL — re-applying must not
         # append them again, so logging is suspended for the replay
-        wal, self.tree._wal = self.tree._wal, None
+        wal, self.tree.wal = self.tree.wal, None
         try:
-            self.tree.insert_edges(np.asarray(iv.to_original(s)),
-                                   np.asarray(iv.to_original(d)), etype=ty)
+            replay_ops(self.tree, wal.replay(offset=offset, end=end))
         finally:
-            self.tree._wal = wal
+            self.tree.wal = wal
 
     # -- the LSM partition sink -----------------------------------------------
     def _sink(self, level: int, j: int, part: EdgePartition) -> EdgePartition:
@@ -728,6 +826,7 @@ class GraphDB:
             return part
         digest = self.store.put(part)
         dp = self.store.open(digest)
+        self._touch(dp)
         self.maybe_evict()
         return dp
 
@@ -740,12 +839,31 @@ class GraphDB:
         for p in self._disk_partitions():
             p.evict()
 
+    def _touch(self, part: EdgePartition) -> None:
+        part._touch = next(self._touch_clock)
+
     def maybe_evict(self) -> None:
+        """Evict LRU-first until the decoded/override cache fits the budget
+        — partitions a recent query touched keep their caches; cold ones
+        (oldest touch stamp, or never touched) give theirs up first. The
+        old behavior dropped EVERY partition's cache the moment the total
+        crossed the budget, churning the hot set on every merge."""
         budget = self.resident_budget_bytes
         if budget is None:
             return
-        if sum(p.cached_nbytes() for p in self._disk_partitions()) > budget:
-            self.evict()
+        parts = self._disk_partitions()
+        total = sum(p.cached_nbytes() for p in parts)
+        if total <= budget:
+            return
+        for p in sorted(parts, key=lambda p: getattr(p, "_touch", 0)):
+            if total <= budget:
+                break
+            c = p.cached_nbytes()
+            if c:
+                p.evict()
+                # credit only what eviction actually reclaimed — RAM
+                # overrides (dirty column/etype state) survive evict()
+                total -= c - p.cached_nbytes()
 
     def _release_slab(self, part: EdgePartition) -> None:
         """With a residency budget, a batched query releases each slab's
@@ -753,9 +871,12 @@ class GraphDB:
         the pages a gather faulted in leave RSS before the next slab
         faults its own, so a whole-store batch peaks at ONE slab's
         footprint. Remapping is a cheap syscall and the kernel page cache
-        stays warm."""
-        if isinstance(part, DiskPartition) and self.resident_budget_bytes is not None:
-            part.evict()
+        stays warm. Every release also stamps touch recency, feeding the
+        LRU order `maybe_evict` uses on the insert path."""
+        if isinstance(part, DiskPartition):
+            self._touch(part)
+            if self.resident_budget_bytes is not None:
+                part.evict()
 
     def resident_nbytes(self) -> Dict[str, int]:
         parts = self._disk_partitions()
@@ -793,11 +914,62 @@ class GraphDB:
         keep = {os.path.basename(p.path)[5:-4]
                 for p in self._disk_partitions()}
         self.store.sync(keep)
-        manifest = self._write_manifest(wal_offset=self._wal_size())
+        manifest = self._write_manifest(wal_offset=self._wal_offset())
         self.store.gc({e["digest"] for lv in manifest["levels"]
                        for e in lv if e})
         self._gc_dead_files(manifest)
+        # WAL compaction: segments wholly below the covered offset carry
+        # only state the manifest already persists. Snapshot sessions that
+        # still need those bytes hold hard links — deleting here only drops
+        # the store's name for the inode, never the session's.
+        if self.tree.wal is not None:
+            self.tree.wal.compact(int(manifest["wal_offset"]))
         return manifest
+
+    SNAPSHOT = "SNAPSHOT.json"
+
+    def pin_snapshot(self, dest_dir: str) -> Dict[str, Any]:
+        """Pin the database's CURRENT logical state into `dest_dir` without
+        copying data: hard-link the last published manifest's partition
+        files (+ dead sidecars) and every WAL segment carrying records in
+        [manifest.wal_offset, tail), then write SNAPSHOT.json recording the
+        pinned tail offset. The linked inodes survive store GC and WAL
+        compaction, so the session stays readable — and bitwise stable up
+        to its pinned offset — no matter what the writer does next.
+        Single-writer callers may call this directly; under concurrency the
+        service tier (core/service.py) serializes it with mutations."""
+        if self.tree.wal is None:
+            raise ValueError("snapshots need a durable GraphDB (the WAL "
+                             "covers RAM partitions and live buffers)")
+        os.makedirs(dest_dir)
+        manifest = self._read_manifest()
+        self.tree.wal_flush(fsync=False)
+        pinned = self.tree.wal.tail_offset()
+        for lv in manifest["levels"]:
+            for e in lv:
+                if e is None:
+                    continue
+                self.store.link_into(e["digest"], dest_dir)
+                if e.get("dead"):
+                    _link_or_copy(
+                        os.path.join(self.store.dir,
+                                     f"part_{e['digest']}.dead.npy"),
+                        os.path.join(dest_dir,
+                                     f"part_{e['digest']}.dead.npy"))
+        wal_dir = os.path.join(dest_dir, "wal")
+        os.makedirs(wal_dir)
+        covered = int(manifest["wal_offset"])
+        for base, end, path in self.tree.wal.segments():
+            if end > covered and base < pinned:
+                _link_or_copy(path,
+                              os.path.join(wal_dir, os.path.basename(path)))
+        doc = dict(manifest)
+        doc["pinned_offset"] = int(pinned)
+        tmp = os.path.join(dest_dir, self.SNAPSHOT + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(tmp, os.path.join(dest_dir, self.SNAPSHOT))
+        return doc
 
     def _write_dead_sidecar(self, digest: str, dead: np.ndarray) -> None:
         """Tombstones persist OUTSIDE the (content-addressed, immutable)

@@ -36,6 +36,7 @@ __all__ = [
     "StorageEngine",
     "PALEngine",
     "LSMEngine",
+    "SnapshotEngine",
     "as_engine",
 ]
 
@@ -415,6 +416,19 @@ class LSMEngine(StorageEngine):
         for buf, top in zip(self.graph.buffers, self.graph.levels[0]):
             if len(buf):
                 yield _BufferSlab(buf, top.interval)
+
+
+class SnapshotEngine(LSMEngine):
+    """Engine over a pinned `Snapshot`'s private tree (core/service.py).
+
+    Same slab protocol as the live LSM engine, but the backing state is
+    immutable for the session's whole lifetime: there is no release hook
+    (the snapshot tree carries no residency budget), so decoded caches and
+    staged sort orders persist across batches — a session issuing many
+    frontier queries pays each slab's index materialization once. Mutation
+    never reaches here; `Snapshot` exposes no write methods."""
+
+    writable = False
 
 
 def as_engine(g) -> StorageEngine:

@@ -169,7 +169,9 @@ class EdgeBuffer:
     def drain(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Dict[str, np.ndarray]]:
         """Hand out the staged views and reset. The views alias the backing
         arrays and are only valid until the next mutation — the merge that
-        consumes them copies during its reorder/scatter."""
+        consumes them copies during its reorder/scatter. (The service
+        tier's maintenance thread holds the service lock through the whole
+        drain+merge, so writers cannot reuse the drained slots mid-merge.)"""
         st = self.staging()
         out = (st.src, st.dst, st.etype, st.columns)
         self._len = 0
@@ -259,6 +261,8 @@ class LSMTree:
         durable: bool = False,
         wal_path: Optional[str] = None,
         wal_sync: str = "commit",
+        wal: Optional[object] = None,
+        auto_flush: bool = True,
         partition_sink: Optional[
             Callable[[int, int, EdgePartition], EdgePartition]] = None,
     ):
@@ -305,9 +309,17 @@ class LSMTree:
         self.durable = durable
         assert wal_sync in ("always", "commit", "close"), wal_sync
         self.wal_sync = wal_sync
+        # typed WAL object (core/walog.SegmentedWAL): when set, it REPLACES
+        # the legacy raw-record file below and additionally records columns,
+        # tombstones, and in-place column writes (ISSUE 4)
+        self.wal = wal
+        # with auto_flush off, inserts only append (WAL + buffers) on the
+        # caller's thread; draining merges is the maintenance thread's job
+        # (core/service.py) — the insert path never runs a merge
+        self.auto_flush = auto_flush
         self._wal = None
         self.wal_path: Optional[str] = None
-        if durable:
+        if durable and wal is None:
             # every tree gets its OWN log: the old global /tmp default let
             # two trees in one process interleave records, and replay_wal
             # then resurrected foreign edges (regression-tested)
@@ -351,12 +363,14 @@ class LSMTree:
     def insert_edge(self, src: int, dst: int, etype: int = 0, **cols) -> None:
         isrc = self.intervals.to_internal_scalar(src)
         idst = self.intervals.to_internal_scalar(dst)
-        if self._wal is not None:
+        if self.wal is not None:
+            self.wal.append_inserts([isrc], [idst], [etype], cols)
+        elif self._wal is not None:
             self._wal_append(struct.pack("<qqb", isrc, idst, etype))
         self.buffers[self._top_index_of(idst)].append(isrc, idst, etype, cols)
         self.stats.inserts += 1
         self._buffered += 1
-        if self._buffered > self.buffer_cap:
+        if self._buffered > self.buffer_cap and self.auto_flush:
             self.flush_fullest_buffer()
 
     def insert_edges(self, src, dst, etype=None, columns: Optional[Dict] = None) -> None:
@@ -367,7 +381,10 @@ class LSMTree:
         columns = columns or {}
         isrc = self.intervals.to_internal(src)
         idst = self.intervals.to_internal(dst)
-        if self._wal is not None:
+        if self.wal is not None:
+            # ONE group-commit record, attribute columns included
+            self.wal.append_inserts(isrc, idst, etype, columns)
+        elif self._wal is not None:
             rec = np.rec.fromarrays(
                 [isrc, idst, etype.astype(np.int8)], names="s,d,t"
             )
@@ -385,7 +402,7 @@ class LSMTree:
                 )
         self.stats.inserts += int(src.shape[0])
         self._buffered += int(src.shape[0])
-        while self._buffered > self.buffer_cap:
+        while self._buffered > self.buffer_cap and self.auto_flush:
             self.flush_fullest_buffer()
 
     def total_buffered(self) -> int:
@@ -634,6 +651,8 @@ class LSMTree:
             hit = np.nonzero((st.src == isrc) & (st.dst == idst))[0]
             if hit.size:
                 buf.set_column(name, int(hit[-1]), value)
+                if self.wal is not None:
+                    self.wal.append_column(name, isrc, idst, value)
                 return True
         for level in self.levels:
             span = self.intervals.max_vertices // len(level)
@@ -644,6 +663,8 @@ class LSMTree:
             pos = part._live(pos)
             if pos.size:
                 part.set_column(name, pos[-1], value)
+                if self.wal is not None:
+                    self.wal.append_column(name, isrc, idst, value)
                 return True
         return False
 
@@ -675,6 +696,8 @@ class LSMTree:
                     found = True
         if found:
             self.stats.deletes += 1
+            if self.wal is not None:  # tombstones are durable pre-checkpoint
+                self.wal.append_delete(isrc, idst)
         return found
 
     # -- exports ------------------------------------------------------------------
@@ -716,12 +739,17 @@ class LSMTree:
     def wal_flush(self, fsync: bool = True) -> None:
         """Explicit durability point: push buffered WAL records to the OS
         and (optionally) to stable storage, regardless of sync policy."""
+        if self.wal is not None:
+            self.wal.flush(fsync=fsync)
         if self._wal is not None:
             self._wal.flush()
             if fsync:
                 os.fsync(self._wal.fileno())
 
     def close(self) -> None:
+        if self.wal is not None:
+            self.wal.close()
+            self.wal = None
         if self._wal is not None:
             self.wal_flush(fsync=True)
             self._wal.close()

@@ -219,6 +219,13 @@ def stream_interval_buckets(g: GraphLike, evict_each: bool = False):
         yield i, s, d
         if evict_each:
             for part in parts:
+                # a swept bucket's pages won't be re-read this pass: hint
+                # the kernel to drop them (madvise DONTNEED) so streaming
+                # the store doesn't churn hotter data out of the page
+                # cache, then unmap
+                advise = getattr(part, "advise_dontneed", None)
+                if advise is not None:
+                    advise()
                 ev = getattr(part, "evict", None)
                 if ev is not None:
                     ev()

@@ -1,0 +1,370 @@
+"""The concurrent service tier: snapshot-isolated reader sessions over a
+live GraphDB, with background maintenance (ISSUE 4; paper §1, §5 — an
+*online* graph database serves queries and fast insertions concurrently).
+
+Two classes:
+
+  * `Snapshot` — a read-only, self-contained session directory produced by
+    `GraphDB.pin_snapshot`: hard links to the pinned manifest's immutable
+    partition files (+ dead sidecars) and to the WAL segments covering
+    [manifest.wal_offset, pinned_offset). Opening one rebuilds the exact
+    logical state at the pinned WAL offset — manifest partitions + typed
+    tail replay (inserts with columns, tombstones, column writes) — so a
+    session answers queries bitwise-identical to a serial replay of its
+    prefix, forever, regardless of writer progress, compaction, store GC,
+    or WAL segment deletion (the links keep every needed inode alive).
+    Sessions are directory-addressed: any number of reader threads or
+    *processes* can `Snapshot.open(path)` the same pin concurrently.
+
+  * `ServiceDB` — the single-writer front end. One lock serializes
+    mutations, snapshot pinning, and maintenance; the insert path only
+    appends to the WAL and the in-memory buffers (`LSMTree.auto_flush` is
+    off), while a maintenance thread drains buffers (running the merges
+    and the partition-sink persistence), takes periodic checkpoints, and
+    GCs — all off the caller's thread. The dirty set is bounded: once
+    buffered edges exceed `backpressure_edges`, writers block until the
+    maintenance thread drains below the high-water mark.
+
+Maintenance thread state machine (DESIGN.md §8):
+
+    IDLE --buffered > cap--------------> FLUSH  (drain fullest buffer:
+      ^                                          merge + sink persistence)
+      |--ops since ckpt >= interval----> CHECKPOINT (persist + manifest +
+      |                                          store GC + WAL compaction)
+      '--close()-----------------------> final checkpoint, exit
+
+Every transition runs under the service lock; between transitions the lock
+is free for writers. Readers never take the lock after `begin_snapshot`
+returns — isolation comes from immutability, not locking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from .disk import GraphDB, open_partition_file, replay_ops
+from .lsm import LSMTree
+from .pal import IntervalMap
+from .walog import SegmentedWAL
+
+__all__ = ["ServiceDB", "Snapshot", "ServiceStats"]
+
+
+# ---------------------------------------------------------------------------
+# Snapshot — a pinned, read-only, process-shareable session
+# ---------------------------------------------------------------------------
+class Snapshot:
+    """A consistent read-only view of a GraphDB at one WAL offset.
+
+    Built from a session directory written by `GraphDB.pin_snapshot`. The
+    reconstruction is exactly the recovery path: open the pinned manifest's
+    partition files (mmap-backed, shared page cache across sessions), then
+    replay the typed WAL records in [wal_offset, pinned_offset) into
+    private in-memory state. Mutating methods are deliberately absent."""
+
+    def __init__(self, directory: str, doc: Optional[Dict[str, Any]] = None):
+        self.dir = directory
+        if doc is None:
+            with open(os.path.join(directory, GraphDB.SNAPSHOT)) as f:
+                doc = json.load(f)
+        self.doc = doc
+        self.pinned_offset = int(doc["pinned_offset"])
+        config = doc["config"]
+        iv = IntervalMap(n_partitions=config["n_partitions"],
+                         interval_len=config["interval_len"])
+        column_dtypes = {k: np.dtype(s)
+                         for k, s in config["column_dtypes"].items()}
+        tree = LSMTree(
+            iv, n_levels=config["n_levels"], branching=config["branching"],
+            buffer_cap=config["buffer_cap"],
+            max_partition_edges=config["max_partition_edges"],
+            column_dtypes=column_dtypes, durable=False)
+        for li, level in enumerate(doc["levels"]):
+            for pi, entry in enumerate(level):
+                if entry is None:
+                    continue
+                part = open_partition_file(
+                    os.path.join(directory, f"part_{entry['digest']}.pal"))
+                dead = os.path.join(directory,
+                                    f"part_{entry['digest']}.dead.npy")
+                if entry.get("dead") and os.path.exists(dead):
+                    part.dead = np.load(dead)
+                tree.levels[li][pi] = part
+        wal = SegmentedWAL(os.path.join(directory, "wal"), readonly=True)
+        replay_ops(tree, wal.replay(offset=int(doc["wal_offset"]),
+                                    end=self.pinned_offset))
+        self.tree = tree
+        self._engine = None
+
+    @classmethod
+    def open(cls, directory: str) -> "Snapshot":
+        """Open an existing session directory — the cross-process entry
+        point (reader processes share nothing but the immutable files)."""
+        return cls(directory)
+
+    # -- read surface ---------------------------------------------------------
+    @property
+    def intervals(self) -> IntervalMap:
+        return self.tree.intervals
+
+    @property
+    def n_edges(self) -> int:
+        return self.tree.n_edges
+
+    def storage_engine(self):
+        if self._engine is None:
+            from .engine import SnapshotEngine
+            self._engine = SnapshotEngine(self.tree)
+        return self._engine
+
+    def out_neighbors(self, v: int) -> np.ndarray:
+        return self.tree.out_neighbors(v)
+
+    def in_neighbors(self, v: int) -> np.ndarray:
+        return self.tree.in_neighbors(v)
+
+    def to_coo(self):
+        return self.tree.to_coo()
+
+    def all_partitions(self):
+        return self.tree.all_partitions()
+
+    def snapshot(self, **kw):
+        """Compile the pinned state into a DeviceGraph for PSW analytics."""
+        return self.tree.snapshot(**kw)
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        """Drop mappings and decoded caches; the session dir stays openable."""
+        for part in self.tree.all_partitions():
+            ev = getattr(part, "evict", None)
+            if ev is not None:
+                ev()
+
+    def release(self) -> None:
+        """Close AND delete the session directory — the last hard link to
+        any GC'd partition file or compacted WAL segment drops here."""
+        self.close()
+        shutil.rmtree(self.dir, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# ServiceDB — single writer, background maintenance, snapshot hand-out
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ServiceStats:
+    flushes: int = 0          # maintenance buffer drains (merges + sink)
+    checkpoints: int = 0      # maintenance checkpoints (manifest + GC)
+    snapshots: int = 0        # sessions pinned
+    backpressure_waits: int = 0  # insert calls that blocked on the bound
+
+
+class ServiceDB:
+    """Concurrent front end over a durable GraphDB.
+
+    Writer methods (insert/delete/update) append to the WAL + buffers under
+    the service lock and return; merges, partition persistence, checkpoint
+    GC, and WAL compaction run on the maintenance thread. `begin_snapshot`
+    pins the current logical state into a session directory and returns a
+    `Snapshot` any number of readers can query (or re-open by path from
+    other processes) without ever contending with the writer."""
+
+    def __init__(self, db: GraphDB,
+                 checkpoint_interval_ops: int = 500_000,
+                 backpressure_edges: Optional[int] = None,
+                 maintenance: bool = True):
+        if db.tree.wal is None:
+            raise ValueError("ServiceDB needs a durable GraphDB")
+        self.db = db
+        self.tree = db.tree
+        self.tree.auto_flush = False  # inserts never merge on their thread
+        self.checkpoint_interval_ops = int(checkpoint_interval_ops)
+        self.backpressure_edges = int(backpressure_edges
+                                      if backpressure_edges is not None
+                                      else 4 * self.tree.buffer_cap)
+        self.stats = ServiceStats()
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._drained = threading.Condition(self._lock)
+        self._closing = False
+        self._ops_since_ckpt = 0
+        self._snap_ids = itertools.count()
+        self.maintenance_error: Optional[BaseException] = None
+        self._thread: Optional[threading.Thread] = None
+        if maintenance:
+            self._thread = threading.Thread(
+                target=self._maintenance_loop, name="graphdb-maintenance",
+                daemon=True)
+            self._thread.start()
+
+    # -- lifecycle -------------------------------------------------------------
+    @classmethod
+    def create(cls, directory: str, max_id: int,
+               checkpoint_interval_ops: int = 500_000,
+               backpressure_edges: Optional[int] = None,
+               maintenance: bool = True, **graphdb_kw) -> "ServiceDB":
+        graphdb_kw.setdefault("durable", True)
+        db = GraphDB.create(directory, max_id=max_id, **graphdb_kw)
+        return cls(db, checkpoint_interval_ops=checkpoint_interval_ops,
+                   backpressure_edges=backpressure_edges,
+                   maintenance=maintenance)
+
+    @classmethod
+    def open(cls, directory: str, **service_kw) -> "ServiceDB":
+        return cls(GraphDB.open(directory), **service_kw)
+
+    def close(self) -> None:
+        with self._lock:
+            self._closing = True
+            self._work.notify_all()
+            self._drained.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        with self._lock:
+            self.db.close()  # final checkpoint + WAL close
+
+    # -- writer surface --------------------------------------------------------
+    def _after_mutation(self, n_ops: int) -> None:
+        """Caller holds the lock. Account ops, wake maintenance, apply
+        backpressure: block while the dirty set exceeds the bound."""
+        if self.maintenance_error is not None:
+            # a dead maintenance thread would leave backpressure waiting
+            # forever — surface its failure to the writer instead
+            raise RuntimeError("maintenance thread died") \
+                from self.maintenance_error
+        self._ops_since_ckpt += n_ops
+        if self._pending_work():
+            self._work.notify()
+        waited = False
+        while (self.tree.total_buffered() > self.backpressure_edges
+               and not self._closing and self._thread is not None
+               and self._thread.is_alive()):
+            waited = True
+            self._work.notify()
+            self._drained.wait(timeout=1.0)
+        if waited:
+            self.stats.backpressure_waits += 1
+
+    def insert_edge(self, src: int, dst: int, etype: int = 0, **cols) -> None:
+        with self._lock:
+            self.tree.insert_edge(src, dst, etype=etype, **cols)
+            self._after_mutation(1)
+
+    def insert_edges(self, src, dst, etype=None, columns=None) -> None:
+        n = int(np.asarray(src).shape[0])
+        with self._lock:
+            self.tree.insert_edges(src, dst, etype=etype, columns=columns)
+            self._after_mutation(n)
+
+    def delete_edge(self, src: int, dst: int) -> bool:
+        with self._lock:
+            found = self.tree.delete_edge(src, dst)
+            self._after_mutation(1)
+            return found
+
+    def update_edge_column(self, src: int, dst: int, name: str, value) -> bool:
+        with self._lock:
+            ok = self.tree.update_edge_column(src, dst, name, value)
+            self._after_mutation(1)
+            return ok
+
+    def checkpoint(self) -> Dict[str, Any]:
+        with self._lock:
+            manifest = self.db.checkpoint()
+            self._ops_since_ckpt = 0
+            return manifest
+
+    # -- snapshot sessions -----------------------------------------------------
+    def begin_snapshot(self) -> Snapshot:
+        """Pin the current logical state and return a read-only session.
+        The pin (hard links + SNAPSHOT.json) happens under the lock — a
+        few syscalls, no data copy; the session rebuild (mmap + WAL tail
+        replay) happens outside it, off the writer's critical path."""
+        with self._lock:
+            base = os.path.join(self.db.dir, "snapshots")
+            os.makedirs(base, exist_ok=True)
+            while True:
+                # the counter restarts per instance and pids recycle, so a
+                # reopened ServiceDB can land on a still-live session name —
+                # skip collisions instead of crashing
+                sid = f"snap_{os.getpid()}_{next(self._snap_ids):06d}"
+                dest = os.path.join(base, sid)
+                try:
+                    doc = self.db.pin_snapshot(dest)
+                    break
+                except FileExistsError:
+                    continue
+            self.stats.snapshots += 1
+        return Snapshot(dest, doc=doc)
+
+    # -- live reads (serialized with the writer) -------------------------------
+    def out_neighbors(self, v: int) -> np.ndarray:
+        with self._lock:
+            return self.db.out_neighbors(v)
+
+    def in_neighbors(self, v: int) -> np.ndarray:
+        with self._lock:
+            return self.db.in_neighbors(v)
+
+    @property
+    def n_edges(self) -> int:
+        with self._lock:
+            return self.tree.n_edges
+
+    @property
+    def intervals(self) -> IntervalMap:
+        return self.tree.intervals
+
+    def storage_engine(self):
+        """The LIVE engine — only safe while no concurrent writer runs
+        (e.g. single-thread benchmarking). Concurrent readers should use
+        `begin_snapshot().storage_engine()` instead."""
+        return self.db.storage_engine()
+
+    # -- maintenance -----------------------------------------------------------
+    def _pending_work(self) -> bool:
+        return (self.tree.total_buffered() > self.tree.buffer_cap
+                or self._ops_since_ckpt >= self.checkpoint_interval_ops)
+
+    def _maintenance_loop(self) -> None:
+        try:
+            self._maintenance_steps()
+        except BaseException as e:
+            # don't die silently: record the failure so the next writer
+            # call raises it instead of hanging in the backpressure wait
+            with self._lock:
+                self.maintenance_error = e
+                self._drained.notify_all()
+
+    def _maintenance_steps(self) -> None:
+        while True:
+            # one lock acquisition per transition: the lock is actually
+            # free between a flush and the next flush/checkpoint, so
+            # writers and live reads interleave with a sustained drain
+            # instead of stalling behind the whole backlog
+            with self._lock:
+                while not self._pending_work() and not self._closing:
+                    self._work.wait(timeout=0.5)
+                if self._closing:
+                    return  # close() checkpoints what remains
+                if self.tree.total_buffered() > self.tree.buffer_cap:
+                    # FLUSH: one whole buffer per merge — back-to-back
+                    # small flushes of the same top partition batch into
+                    # one rewrite instead of many
+                    self.tree.flush_fullest_buffer()
+                    self.stats.flushes += 1
+                elif self._ops_since_ckpt >= self.checkpoint_interval_ops:
+                    # CHECKPOINT: persist + manifest + store GC + WAL
+                    # segment compaction
+                    self.db.checkpoint()
+                    self._ops_since_ckpt = 0
+                    self.stats.checkpoints += 1
+                self._drained.notify_all()

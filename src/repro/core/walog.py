@@ -1,0 +1,381 @@
+"""Segmented durable write-ahead log (ISSUE 4, ROADMAP "WAL compaction",
+"Mutation durability", "Columns in the WAL").
+
+The single append-only `wal.log` of PR 3 had three gaps: it only grew (the
+manifest recorded covered offsets but bytes were never reclaimed), it only
+recorded `(src, dst, etype)` (buffered attribute columns and all deletes /
+column writes were lost between checkpoints), and a reader could not pin a
+stable prefix while a writer kept appending. `SegmentedWAL` closes all
+three:
+
+  * **Segments.** The log is a directory of `seg_<base>.wal` files, rotated
+    once a segment's record bytes exceed `segment_bytes`. Offsets handed to
+    callers are *global logical* offsets over the concatenated record
+    stream (headers excluded), so they survive rotation; `<base>` in the
+    file name is the segment's first record's global offset. Segments
+    wholly below a checkpoint's covered offset are deleted by
+    `compact(covered)` — on-disk WAL bytes shrink instead of growing
+    forever. Rotation fsyncs the sealed segment.
+  * **Typed records with a declared column schema.** Each segment header
+    carries the schema (sorted column name → dtype); insert records store
+    the columns positionally after the edge triples, so crash recovery
+    restores attribute values buffered since the last checkpoint. Deletes
+    (tombstones) and in-place column writes are record types of their own —
+    *every* mutation is durable between checkpoints, not just inserts.
+  * **Pinnable prefixes.** Segment files are append-only and never
+    rewritten, so hard-linking them into a session directory pins the
+    bytes; `replay(offset, end)` caps at `end`, giving a snapshot a
+    bitwise-stable view of the record stream even while the writer keeps
+    appending to the shared inode (core/service.py).
+
+Record stream grammar (little-endian):
+
+    INSERT  = 0x01  u32 n  n×(i64 src, i64 dst, i8 etype)
+                    then, per schema column in schema order, n×itemsize
+    DELETE  = 0x02  i64 src, i64 dst                (internal IDs)
+    COLUMN  = 0x03  u16 schema_index, i64 src, i64 dst, itemsize value
+
+A torn trailing record (crash mid-write) is detected by length and dropped;
+opening for append truncates the active segment back to the last whole
+record so new records never follow garbage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import threading
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["SegmentedWAL", "REC_INSERT", "REC_DELETE", "REC_COLUMN"]
+
+_MAGIC = b"GCDBWAL1"
+REC_INSERT = 1
+REC_DELETE = 2
+REC_COLUMN = 3
+
+_EDGE_DT = np.dtype([("s", "<i8"), ("d", "<i8"), ("t", "i1")])
+_INSERT_HDR = struct.Struct("<BI")
+_DELETE_REC = struct.Struct("<Bqq")
+_COLUMN_HDR = struct.Struct("<BHqq")
+
+
+class SegmentedWAL:
+    """Rotating segmented WAL over a directory. One writer; any number of
+    readers via `replay` (including read-only instances over a directory of
+    hard-linked segments). All appends are thread-safe behind one lock."""
+
+    def __init__(self, directory: str,
+                 column_dtypes: Optional[Dict[str, Any]] = None,
+                 sync: str = "commit", segment_bytes: int = 4 << 20,
+                 readonly: bool = False):
+        assert sync in ("always", "commit", "close"), sync
+        self.dir = directory
+        self.sync = sync
+        self.segment_bytes = int(segment_bytes)
+        self.readonly = readonly
+        self._lock = threading.Lock()
+        self._f = None
+        os.makedirs(directory, exist_ok=True)
+        segs = self._scan()
+        # quarantine a torn-HEADER tail segment (crash during rotation,
+        # before the header's fsync): it was created but never held an
+        # acknowledged record — appends only start after the header is on
+        # disk — so dropping it loses nothing. Only the newest segment can
+        # be in this state; an unreadable earlier segment is corruption.
+        # A writer deletes the file; a readonly session just ignores it.
+        while segs and _try_header(segs[-1][1]) is None:
+            base, path = segs.pop()
+            if not readonly:
+                os.remove(path)
+        if segs:
+            # schema is immutable per WAL: read it back from any header
+            hdr = _read_header(segs[-1][1])
+            self.schema: List[Tuple[str, np.dtype]] = [
+                (name, np.dtype(s)) for name, s in hdr["schema"]]
+            if column_dtypes is not None:
+                declared = sorted((k, np.dtype(v).str)
+                                  for k, v in column_dtypes.items())
+                assert declared == [(n, dt.str) for n, dt in self.schema], (
+                    "WAL column schema mismatch: "
+                    f"{declared} vs {hdr['schema']}")
+        else:
+            self.schema = sorted(
+                (k, np.dtype(v)) for k, v in (column_dtypes or {}).items())
+        self._names = [n for n, _ in self.schema]
+        if readonly:
+            self._base = self._tail = self._end_of(segs)
+            return
+        if segs:
+            base, path = segs[-1]
+            self._base = base
+            # truncate a torn tail so appends resume at a record boundary
+            body_len = os.path.getsize(path) - _header_len(path)
+            good = _parse_len(_read_body(path), self.schema)
+            if good < body_len:
+                with open(path, "r+b") as f:
+                    f.truncate(_header_len(path) + good)
+            self._tail = base + good
+            self._seg_bytes = good
+            self._f = open(path, "ab", buffering=1 << 20)
+        else:
+            self._base = self._tail = 0
+            self._open_segment(0)
+
+    # -- segment bookkeeping ---------------------------------------------------
+    def _scan(self) -> List[Tuple[int, str]]:
+        segs = []
+        for fname in os.listdir(self.dir):
+            if fname.startswith("seg_") and fname.endswith(".wal"):
+                segs.append((int(fname[4:-4]),
+                             os.path.join(self.dir, fname)))
+        return sorted(segs)
+
+    def _end_of(self, segs) -> int:
+        for base, path in reversed(segs):
+            if _try_header(path) is not None:
+                return base + os.path.getsize(path) - _header_len(path)
+        return 0
+
+    def _open_segment(self, base: int) -> None:
+        path = os.path.join(self.dir, f"seg_{base:020d}.wal")
+        header = json.dumps({
+            "base": base,
+            "schema": [[n, dt.str] for n, dt in self.schema],
+        }, sort_keys=True).encode()
+        with open(path, "wb") as f:
+            f.write(_MAGIC)
+            f.write(struct.pack("<I", len(header)))
+            f.write(header)
+            f.flush()
+            os.fsync(f.fileno())
+        self._f = open(path, "ab", buffering=1 << 20)
+        self._base = base
+        self._seg_bytes = 0
+
+    def _rotate(self) -> None:
+        self._f.flush()
+        os.fsync(self._f.fileno())  # seal: a sealed segment is fully durable
+        self._f.close()
+        self._open_segment(self._tail)
+
+    # -- appends ---------------------------------------------------------------
+    def _append(self, payload: bytes) -> None:
+        assert not self.readonly, "read-only WAL"
+        with self._lock:
+            self._f.write(payload)
+            self._tail += len(payload)
+            self._seg_bytes += len(payload)
+            if self.sync == "commit":
+                self._f.flush()
+            elif self.sync == "always":
+                self._f.flush()
+                os.fsync(self._f.fileno())
+            if self._seg_bytes >= self.segment_bytes:
+                self._rotate()
+
+    def append_inserts(self, isrc, idst, etype,
+                       columns: Optional[Dict[str, Any]] = None) -> None:
+        """ONE group-commit record for a whole insert batch, columns
+        included (internal IDs)."""
+        isrc = np.ascontiguousarray(isrc, np.int64).ravel()
+        n = int(isrc.shape[0])
+        if n == 0:
+            return
+        rec = np.empty(n, _EDGE_DT)
+        rec["s"] = isrc
+        rec["d"] = np.asarray(idst, np.int64).ravel()
+        rec["t"] = np.asarray(etype, np.int8).ravel()
+        parts = [_INSERT_HDR.pack(REC_INSERT, n), rec.tobytes()]
+        columns = columns or {}
+        for name, dt in self.schema:
+            v = columns.get(name)
+            if v is None:
+                arr = np.zeros(n, dt)
+            else:
+                arr = np.broadcast_to(np.asarray(v, dt), (n,))
+            parts.append(np.ascontiguousarray(arr).tobytes())
+        self._append(b"".join(parts))
+
+    def append_delete(self, isrc: int, idst: int) -> None:
+        self._append(_DELETE_REC.pack(REC_DELETE, int(isrc), int(idst)))
+
+    def append_column(self, name: str, isrc: int, idst: int, value) -> None:
+        ci = self._names.index(name)
+        dt = self.schema[ci][1]
+        self._append(_COLUMN_HDR.pack(REC_COLUMN, ci, int(isrc), int(idst))
+                     + np.asarray(value, dt).tobytes())
+
+    # -- durability ------------------------------------------------------------
+    def flush(self, fsync: bool = False) -> None:
+        if self.readonly or self._f is None:
+            return
+        with self._lock:
+            self._f.flush()
+            if fsync:
+                os.fsync(self._f.fileno())
+
+    def tail_offset(self) -> int:
+        with self._lock:
+            return self._tail
+
+    def close(self) -> None:
+        if self._f is not None:
+            self.flush(fsync=True)
+            self._f.close()
+            self._f = None
+
+    # -- segment lifecycle -----------------------------------------------------
+    def segments(self) -> List[Tuple[int, int, str]]:
+        """(base_offset, end_offset, path) per readable segment, ascending
+        (a torn-header tail segment holds no acked records and is skipped)."""
+        out = []
+        for base, path in self._scan():
+            if _try_header(path) is not None:
+                out.append((base, base + os.path.getsize(path)
+                            - _header_len(path), path))
+        return out
+
+    def compact(self, covered_offset: int) -> int:
+        """Delete segments wholly below the covered offset (checkpointed
+        state supersedes them). The active segment is never deleted — it is
+        rotated first if it too is fully covered, so the next segment
+        starts exactly at the covered boundary."""
+        if self.readonly:
+            return 0  # a pinned session dir never reclaims its links
+        removed = 0
+        with self._lock:
+            if (self._f is not None
+                    and self._tail <= covered_offset and self._seg_bytes > 0):
+                self._rotate()
+        for base, end, path in self.segments():
+            if end <= covered_offset and base != self._base:
+                os.remove(path)
+                removed += 1
+        return removed
+
+    def on_disk_bytes(self) -> int:
+        return sum(os.path.getsize(p) for _, _, p in self.segments())
+
+    # -- replay ----------------------------------------------------------------
+    def replay(self, offset: int = 0,
+               end: Optional[int] = None) -> Iterator[Tuple]:
+        """Decode records whose global offsets lie in [offset, end). Yields
+        ("insert", src, dst, etype, columns) | ("delete", s, d) |
+        ("column", name, s, d, value), in log order. `offset`/`end` must be
+        record boundaries the WAL handed out (tail offsets); a torn
+        trailing record is dropped."""
+        self.flush()
+        for base, path in self._scan():
+            if end is not None and base >= end:
+                break
+            hdr = _try_header(path)
+            if hdr is None:
+                continue  # torn-header tail segment: holds no acked records
+            body = _read_body(path)
+            seg_end = base + len(body)
+            if seg_end <= offset:
+                continue
+            lo = max(0, offset - base)
+            hi = len(body) if end is None else min(len(body), end - base)
+            schema = [(n, np.dtype(s)) for n, s in hdr["schema"]]
+            yield from _parse(body[lo:hi], schema)
+
+
+# ---------------------------------------------------------------------------
+# Segment parsing (shared by replay, torn-tail recovery)
+# ---------------------------------------------------------------------------
+def _read_header(path: str) -> Dict[str, Any]:
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        if magic != _MAGIC:
+            raise ValueError(f"{path}: not a WAL segment")
+        (hlen,) = struct.unpack("<I", f.read(4))
+        return json.loads(f.read(hlen))
+
+
+def _try_header(path: str) -> Optional[Dict[str, Any]]:
+    """Header, or None for an empty/torn-header segment file."""
+    try:
+        return _read_header(path)
+    except (ValueError, struct.error, json.JSONDecodeError, KeyError):
+        return None
+
+
+def _header_len(path: str) -> int:
+    with open(path, "rb") as f:
+        f.seek(8)
+        (hlen,) = struct.unpack("<I", f.read(4))
+    return 12 + hlen
+
+
+def _read_body(path: str) -> bytes:
+    with open(path, "rb") as f:
+        data = f.read()
+    hlen = struct.unpack("<I", data[8:12])[0]
+    return data[12 + hlen:]
+
+
+def _record_span(buf: bytes, p: int, schema) -> int:
+    """Byte length of the record starting at p, or -1 if torn/unknown."""
+    kind = buf[p]
+    if kind == REC_INSERT:
+        if p + _INSERT_HDR.size > len(buf):
+            return -1
+        (_, n) = _INSERT_HDR.unpack_from(buf, p)
+        span = _INSERT_HDR.size + n * _EDGE_DT.itemsize
+        for _, dt in schema:
+            span += n * dt.itemsize
+        return span
+    if kind == REC_DELETE:
+        return _DELETE_REC.size
+    if kind == REC_COLUMN:
+        if p + _COLUMN_HDR.size > len(buf):
+            return -1
+        (_, ci, _, _) = _COLUMN_HDR.unpack_from(buf, p)
+        if ci >= len(schema):
+            return -1
+        return _COLUMN_HDR.size + schema[ci][1].itemsize
+    return -1  # unknown kind: treat as torn
+
+
+def _parse_len(buf: bytes, schema) -> int:
+    """Length of the longest whole-record prefix of buf."""
+    p = 0
+    while p < len(buf):
+        span = _record_span(buf, p, schema)
+        if span < 0 or p + span > len(buf):
+            break
+        p += span
+    return p
+
+
+def _parse(buf: bytes, schema) -> Iterator[Tuple]:
+    p = 0
+    while p < len(buf):
+        span = _record_span(buf, p, schema)
+        if span < 0 or p + span > len(buf):
+            break  # torn trailing record
+        kind = buf[p]
+        if kind == REC_INSERT:
+            (_, n) = _INSERT_HDR.unpack_from(buf, p)
+            q = p + _INSERT_HDR.size
+            rec = np.frombuffer(buf, _EDGE_DT, count=n, offset=q)
+            q += n * _EDGE_DT.itemsize
+            cols = {}
+            for name, dt in schema:
+                cols[name] = np.frombuffer(buf, dt, count=n, offset=q)
+                q += n * dt.itemsize
+            yield ("insert", rec["s"], rec["d"], rec["t"], cols)
+        elif kind == REC_DELETE:
+            (_, s, d) = _DELETE_REC.unpack_from(buf, p)
+            yield ("delete", s, d)
+        else:
+            (_, ci, s, d) = _COLUMN_HDR.unpack_from(buf, p)
+            name, dt = schema[ci]
+            val = np.frombuffer(buf, dt, count=1,
+                                offset=p + _COLUMN_HDR.size)[0]
+            yield ("column", name, s, d, val)
+        p += span

@@ -232,15 +232,19 @@ class TestGraphDB:
         assert sorted(zip(*map(list, db2.to_coo()))) == pre
 
     def test_torn_wal_record_dropped(self, tmp_path):
+        """A crash mid-append leaves a torn trailing record in the active
+        WAL segment; replay must drop it and recovery must still open."""
         db = make_db(tmp_path)
-        self._fill(db, n=5000)
+        src, dst = self._fill(db, n=5000)
         db.tree.wal_flush()
-        wal = str(tmp_path / "db" / "wal.log")
-        size = os.path.getsize(wal)
-        with open(wal, "ab") as f:  # torn trailing record
+        pre = sorted(zip(*map(list, db.to_coo())))
+        segs = db.tree.wal.segments()
+        with open(segs[-1][2], "ab") as f:  # torn trailing record
             f.write(b"\x01\x02\x03")
-        s, d, t = LSMTree.replay_wal(wal)
-        assert s.shape[0] == 5000
+        crash = str(tmp_path / "crash")
+        shutil.copytree(str(tmp_path / "db"), crash)
+        db2 = GraphDB.open(crash)
+        assert sorted(zip(*map(list, db2.to_coo()))) == pre
 
     def test_checkpoint_gcs_unreferenced_files(self, tmp_path):
         db = make_db(tmp_path)
@@ -256,6 +260,41 @@ class TestGraphDB:
         # every live digest is openable
         for e in (e for lv in manifest["levels"] for e in lv if e):
             db.store.open(e["digest"])
+
+    def test_legacy_wal_log_migrates_on_open(self, tmp_path):
+        """A PR-3-format database (single wal.log, manifest wal_offset in
+        its bytes) must not lose its WAL tail: open replays the legacy
+        records, re-logs them into the segmented WAL, and retires the
+        file."""
+        import struct
+        db = make_db(tmp_path)
+        src, dst = self._fill(db, n=20000)
+        db.checkpoint()
+        db.close()
+        dbdir = str(tmp_path / "db")
+        # forge the legacy layout: drop the segmented WAL, put the
+        # post-checkpoint tail into wal.log, point the manifest at byte 0
+        shutil.rmtree(os.path.join(dbdir, "wal"))
+        iv = db.tree.intervals
+        extra = [(9001, 42), (9002, 43)]
+        with open(os.path.join(dbdir, "wal.log"), "wb") as f:
+            for s, d in extra:
+                f.write(struct.pack("<qqb", iv.to_internal_scalar(s),
+                                    iv.to_internal_scalar(d), 0))
+        with open(os.path.join(dbdir, GraphDB.MANIFEST)) as f:
+            manifest = json.load(f)
+        manifest["wal_offset"] = 0
+        with open(os.path.join(dbdir, GraphDB.MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        db2 = GraphDB.open(dbdir)
+        assert db2.n_edges == 20000 + 2
+        assert 42 in db2.out_neighbors(9001)
+        assert not os.path.exists(os.path.join(dbdir, "wal.log"))
+        assert os.path.exists(os.path.join(dbdir, "wal.log.migrated"))
+        # the migrated records are durable in the NEW wal/manifest
+        db2.close()
+        db3 = GraphDB.open(dbdir)
+        assert 43 in db3.out_neighbors(9002)
 
     def test_create_refuses_existing(self, tmp_path):
         make_db(tmp_path)
@@ -295,6 +334,39 @@ class TestGraphDB:
         assert sum(p.cached_nbytes() for p in db._disk_partitions()) == 0
         # queries still work after eviction
         assert db.out_neighbors(int(src[0])).size >= 0
+
+    def test_lru_eviction_keeps_recently_touched(self, tmp_path):
+        """Page-cache-aware eviction (ISSUE 4 satellite): over budget, the
+        COLDEST partitions give up their decoded caches first; one the
+        engine just touched survives if dropping the cold set suffices."""
+        db = make_db(tmp_path)
+        src, dst = self._fill(db)
+        parts = db._disk_partitions()
+        assert len(parts) >= 2
+        for p in parts:  # materialize a decoded cache everywhere
+            _ = p.src_vertices
+        # touch one partition recently, leave the rest cold
+        hot = parts[0]
+        db._touch(hot)
+        db.resident_budget_bytes = hot.cached_nbytes()
+        db.maybe_evict()
+        assert hot.cached_nbytes() > 0, "hot partition was evicted"
+        assert sum(p.cached_nbytes() for p in parts if p is not hot) == 0
+        # shrinking the budget below the hot set evicts it too
+        db.resident_budget_bytes = 0
+        db.maybe_evict()
+        assert hot.cached_nbytes() == 0
+
+    def test_advise_dontneed_is_safe(self, tmp_path):
+        """madvise(DONTNEED) on mapped sections is advisory: queries after
+        the hint return identical results (pages fault back in)."""
+        db = make_db(tmp_path)
+        src, dst = self._fill(db)
+        part = db._disk_partitions()[0]
+        v = int(part.src[0])
+        before = np.array(part.out_edges(v))
+        part.advise_dontneed()
+        assert np.array_equal(part.out_edges(v), before)
 
     def test_update_column_on_disk_partition(self, tmp_path):
         db = make_db(tmp_path, column_dtypes={"w": np.float32})
