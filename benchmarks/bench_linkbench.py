@@ -49,10 +49,12 @@ def _serve(wl, tree, nodes, n_requests: int):
         elif op == "edge_delete":
             tree.delete_edge(req["u"], req["v"])
         elif op == "edge_getrange":
-            hits = tree.out_edges(req["u"])
+            # hits now include buffered edges (level -1); one vectorized
+            # gather per slab replaces the per-hit Python loop, which also
+            # silently skipped every buffered edge's timestamp (ISSUE 5)
+            hits = tree.out_edge_hits(req["u"])
+            tss = tree.columns_for_hits(hits, "ts")
             # timestamp-range filter + sort (paper notes the sort cost)
-            tss = [tree.levels[li][pi].columns["ts"][pos]
-                   for li, pi, pos in hits]
             order = np.argsort(tss)[-10:]
         elif op == "edge_outnbrs":
             _ = tree.out_neighbors(req["u"])

@@ -13,7 +13,8 @@ from .pal import (
     run_from_partition,
     sorted_run_index,
 )
-from .lsm import BufferStaging, EdgeBuffer, LSMStats, LSMTree
+from .lsm import BufferStaging, EdgeBuffer, LSMStats, LSMTree, MergeTxn
+from .manifest import EpochGuard, LevelManifest, ManifestPartition, ManifestView
 from .disk import (
     DiskPartition,
     GraphDB,
@@ -29,12 +30,13 @@ from .engine import (
     EdgeBatch,
     EdgeChunk,
     LSMEngine,
+    ManifestEngine,
     PALEngine,
     SnapshotEngine,
     StorageEngine,
     as_engine,
 )
-from .service import ServiceDB, ServiceStats, Snapshot
+from .service import ServiceDB, ServiceStats, Snapshot, tail_cache_stats
 from .walog import SegmentedWAL
 from .psw import (
     DeviceGraph,
@@ -65,10 +67,12 @@ __all__ = [
     "build_partition", "merge_runs", "merge_runs_into_partition",
     "merge_sorted_runs", "partition_from_run",
     "run_from_arrays", "run_from_partition", "sorted_run_index",
-    "BufferStaging", "EdgeBuffer", "LSMStats", "LSMTree",
-    "EdgeBatch", "EdgeChunk", "LSMEngine", "PALEngine", "SnapshotEngine",
-    "StorageEngine", "as_engine",
+    "BufferStaging", "EdgeBuffer", "LSMStats", "LSMTree", "MergeTxn",
+    "EpochGuard", "LevelManifest", "ManifestPartition", "ManifestView",
+    "EdgeBatch", "EdgeChunk", "LSMEngine", "ManifestEngine", "PALEngine",
+    "SnapshotEngine", "StorageEngine", "as_engine",
     "SegmentedWAL", "ServiceDB", "ServiceStats", "Snapshot",
+    "tail_cache_stats",
     "DeviceGraph", "build_device_graph", "edge_centric_sweep",
     "edge_centric_sweep_arrays", "pagerank_device", "pagerank_host",
     "pagerank_out_of_core", "psw_sweep_host", "stream_interval_buckets",

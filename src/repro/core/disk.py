@@ -38,6 +38,7 @@ import json
 import mmap
 import os
 import shutil
+import threading
 import weakref
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -136,11 +137,13 @@ def _pad(f, align: int = _ALIGN) -> int:
 def write_partition_file(path: str, part: EdgePartition,
                          fsync: bool = True) -> None:
     """Serialize a partition to one flat file: magic, JSON header, aligned
-    raw sections. Written to `<path>.tmp` then atomically renamed — a crash
-    mid-write can never leave a half-file at the published path. With
-    `fsync=False` durability is deferred: correct as long as the caller
-    syncs before publishing a manifest that references the file (a torn
-    unreferenced file is never read by recovery)."""
+    raw sections. Written to a per-thread-unique `<path>.tmp*` then
+    atomically renamed — a crash mid-write can never leave a half-file at
+    the published path, and two maintenance workers racing to persist the
+    same digest each write their own temp (last rename wins, same bytes).
+    With `fsync=False` durability is deferred: correct as long as the
+    caller syncs before publishing a manifest that references the file (a
+    torn unreferenced file is never read by recovery)."""
     sections: Dict[str, Tuple[int, str, int]] = {}
     gamma: Dict[str, Dict[str, int]] = {}
 
@@ -162,7 +165,7 @@ def write_partition_file(path: str, part: EdgePartition,
         packed, nbits, first, offsets = encode_monotonic_blocked(arr)
         gamma_blobs.append((name, packed, offsets, nbits, first, int(arr.shape[0])))
 
-    tmp = path + ".tmp"
+    tmp = f"{path}.tmp{os.getpid()}_{threading.get_ident()}"
     with open(tmp, "wb") as f:
         f.write(_MAGIC)
         f.write(b"\0" * 8)  # header-length placeholder
@@ -262,6 +265,13 @@ class DiskPartition(EdgePartition):
         self.header = header
         self.io = io
         self.index_mode = index_mode
+        # stores WITHOUT a residency budget (the service tier's default)
+        # set this: queries then use the fully-decoded pointer arrays —
+        # decoded ONCE per immutable partition and cached — instead of
+        # re-decoding gamma blocks on every lookup. Under a budget it
+        # stays False and lookups keep the chunked-decode path whose
+        # resident footprint is just the compressed blobs.
+        self.index_resident = False
         self.interval = (int(header["interval"][0]), int(header["interval"][1]))
         self.dead: Optional[np.ndarray] = None
         self._mm: Dict[str, np.ndarray] = {}    # section -> memmap (evictable)
@@ -345,8 +355,9 @@ class DiskPartition(EdgePartition):
         against the COMPRESSED resident index: one binary search over the
         block firsts + a decode of only the touched 64-code blocks.
         Returns (hit query indices, starts, ends), or None when this
-        partition has no compressed index (raw mode)."""
-        if self.index_mode != "gamma":
+        partition has no compressed index (raw mode) or prefers its
+        decoded-and-cached pointer arrays (`index_resident`)."""
+        if self.index_mode != "gamma" or self.index_resident:
             return None
         names = (("src_vertices", "src_ptr") if direction == "out"
                  else ("dst_vertices", "dst_ptr"))
@@ -615,8 +626,15 @@ class PartitionStore:
             if fname.endswith(".pal") and fname not in keep:
                 os.remove(os.path.join(self.dir, fname))
                 removed += 1
-            elif fname.endswith(".tmp"):
-                os.remove(os.path.join(self.dir, fname))
+            elif ".pal.tmp" in fname:
+                # abandoned temp from a crashed writer; an ACTIVE worker's
+                # temp carries its live (pid, thread) suffix — colliding
+                # with one is possible only for a recycled pid, and the
+                # worker's atomic rename re-publishes identical bytes
+                try:
+                    os.remove(os.path.join(self.dir, fname))
+                except OSError:
+                    pass
         return removed
 
     def link_into(self, digest: str, dest_dir: str) -> str:
@@ -771,7 +789,7 @@ class GraphDB:
             for pi, entry in enumerate(level):
                 if entry is None:
                     continue
-                part = db.store.open(entry["digest"])
+                part = db._open_part(entry["digest"])
                 dead_path = os.path.join(db.store.dir,
                                          f"part_{entry['digest']}.dead.npy")
                 if entry.get("dead") and os.path.exists(dead_path):
@@ -793,6 +811,9 @@ class GraphDB:
             db.checkpoint()
         else:
             db._replay_wal_tail(int(manifest.get("wal_offset", 0)))
+        # recovery installed partitions by direct slot assignment; publish
+        # so epoch readers see the recovered store even with an empty tail
+        tree.publish()
         return db
 
     def _wal_offset(self) -> int:
@@ -818,6 +839,14 @@ class GraphDB:
             self.tree.wal = wal
 
     # -- the LSM partition sink -----------------------------------------------
+    def _open_part(self, digest: str) -> DiskPartition:
+        """Open a store partition with the db's residency policy: without a
+        budget, pointer lookups decode once and stay cached (service-tier
+        repeat queries); with one, they stay chunked-decode."""
+        dp = self.store.open(digest)
+        dp.index_resident = self.resident_budget_bytes is None
+        return dp
+
     def _sink(self, level: int, j: int, part: EdgePartition) -> EdgePartition:
         """Called by the tree whenever a merge produces a new partition.
         Large partitions go to disk immediately (and come back mmapped);
@@ -825,7 +854,7 @@ class GraphDB:
         if isinstance(part, DiskPartition) or part.n_edges < self.persist_min_edges:
             return part
         digest = self.store.put(part)
-        dp = self.store.open(digest)
+        dp = self._open_part(digest)
         self._touch(dp)
         self.maybe_evict()
         return dp
@@ -902,7 +931,7 @@ class GraphDB:
                     continue
                 if not isinstance(part, DiskPartition) or part.dirty:
                     digest = self.store.put(part)
-                    dp = self.store.open(digest)
+                    dp = self._open_part(digest)
                     dp.dead = (None if part.dead is None
                                else np.asarray(part.dead))
                     self.tree.levels[li][pi] = dp
@@ -910,13 +939,20 @@ class GraphDB:
                 if part.dead is not None and part.dead.any():
                     self._write_dead_sidecar(
                         os.path.basename(part.path)[5:-4], part.dead)
+        # the checkpoint swapped RAM/dirty partitions for fresh mmap-backed
+        # ones; publish so new epoch readers pin the persisted state (and
+        # the fresh `dead` refs get sealed before any further tombstone)
+        self.tree.publish()
         # settle deferred fsyncs for every file the manifest will reference
         keep = {os.path.basename(p.path)[5:-4]
                 for p in self._disk_partitions()}
         self.store.sync(keep)
         manifest = self._write_manifest(wal_offset=self._wal_offset())
+        # deferred reclamation: files referenced by manifests that epoch
+        # readers may still pin survive this GC round and fall out of the
+        # keep-set once the last pin releases (core/manifest.py)
         self.store.gc({e["digest"] for lv in manifest["levels"]
-                       for e in lv if e})
+                       for e in lv if e} | self.tree.pinned_digests())
         self._gc_dead_files(manifest)
         # WAL compaction: segments wholly below the covered offset carry
         # only state the manifest already persists. Snapshot sessions that
@@ -1064,6 +1100,10 @@ class GraphDB:
 
     def storage_engine(self):
         return self.tree.storage_engine()
+
+    def read_view(self):
+        """Pinned lock-free read view (core/manifest.py)."""
+        return self.tree.read_view()
 
     def snapshot(self, **kw):
         return self.tree.snapshot(**kw)

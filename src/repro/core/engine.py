@@ -36,6 +36,7 @@ __all__ = [
     "StorageEngine",
     "PALEngine",
     "LSMEngine",
+    "ManifestEngine",
     "SnapshotEngine",
     "as_engine",
 ]
@@ -114,6 +115,12 @@ class _PartitionSlab:
         # every gather from the edge arrays below is a real page-cache read
         # of only the hit ranges, and we account the blocks it touches
         self.io = getattr(part, "io", None)
+        self.n_edges = part.n_edges
+        # chunked-decode hook, resolved once (slabs are reused across a
+        # manifest's whole pin lifetime): None for RAM partitions and for
+        # disk partitions preferring their decoded resident index
+        self.lookup = (None if getattr(part, "index_resident", False)
+                       else getattr(part, "lookup_adj_ranges", None))
 
     def positions_batch(self, vis: np.ndarray,
                         direction: str) -> Tuple[np.ndarray, np.ndarray]:
@@ -122,12 +129,12 @@ class _PartitionSlab:
         the hit ranges are then read from the (possibly mmapped) edge
         arrays."""
         part = self.part
-        if part.n_edges == 0:
+        if self.n_edges == 0:
             return np.empty(0, np.int64), np.empty(0, np.int64)
         # disk partitions resolve ranges against their COMPRESSED resident
         # index (chunked decode of only the touched blocks) instead of the
         # fully-decoded pointer arrays
-        lookup = getattr(part, "lookup_adj_ranges", None)
+        lookup = self.lookup
         ranges = lookup(vis, direction) if lookup is not None else None
         if ranges is not None:
             hit, starts, ends = ranges
@@ -192,12 +199,15 @@ class _PartitionSlab:
 
 
 class _BufferSlab:
-    def __init__(self, buf, interval):
-        self.buf = buf
+    """Batched lookups over one frozen BufferStaging — a live buffer's
+    current staging (snapped once per slab, i.e. once per batched call), a
+    manifest-published staging, or an in-flight drained batch awaiting its
+    merge commit. Sort-order caches live on the staging itself, shared by
+    every slab (and thread) that reads it — the lazy build is idempotent."""
+
+    def __init__(self, st, interval):
         self.interval = interval  # the fed top-level partition's interval
-        # zero-copy staging views, snapped once per slab (one batched call);
-        # sort-order caches live on the staging, shared across calls
-        self.st = buf.staging()
+        self.st = st
 
     def positions_batch(self, vis: np.ndarray,
                         direction: str) -> Tuple[np.ndarray, np.ndarray]:
@@ -232,7 +242,7 @@ class _BufferSlab:
         return None if col is None else col.dtype
 
     def chunk(self) -> Optional[EdgeChunk]:
-        if len(self.buf) == 0:
+        if self.st.src.shape[0] == 0:
             return None
         return EdgeChunk(self.st.src, self.st.dst)
 
@@ -407,15 +417,45 @@ class PALEngine(StorageEngine):
 
 class LSMEngine(StorageEngine):
     """StorageEngine over a live LSMTree: every partition of every level,
-    plus the in-memory edge buffers (newest data, staged sorted views)."""
+    the in-memory edge buffers (newest data, staged sorted views), and any
+    drained batches whose merge is still in flight on the maintenance
+    pipeline (`pending_stagings`) — a mid-merge batch is visible exactly
+    once: as a pending slab before its commit, in the merged partitions
+    after."""
 
     def _slabs(self):
         for level in self.graph.levels:
             for part in level:
                 yield _PartitionSlab(part)
+        pending = getattr(self.graph, "pending_stagings", None)
+        if pending is not None:
+            for st, interval in pending():
+                if st.src.shape[0]:
+                    yield _BufferSlab(st, interval)
         for buf, top in zip(self.graph.buffers, self.graph.levels[0]):
             if len(buf):
-                yield _BufferSlab(buf, top.interval)
+                yield _BufferSlab(buf.staging(), top.interval)
+
+
+class ManifestEngine(StorageEngine):
+    """StorageEngine over a pinned `ManifestView` (core/manifest.py) — the
+    LOCK-FREE live read path. Slabs come from one published manifest:
+    partition proxies carrying publication-time tombstone arrays, plus the
+    frozen buffer/pending stagings. Everything is immutable for the pin's
+    lifetime, so any number of reader threads share one view (and its lazy
+    sort/index caches) with zero coordination with the writer, merges,
+    checkpoints, or GC. There is deliberately no release hook: views do
+    not evict — reclamation is the epoch guard's job."""
+
+    def _slabs(self):
+        m = self.graph.manifest
+        slabs = m.cache.get("slabs")
+        if slabs is None:
+            slabs = [_PartitionSlab(mp) for lv in m.levels for mp in lv]
+            slabs += [_BufferSlab(st, interval)
+                      for st, interval in m.staging_slabs()]
+            m.cache["slabs"] = slabs  # shared by every reader of this pin
+        return slabs
 
 
 class SnapshotEngine(LSMEngine):

@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .manifest import EpochGuard, LevelManifest, ManifestPartition, ManifestView
 from .pal import (
     _MAX_PACKED_BOUND,
     EdgePartition,
@@ -43,38 +44,93 @@ from .pal import (
     run_from_partition,
 )
 
-__all__ = ["BufferStaging", "EdgeBuffer", "LSMTree", "LSMStats"]
+__all__ = ["BufferStaging", "EdgeBuffer", "LSMTree", "LSMStats", "MergeTxn"]
 
 
-@dataclasses.dataclass
 class BufferStaging:
-    """Immutable numpy view of a buffer's contents, rebuilt lazily after
-    mutations. The src/dst sort orders (binary-searchable like a
-    partition's pointer-array) are built on first *batched* use only, so a
-    workload that interleaves single-edge mutations with point queries
-    pays the old O(n) scan, never a per-mutation re-sort."""
+    """Immutable logical view of a buffer's first `n` rows, built lazily:
+    construction only captures the backing-array references and the length
+    (cheap enough to run on EVERY single-edge insert's manifest publish —
+    ISSUE 5); the `[:n]` slice views and the src/dst sort orders
+    (binary-searchable like a partition's pointer-array) materialize on
+    first use. Captured backing arrays are append-stable: rows `[0, n)`
+    never change after capture (growth reallocates, deletes compact into
+    fresh arrays), so a staging stays bitwise-valid forever."""
 
-    src: np.ndarray                 # (B,) int64, append order
-    dst: np.ndarray                 # (B,) int64
-    etype: np.ndarray               # (B,) int8
-    columns: Dict[str, np.ndarray]  # positional, append order
-    _src_order: Optional[np.ndarray] = None   # (B,) argsort(src), stable
-    _src_sorted: Optional[np.ndarray] = None  # (B,) src[_src_order]
-    _dst_order: Optional[np.ndarray] = None
-    _dst_sorted: Optional[np.ndarray] = None
+    __slots__ = ("_fsrc", "_fdst", "_fetype", "_fcols", "n",
+                 "_src", "_dst", "_etype", "_columns",
+                 "_src_order", "_src_sorted", "_dst_order", "_dst_sorted")
+
+    def __init__(self, src, dst, etype, columns, n: Optional[int] = None):
+        self._fsrc = src
+        self._fdst = dst
+        self._fetype = etype
+        self._fcols = columns
+        self.n = int(src.shape[0] if n is None else n)
+        self._src = self._dst = self._etype = self._columns = None
+        self._src_order = self._src_sorted = None
+        self._dst_order = self._dst_sorted = None
+
+    # lazy [:n] views — idempotent benign-race fills, shared by readers
+    @property
+    def src(self) -> np.ndarray:
+        v = self._src
+        if v is None:
+            v = self._fsrc[: self.n]
+            self._src = v
+        return v
+
+    @property
+    def dst(self) -> np.ndarray:
+        v = self._dst
+        if v is None:
+            v = self._fdst[: self.n]
+            self._dst = v
+        return v
+
+    @property
+    def etype(self) -> np.ndarray:
+        v = self._etype
+        if v is None:
+            v = self._fetype[: self.n]
+            self._etype = v
+        return v
+
+    @property
+    def columns(self) -> Dict[str, np.ndarray]:
+        v = self._columns
+        if v is None:
+            n = self.n
+            v = {k: a[:n] for k, a in self._fcols.items()}
+            self._columns = v
+        return v
 
     def src_sorted_view(self) -> Tuple[np.ndarray, np.ndarray]:
-        """(order, sorted) over src — built once per staging generation."""
-        if self._src_order is None:
-            self._src_order = np.argsort(self.src, kind="stable")
-            self._src_sorted = self.src[self._src_order]
-        return self._src_order, self._src_sorted
+        """(order, sorted) over src — built once per staging generation.
+        Published stagings are shared by concurrent reader threads: the
+        build works on locals and assigns the guard field LAST, so a racing
+        reader either sees both caches or rebuilds the same (deterministic)
+        arrays itself — never a half-published pair."""
+        order = self._src_order
+        if order is None:
+            order = np.argsort(self.src, kind="stable")
+            srt = self.src[order]
+            self._src_sorted = srt
+            self._src_order = order  # publish last: guards _src_sorted
+        else:
+            srt = self._src_sorted
+        return order, srt
 
     def dst_sorted_view(self) -> Tuple[np.ndarray, np.ndarray]:
-        if self._dst_order is None:
-            self._dst_order = np.argsort(self.dst, kind="stable")
-            self._dst_sorted = self.dst[self._dst_order]
-        return self._dst_order, self._dst_sorted
+        order = self._dst_order
+        if order is None:
+            order = np.argsort(self.dst, kind="stable")
+            srt = self.dst[order]
+            self._dst_sorted = srt
+            self._dst_order = order
+        else:
+            srt = self._dst_sorted
+        return order, srt
 
 
 class EdgeBuffer:
@@ -130,13 +186,8 @@ class EdgeBuffer:
 
     def staging(self) -> BufferStaging:
         if self._staging is None:
-            n = self._len
             self._staging = BufferStaging(
-                src=self._src[:n],
-                dst=self._dst[:n],
-                etype=self._etype[:n],
-                columns={k: v[:n] for k, v in self._cols.items()},
-            )
+                self._src, self._dst, self._etype, self._cols, n=self._len)
         return self._staging
 
     def append(self, src: int, dst: int, etype: int, cols: Dict) -> None:
@@ -166,37 +217,54 @@ class EdgeBuffer:
         self._len = i + n
         self._invalidate()
 
-    def drain(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Dict[str, np.ndarray]]:
-        """Hand out the staged views and reset. The views alias the backing
-        arrays and are only valid until the next mutation — the merge that
-        consumes them copies during its reorder/scatter. (The service
-        tier's maintenance thread holds the service lock through the whole
-        drain+merge, so writers cannot reuse the drained slots mid-merge.)"""
+    def drain(self) -> BufferStaging:
+        """Hand out the current staging and DETACH: the buffer restarts on
+        fresh backing arrays, so the drained views stay bitwise-valid for
+        as long as anyone holds them — the merge worker consuming them off
+        the writer's lock, and every published manifest that still lists
+        them as a pending slab (core/manifest.py)."""
         st = self.staging()
-        out = (st.src, st.dst, st.etype, st.columns)
+        # fresh arrays at the SAME capacity: the old blocks (released when
+        # the merge commits and the last manifest drops the staging) and
+        # the next drain's allocations share size classes, so the
+        # detach-per-drain churn doesn't fragment the allocator heap
         self._len = 0
+        self._src = np.empty(self._cap, np.int64)
+        self._dst = np.empty(self._cap, np.int64)
+        self._etype = np.empty(self._cap, np.int8)
+        self._cols = {k: np.empty(self._cap, dt)
+                      for k, dt in self.column_dtypes.items()}
         self._invalidate()
-        return out
+        return st
 
     def set_column(self, name: str, pos: int, value) -> None:
         # staging columns alias the backing arrays and sort orders are
-        # unaffected by an attribute write, so no invalidation needed
+        # unaffected by an attribute write, so no invalidation needed.
+        # Published manifests alias these arrays too: column writes are
+        # deliberately non-transactional (paper §5.3 in-place semantics) —
+        # a pinned view may see a newer value, never a torn structure.
         self._cols[name][pos] = value
 
     def filter_mask(self, keep: np.ndarray) -> None:
-        """Drop rows where keep is False (buffer-side delete, paper §5.3) by
-        compacting the backing arrays in place — array-native, no list
-        round-trip. Boolean fancy-indexing copies before the assignment, so
-        the overlapping write is safe."""
+        """Drop rows where keep is False (buffer-side delete, paper §5.3).
+        The kept rows are compacted into FRESH backing arrays (same cost as
+        the old in-place fancy-index compaction, which also copied every
+        kept row) — published manifests and in-flight merges keep aliasing
+        the untouched old arrays, so a buffered delete can never tear a
+        lock-free reader's view."""
         keep = np.asarray(keep, dtype=bool)
         n = self._len
         m = int(keep.sum())
         if m != n:
-            self._src[:m] = self._src[:n][keep]
-            self._dst[:m] = self._dst[:n][keep]
-            self._etype[:m] = self._etype[:n][keep]
-            for col in self._cols.values():
-                col[:m] = col[:n][keep]
+            def compact(arr):
+                out = np.empty(self._cap, arr.dtype)
+                out[:m] = arr[:n][keep]
+                return out
+
+            self._src = compact(self._src)
+            self._dst = compact(self._dst)
+            self._etype = compact(self._etype)
+            self._cols = {k: compact(v) for k, v in self._cols.items()}
             self._len = m
         self._invalidate()
 
@@ -240,6 +308,60 @@ class LSMStats:
     splits: int = 0
     deletes: int = 0
     purged_tombstones: int = 0
+
+    def merge_from(self, other: "LSMStats") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+
+
+class MergeTxn:
+    """One buffer-flush merge prepared OFF the writer's lock.
+
+    The heavy work of a flush — sorting the drained run, the linear merge
+    interleaves, partition rebuilds, and (via the partition sink) writing
+    the new partition files — runs against a private overlay of the levels:
+    `get` reads through to the live tree, `install` records the replacement
+    locally. Nothing the tree publishes changes until `LSMTree.commit_txn`
+    applies the whole overlay and publishes ONE new manifest, so concurrent
+    lock-free readers see the pre-merge state or the post-merge state,
+    never a half-distributed push-down. Disjointness is the caller's
+    contract: at most one in-flight txn per top-level interval (the
+    maintenance pipeline's per-interval locks), and a txn only ever touches
+    partitions inside its top partition's destination interval."""
+
+    def __init__(self, tree: "LSMTree", j: int, staging: BufferStaging):
+        self.tree = tree
+        self.j = j
+        self.staging = staging
+        self.updates: Dict[Tuple[int, int], EdgePartition] = {}
+        self.stats = LSMStats()
+
+    def get(self, level: int, j: int) -> EdgePartition:
+        part = self.updates.get((level, j))
+        return part if part is not None else self.tree.levels[level][j]
+
+    def retire_live(self, level: int, j: int,
+                    replacement: EdgePartition) -> None:
+        """Drop the live (pre-merge) partition's mappings and decoded
+        caches NOW, mid-cascade, like the pre-txn install path did — the
+        merge just streamed its pages, and waiting for commit would keep
+        every replaced partition of a push-down cascade resident at once.
+        Safe under pinned manifests: eviction only unmaps; an epoch reader
+        lazily re-mmaps (the file survives GC via pinned_digests)."""
+        live = self.tree.levels[level][j]
+        if live is not replacement and (level, j) not in self.updates:
+            evict = getattr(live, "evict", None)
+            if evict is not None:
+                evict()
+
+    def install(self, level: int, j: int, part: EdgePartition) -> None:
+        """Route through the disk tier's sink (persistence happens HERE, on
+        the worker, off every lock) and record the replacement."""
+        if self.tree.partition_sink is not None:
+            part = self.tree.partition_sink(level, j, part)
+        self.retire_live(level, j, part)
+        self.updates[(level, j)] = part
 
 
 class LSMTree:
@@ -299,6 +421,14 @@ class LSMTree:
         # O(1) buffered-edge counter (maintained at every buffer mutation);
         # replaces the per-insert sum over all buffers
         self._buffered = 0
+        # drained-but-not-yet-committed staging views, per top buffer: the
+        # maintenance pipeline merges them off the writer's lock while
+        # published manifests keep exposing them as read slabs (ISSUE 5)
+        self._pending: List[List[BufferStaging]] = [[] for _ in self.buffers]
+        self._inflight_edges = 0
+        # epoch-published manifests: the lock-free live read path
+        self.epochs = EpochGuard()
+        self._mversion = 0
 
         # durability (paper §7.3): group-commit WAL — records of one insert
         # call coalesce into ONE buffered write, then the sync policy runs:
@@ -330,6 +460,7 @@ class LSMTree:
         # mmap-backed replacement
         self.partition_sink = partition_sink
         self._engine = None
+        self.publish()  # manifest v0: readers can pin from birth
 
     def _wal_append(self, payload: bytes) -> None:
         self._wal.write(payload)
@@ -346,6 +477,112 @@ class LSMTree:
             from .engine import LSMEngine
             self._engine = LSMEngine(self)
         return self._engine
+
+    # -- epoch publication (ISSUE 5, DESIGN.md §9) ------------------------------
+    def publish(self) -> LevelManifest:
+        """Full manifest publication: capture every partition (sealing its
+        tombstone array — the next tombstone write copies), every buffer's
+        staging, and the in-flight pending drains, and swap the manifest in
+        ONE reference assignment. Caller must be the (serialized) writer:
+        the mutating thread itself, or a maintenance job holding the
+        service lock for its commit."""
+        levels = []
+        for lv in self.levels:
+            row = []
+            for part in lv:
+                mp = ManifestPartition(part)
+                if mp.dead is not None:
+                    part._dead_sealed = True
+                row.append(mp)
+            levels.append(tuple(row))
+        wal_tail = 0
+        if self.wal is not None:
+            try:
+                wal_tail = self.wal.tail_offset()
+            except Exception:
+                wal_tail = 0
+        self._mversion += 1
+        m = LevelManifest(
+            version=self._mversion,
+            levels=tuple(levels),
+            stagings=tuple(b.staging() for b in self.buffers),
+            pending=tuple(tuple(p) for p in self._pending),
+            wal_tail=wal_tail,
+        )
+        self.epochs.publish(m)
+        return m
+
+    def publish_partitions(self, coords, buffer_idxs) -> None:
+        """Targeted publication for mutations that touch a known partition
+        path (deletes): recapture and reseal only the partitions at
+        `coords` = [(level, idx), ...] plus the listed buffers' stagings —
+        O(levels + one level row) instead of a full O(partitions)
+        recapture per delete."""
+        cur = self.epochs.current
+        levels = list(cur.levels)
+        for li, pi in coords:
+            part = self.levels[li][pi]
+            mp = ManifestPartition(part)
+            if mp.dead is not None:
+                part._dead_sealed = True
+            row = list(levels[li])
+            row[pi] = mp
+            levels[li] = tuple(row)
+        stagings = list(cur.stagings)
+        for j in buffer_idxs:
+            stagings[j] = self.buffers[j].staging()
+        self._mversion += 1
+        m = LevelManifest(self._mversion, tuple(levels), tuple(stagings),
+                          cur.pending, cur.wal_tail)
+        self.epochs.publish(m)
+
+    def publish_buffers(self, idxs) -> None:
+        """Cheap publication for append-only buffer changes: splice the
+        updated buffers' fresh stagings into the current manifest (no
+        partition recapture — appends never disturb sealed state). This
+        runs on EVERY insert call, single-edge included: staging capture,
+        the manifest splice, and the epoch swap are all O(1) reference
+        plumbing (measured ~a microsecond)."""
+        cur = self.epochs.current
+        stagings = list(cur.stagings)
+        for j in idxs:
+            stagings[j] = self.buffers[j].staging()
+        self._mversion += 1
+        self.epochs.publish(cur.with_stagings(self._mversion,
+                                              tuple(stagings)))
+
+    def read_view(self) -> ManifestView:
+        """Pin the current manifest under an epoch guard and return a
+        read-only store view — THE live read path: no lock shared with the
+        writer or with maintenance is ever taken. Release (or use as a
+        context manager) when done; an unreleased view defers reclamation
+        of the partitions/files it references."""
+        m, slot = self.epochs.pin()
+        return ManifestView(self, m, slot)
+
+    def pinned_digests(self) -> set:
+        """Digests of disk partitions referenced by the current manifest or
+        any retired manifest a reader may still pin — files checkpoint GC
+        must NOT delete (deferred reclamation)."""
+        out = set()
+        for m in self.epochs.live_manifests():
+            for mp in m.partitions():
+                path = getattr(mp.part, "path", None)
+                if path is not None:
+                    out.add(os.path.basename(path)[5:-4])
+        return out
+
+    def pending_stagings(self) -> List[Tuple[BufferStaging, Tuple[int, int]]]:
+        """(staging, top interval) of every drained-but-uncommitted batch —
+        extra read slabs the LIVE engine must include mid-flight."""
+        out = []
+        for j, lst in enumerate(self._pending):
+            for st in lst:
+                out.append((st, self.levels[0][j].interval))
+        return out
+
+    def inflight_edges(self) -> int:
+        return self._inflight_edges
 
     # -- geometry ---------------------------------------------------------------
     @property
@@ -367,9 +604,11 @@ class LSMTree:
             self.wal.append_inserts([isrc], [idst], [etype], cols)
         elif self._wal is not None:
             self._wal_append(struct.pack("<qqb", isrc, idst, etype))
-        self.buffers[self._top_index_of(idst)].append(isrc, idst, etype, cols)
+        j = self._top_index_of(idst)
+        self.buffers[j].append(isrc, idst, etype, cols)
         self.stats.inserts += 1
         self._buffered += 1
+        self.publish_buffers((j,))
         if self._buffered > self.buffer_cap and self.auto_flush:
             self.flush_fullest_buffer()
 
@@ -391,39 +630,27 @@ class LSMTree:
             self._wal_append(rec.tobytes())  # ONE group-commit write
         if len(self.buffers) == 1:  # single top partition: no routing pass
             self.buffers[0].extend(isrc, idst, etype, columns)
+            touched = (0,)
         else:
             span = self.intervals.max_vertices // len(self.levels[0])
             top = idst // span
-            for i in np.unique(top):
+            touched = tuple(int(i) for i in np.unique(top))
+            for i in touched:
                 m = top == i
-                self.buffers[int(i)].extend(
+                self.buffers[i].extend(
                     isrc[m], idst[m], etype[m],
                     {k: np.asarray(v)[m] for k, v in columns.items()},
                 )
         self.stats.inserts += int(src.shape[0])
         self._buffered += int(src.shape[0])
+        self.publish_buffers(touched)
         while self._buffered > self.buffer_cap and self.auto_flush:
             self.flush_fullest_buffer()
 
     def total_buffered(self) -> int:
         return self._buffered
 
-    # -- merges -------------------------------------------------------------------
-    def _install(self, level: int, j: int, part: EdgePartition) -> None:
-        """Every partition a merge produces is installed through here so the
-        disk tier (GraphDB's partition_sink) can flush it to a file and
-        substitute an mmap-backed view. The replaced partition's mappings
-        are dropped eagerly — its object may linger briefly in a GC cycle,
-        but its pages must leave RSS now."""
-        if self.partition_sink is not None:
-            part = self.partition_sink(level, j, part)
-        old = self.levels[level][j]
-        self.levels[level][j] = part
-        if old is not part:
-            evict = getattr(old, "evict", None)
-            if evict is not None:
-                evict()
-
+    # -- merges (txn-based: prepared off-lock, committed atomically) --------------
     def _empty_partition(self, interval) -> EdgePartition:
         return build_partition(
             interval, np.empty(0, np.int64), np.empty(0, np.int64),
@@ -434,31 +661,78 @@ class LSMTree:
         kb = self.intervals.max_vertices
         return kb <= _MAX_PACKED_BOUND and kb * (n_total + 1) < 2 ** 63
 
-    def flush_fullest_buffer(self) -> None:
-        """Merge the fullest buffer with its top-level partition (paper §5.2)."""
-        j = int(np.argmax([len(b) for b in self.buffers]))
+    def drain_buffer(self, j: int) -> Optional[BufferStaging]:
+        """Detach buffer j's contents as an immutable staging and stage it
+        on the pending list (published manifests keep serving it as a read
+        slab until the merge commits). Caller must be the serialized
+        writer side (service lock held, or single-threaded use)."""
         buf = self.buffers[j]
         if len(buf) == 0:
-            return
-        self._buffered -= len(buf)
-        bsrc, bdst, btype, bcols = buf.drain()
+            return None
+        st = buf.drain()
+        n = int(st.src.shape[0])
+        self._buffered -= n
+        self._inflight_edges += n
+        self._pending[j].append(st)
         self.stats.buffer_flushes += 1
-        if self._linear_merge_ok(self.levels[0][j].n_edges + int(bsrc.shape[0])):
+        self.publish()  # readers now see (old partitions + pending slab)
+        return st
+
+    def build_flush_txn(self, j: int, st: BufferStaging) -> MergeTxn:
+        """The expensive half of a flush, safe to run WITHOUT the writer
+        lock as long as the caller holds the top-interval-j merge slot
+        (core/service.py's per-interval locks): merge the drained staging
+        through partition (0, j)'s subtree into a private overlay."""
+        txn = MergeTxn(self, j, st)
+        bsrc, bdst, btype, bcols = st.src, st.dst, st.etype, st.columns
+        if self._linear_merge_ok(txn.get(0, j).n_edges + int(bsrc.shape[0])):
             run = run_from_arrays(bsrc, bdst, btype, bcols,
                                   key_bound=self.intervals.max_vertices)
-            self._absorb(0, j, run)
+            self._absorb(txn, 0, j, run)
         else:
-            self._install(0, j, self._merge_into(
-                self.levels[0][j], bsrc, bdst, btype, bcols))
-            self._maybe_pushdown(0, j)
+            txn.install(0, j, self._merge_into(
+                txn, txn.get(0, j), bsrc, bdst, btype, bcols))
+            self._maybe_pushdown(txn, 0, j)
+        return txn
 
-    def _absorb(self, level: int, j: int, run: "SortedRun") -> None:
+    def commit_txn(self, txn: MergeTxn) -> None:
+        """Apply a prepared merge atomically: swap every touched partition
+        slot, retire the pending staging, fold the txn's stats in, and
+        publish ONE post-merge manifest. Must run on the serialized writer
+        side (service lock). Replaced partitions' mappings are dropped
+        eagerly — epoch-pinned readers lazily re-mmap (their files survive
+        GC via `pinned_digests`), so this only trims RSS."""
+        for (li, pi), part in txn.updates.items():
+            old = self.levels[li][pi]
+            self.levels[li][pi] = part
+            if old is not part:
+                evict = getattr(old, "evict", None)
+                if evict is not None:
+                    evict()
+        self._pending[txn.j].remove(txn.staging)
+        self._inflight_edges -= int(txn.staging.src.shape[0])
+        self.stats.merge_from(txn.stats)
+        self.publish()
+
+    def flush_fullest_buffer(self) -> None:
+        """Merge the fullest buffer with its top-level partition (paper
+        §5.2) — the synchronous path: drain, build, commit back-to-back.
+        The pipelined path (core/service.py) runs the same three calls with
+        only drain/commit under the service lock."""
+        j = int(np.argmax([len(b) for b in self.buffers]))
+        st = self.drain_buffer(j)
+        if st is None:
+            return
+        self.commit_txn(self.build_flush_txn(j, st))
+
+    def _absorb(self, txn: MergeTxn, level: int, j: int,
+                run: "SortedRun") -> None:
         """Merge a sorted run into partition (level, j). When the merged
         partition would immediately overflow into its children anyway,
         short-circuit: combine partition + run into one sorted run and
         distribute it straight down, skipping a full partition (re)build —
         this halves rewrites at every non-leaf level."""
-        part = self.levels[level][j]
+        part = txn.get(level, j)
         n_dead = 0 if part.dead is None else int(part.dead.sum())
         n_total = part.n_edges - n_dead + run.n_edges
         if (n_total > self.max_partition_edges and level < self.n_levels - 1
@@ -468,19 +742,21 @@ class LSMTree:
                 columns=self.column_dtypes.keys())
             combined = merge_runs(a, run, self.intervals.max_vertices,
                                   self.column_dtypes)
-            self.stats.purged_tombstones += n_dead
-            self.stats.edges_rewritten += combined.n_edges
-            self.stats.pushdown_merges += 1
-            self.levels[level][j] = self._empty_partition(part.interval)
-            self._distribute_to_children(level, combined)
+            txn.stats.purged_tombstones += n_dead
+            txn.stats.edges_rewritten += combined.n_edges
+            txn.stats.pushdown_merges += 1
+            empty = self._empty_partition(part.interval)
+            txn.retire_live(level, j, empty)
+            txn.updates[(level, j)] = empty
+            self._distribute_to_children(txn, level, combined)
             return
-        self._install(level, j, self._merge_into(
-            part, run.src, run.dst, run.etype, run.columns,
+        txn.install(level, j, self._merge_into(
+            txn, part, run.src, run.dst, run.etype, run.columns,
             presorted=True, run=run))
-        self._maybe_pushdown(level, j)
+        self._maybe_pushdown(txn, level, j)
 
-    def _merge_into(self, part: EdgePartition, src, dst, etype, cols,
-                    presorted: bool = False,
+    def _merge_into(self, txn: MergeTxn, part: EdgePartition,
+                    src, dst, etype, cols, presorted: bool = False,
                     run: Optional["SortedRun"] = None) -> EdgePartition:
         """Linear-time sorted merge producing a NEW immutable partition
         (DESIGN.md §6); tombstoned edges of the old partition are purged
@@ -490,9 +766,9 @@ class LSMTree:
         merge interleave permutation."""
         n_dead = 0 if part.dead is None else int(part.dead.sum())
         n_live = part.n_edges - n_dead
-        self.stats.purged_tombstones += n_dead
+        txn.stats.purged_tombstones += n_dead
         n_total = n_live + int(src.shape[0])
-        self.stats.edges_rewritten += n_total
+        txn.stats.edges_rewritten += n_total
         key_bound = self.intervals.max_vertices
         if key_bound <= _MAX_PACKED_BOUND and key_bound * (n_total + 1) < 2 ** 63:
             b = run if run is not None else run_from_arrays(
@@ -518,28 +794,31 @@ class LSMTree:
             mcols[k] = np.concatenate([old, new])
         return build_partition(part.interval, msrc, mdst, mtyp, mcols)
 
-    def _maybe_pushdown(self, level: int, j: int) -> None:
+    def _maybe_pushdown(self, txn: MergeTxn, level: int, j: int) -> None:
         """If partition (level, j) exceeds the size cap, empty it into its f
         children at the next level (paper §5.2). Bottom level splits instead."""
-        part = self.levels[level][j]
+        part = txn.get(level, j)
         if part.n_edges <= self.max_partition_edges:
             return
         if level == self.n_levels - 1:
             # paper: "If leaves grow too large, we can add a new level";
             # equivalently we grow the leaf cap — record the event.
-            self.stats.splits += 1
+            txn.stats.splits += 1
             return
         n_dead = 0 if part.dead is None else int(part.dead.sum())
         parent = run_from_partition(
             part, live=None if part.dead is None else ~part.dead,
             columns=self.column_dtypes.keys())
-        self.stats.purged_tombstones += n_dead
+        txn.stats.purged_tombstones += n_dead
         # emptied parent — new empty immutable partition
-        self.levels[level][j] = self._empty_partition(part.interval)
-        self.stats.pushdown_merges += 1
-        self._distribute_to_children(level, parent)
+        empty = self._empty_partition(part.interval)
+        txn.retire_live(level, j, empty)
+        txn.updates[(level, j)] = empty
+        txn.stats.pushdown_merges += 1
+        self._distribute_to_children(txn, level, parent)
 
-    def _distribute_to_children(self, level: int, parent: "SortedRun") -> None:
+    def _distribute_to_children(self, txn: MergeTxn, level: int,
+                                parent: "SortedRun") -> None:
         """Split a sorted run by child interval and merge each piece into
         its child partition (paper §5.2). Children cover disjoint dst
         ranges, so each child occupies one contiguous slice of the parent's
@@ -571,35 +850,107 @@ class LSMTree:
             )
             children.append((c, child))
         for c, child in children:
-            self._absorb(level + 1, c, child)
+            self._absorb(txn, level + 1, c, child)
 
     def flush_all(self) -> None:
+        # commit any orphaned in-flight drains first (a pipeline worker
+        # that died between drain and commit leaves its staging pending;
+        # checkpointing without merging it would advance the covered WAL
+        # offset past edges no partition holds)
+        for j, lst in enumerate(self._pending):
+            for st in list(lst):
+                self.commit_txn(self.build_flush_txn(j, st))
         while self.total_buffered() > 0:
             self.flush_fullest_buffer()
 
     # -- queries across the tree (paper §5.2.1) -------------------------------------
-    def out_edges(self, v: int) -> List[Tuple[int, int, int]]:
-        """(level, partition_idx, edge_pos) across all levels + buffers.
-        Cost: every partition on every level may hold out-edges."""
+    BUFFER_LEVEL = -1  # hit level index addressing a live edge buffer
+
+    @staticmethod
+    def _add_hit_rows(rows: list, li: int, pi: int, pos: np.ndarray) -> None:
+        """Append one slab's hits as (H, 3) rows of (level, idx, pos) —
+        the single definition of the hit-row layout `columns_for_hits`
+        consumes."""
+        if pos.size:
+            row = np.empty((pos.shape[0], 3), np.int64)
+            row[:, 0] = li
+            row[:, 1] = pi
+            row[:, 2] = pos
+            rows.append(row)
+
+    def out_edge_hits(self, v: int) -> np.ndarray:
+        """(H, 3) int64 array of (level, partition_idx, edge_pos) hits
+        across all levels AND the live buffers — buffer hits carry level
+        `BUFFER_LEVEL` (-1) and address buffer j's append order.
+        (Pre-ISSUE-5 the hit list silently skipped buffered edges, so
+        positional column reads missed the newest data.) Built with one
+        stack per slab, no per-edge Python objects — feed it straight to
+        `columns_for_hits`."""
         vi = int(self.intervals.to_internal(v))
-        hits = []
+        rows: list = []
         for li, level in enumerate(self.levels):
             for pi, part in enumerate(level):
-                for pos in part.out_edges(vi):
-                    hits.append((li, pi, int(pos)))
-        return hits
+                self._add_hit_rows(rows, li, pi, part.out_edges(vi))
+        for bj, buf in enumerate(self.buffers):
+            if len(buf):
+                self._add_hit_rows(rows, self.BUFFER_LEVEL, bj,
+                                   np.asarray(buf.out_edges_of(vi)))
+        if not rows:
+            return np.empty((0, 3), np.int64)
+        return np.concatenate(rows)
 
-    def in_edges(self, v: int) -> List[Tuple[int, int, int]]:
-        """Only ONE partition per level can own v's in-edges (paper: cost
-        bounded by L_G + edges)."""
+    def in_edge_hits(self, v: int) -> np.ndarray:
+        """Like `out_edge_hits` for in-edges: only ONE partition per level
+        (and one buffer) can own v's in-edges (paper: cost bounded by
+        L_G + edges)."""
         vi = int(self.intervals.to_internal(v))
-        hits = []
+        rows: list = []
         for li, level in enumerate(self.levels):
             span = self.intervals.max_vertices // len(level)
             pi = vi // span
-            for pos in level[pi].in_edges(vi):
-                hits.append((li, int(pi), int(pos)))
-        return hits
+            self._add_hit_rows(rows, li, pi, level[pi].in_edges(vi))
+        bj = self._top_index_of(vi)
+        if len(self.buffers[bj]):
+            self._add_hit_rows(rows, self.BUFFER_LEVEL, bj,
+                               np.asarray(self.buffers[bj].in_edges_of(vi)))
+        if not rows:
+            return np.empty((0, 3), np.int64)
+        return np.concatenate(rows)
+
+    def out_edges(self, v: int) -> List[Tuple[int, int, int]]:
+        """Tuple-list form of `out_edge_hits` (compatibility surface)."""
+        return [(int(a), int(b), int(c)) for a, b, c in self.out_edge_hits(v)]
+
+    def in_edges(self, v: int) -> List[Tuple[int, int, int]]:
+        """Tuple-list form of `in_edge_hits` (compatibility surface)."""
+        return [(int(a), int(b), int(c)) for a, b, c in self.in_edge_hits(v)]
+
+    def columns_for_hits(self, hits, name: str) -> np.ndarray:
+        """Positional column values for a hit array/list from
+        `out_edge_hits` / `out_edges` (+ `in_` variants) — ONE vectorized
+        gather per distinct slab instead of a Python loop per hit, and
+        buffer hits (level -1) resolve against the staged columns, which
+        the per-hit pattern could not address at all (ISSUE 5 satellite;
+        bench_linkbench `edge_getrange`)."""
+        dtype = self.column_dtypes.get(name, np.dtype(np.float64))
+        h = np.asarray(hits, np.int64).reshape(-1, 3)
+        if h.shape[0] == 0:
+            return np.empty(0, dtype)
+        out = np.empty(h.shape[0], dtype)
+        width = max(len(self.buffers), len(self.levels[-1])) + 1
+        slab_key = h[:, 0] * width + h[:, 1]
+        for key in np.unique(slab_key):
+            m = slab_key == key
+            hm = h[m]
+            li, pi = int(hm[0, 0]), int(hm[0, 1])
+            pos = hm[:, 2]
+            if li == self.BUFFER_LEVEL:
+                col = self.buffers[pi].staging().columns.get(name)
+            else:
+                col = self.levels[li][pi].columns.get(name)
+            out[m] = np.zeros(1, dtype) if col is None \
+                else np.asarray(col)[pos]
+        return out
 
     def out_neighbors(self, v: int) -> np.ndarray:
         vi = int(self.intervals.to_internal(v))
@@ -614,6 +965,11 @@ class LSMTree:
                 idx = buf.out_edges_of(vi)
                 if idx.size:
                     chunks.append(buf.staging().dst[idx])
+        for lst in self._pending:  # drained batches whose merge is in flight
+            for st in lst:
+                hit = st.dst[st.src == vi]
+                if hit.size:
+                    chunks.append(hit)
         if not chunks:
             return np.empty(0, np.int64)
         return np.asarray(self.intervals.to_original(np.concatenate(chunks)))
@@ -628,12 +984,17 @@ class LSMTree:
             if pos.size:
                 chunks.append(part.src[pos])
         # buffers partition by destination interval: only the owning buffer
-        # can hold v's in-edges — probe just that one
-        buf = self.buffers[self._top_index_of(vi)]
+        # (and its in-flight drains) can hold v's in-edges — probe just those
+        bj = self._top_index_of(vi)
+        buf = self.buffers[bj]
         if len(buf):
             idx = buf.in_edges_of(vi)
             if idx.size:
                 chunks.append(buf.staging().src[idx])
+        for st in self._pending[bj]:
+            hit = st.src[st.dst == vi]
+            if hit.size:
+                chunks.append(hit)
         if not chunks:
             return np.empty(0, np.int64)
         return np.asarray(self.intervals.to_original(np.concatenate(chunks)))
@@ -698,13 +1059,20 @@ class LSMTree:
             self.stats.deletes += 1
             if self.wal is not None:  # tombstones are durable pre-checkpoint
                 self.wal.append_delete(isrc, idst)
+            # targeted publish of exactly the touched dst path: tombstone
+            # COW + buffer compaction left the old manifest bitwise-intact;
+            # new readers must see the delete
+            coords = [(li, idst // (self.intervals.max_vertices
+                                    // len(level)))
+                      for li, level in enumerate(self.levels)]
+            self.publish_partitions(coords, (bj,))
         return found
 
     # -- exports ------------------------------------------------------------------
     @property
     def n_edges(self) -> int:
         n = sum(p.n_live_edges for lv in self.levels for p in lv)
-        return n + self.total_buffered()
+        return n + self.total_buffered() + self._inflight_edges
 
     def all_partitions(self) -> List[EdgePartition]:
         return [p for lv in self.levels for p in lv]
@@ -729,6 +1097,10 @@ class LSMTree:
         for buf in self.buffers:
             if len(buf):
                 st = buf.staging()
+                ss.append(st.src)
+                dd.append(st.dst)
+        for lst in self._pending:
+            for st in lst:
                 ss.append(st.src)
                 dd.append(st.dst)
         s = np.concatenate(ss) if ss else np.empty(0, np.int64)

@@ -131,6 +131,9 @@ class EdgePartition:
     columns: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     # tombstones (paper §5.3): permanent removal happens at merge time
     dead: Optional[np.ndarray] = None  # (E,) bool or None
+    # set by manifest publication (core/manifest.py): the NEXT tombstone
+    # write must copy `dead` instead of mutating the published array
+    _dead_sealed: bool = False
 
     @property
     def n_edges(self) -> int:
@@ -188,9 +191,19 @@ class EdgePartition:
         self.etype[pos] = values
 
     def tombstone(self, pos) -> None:
+        """Tombstone positions. Copy-on-write once a manifest publication
+        sealed the current `dead` array (core/manifest.py): lock-free
+        readers pinned to an older manifest keep the pre-delete array, so a
+        delete can never tear a published view's structure."""
         if self.dead is None:
-            self.dead = np.zeros(self.n_edges, dtype=bool)
-        self.dead[pos] = True
+            dead = np.zeros(self.n_edges, dtype=bool)
+        elif self._dead_sealed:
+            dead = self.dead.copy()
+        else:
+            dead = self.dead
+        dead[pos] = True
+        self.dead = dead
+        self._dead_sealed = False
 
     # -- PSW sliding window (paper §6.1) --------------------------------------
     def window(self, interval: Tuple[int, int]) -> Tuple[int, int]:

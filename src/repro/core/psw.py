@@ -37,8 +37,14 @@ GraphLike = Union[GraphPAL, LSMTree]
 
 
 def _host_partitions(g: GraphLike) -> list:
-    """Every physical partition of the store (all LSM levels, or the PAL
-    partition list) — duck-typed, no storage-class branching."""
+    """Every physical partition of the store (all LSM levels, the PAL
+    partition list, or a pinned ManifestView's partition proxies) —
+    duck-typed, no storage-class branching. A `ManifestView`
+    (core/manifest.py) satisfies the whole contract this module needs
+    (`all_partitions` with stable `dead` refs, `buffers` as frozen staging
+    shims, `to_coo`, `intervals`), so out-of-core PSW streaming and
+    DeviceGraph compilation run against one epoch-pinned state while the
+    writer and maintenance keep going (ISSUE 5)."""
     all_parts = getattr(g, "all_partitions", None)
     return list(all_parts()) if all_parts is not None else list(g.partitions)
 

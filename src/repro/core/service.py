@@ -1,41 +1,61 @@
-"""The concurrent service tier: snapshot-isolated reader sessions over a
-live GraphDB, with background maintenance (ISSUE 4; paper §1, §5 — an
-*online* graph database serves queries and fast insertions concurrently).
+"""The concurrent service tier: lock-free live reads, snapshot-isolated
+reader sessions, and a parallel maintenance pipeline over a live GraphDB
+(ISSUE 4 + ISSUE 5; paper §1, §5 — an *online* graph database serves
+queries and fast insertions concurrently).
 
-Two classes:
+Three read/write surfaces:
+
+  * **Lock-free live reads** (`read_view`, ISSUE 5). Every mutation batch
+    and merge commit publishes an immutable `LevelManifest`
+    (core/manifest.py); a reader pins the current one under an epoch guard
+    and runs point queries, batched engine slabs, FoF/BFS, and PSW
+    streaming against it without EVER taking the service lock — read
+    latency no longer spikes when the writer appends or a merge runs.
+    Superseded manifests (and the partition files they reference) are
+    reclaimed only once no epoch pins them.
 
   * `Snapshot` — a read-only, self-contained session directory produced by
     `GraphDB.pin_snapshot`: hard links to the pinned manifest's immutable
     partition files (+ dead sidecars) and to the WAL segments covering
     [manifest.wal_offset, pinned_offset). Opening one rebuilds the exact
-    logical state at the pinned WAL offset — manifest partitions + typed
-    tail replay (inserts with columns, tombstones, column writes) — so a
-    session answers queries bitwise-identical to a serial replay of its
-    prefix, forever, regardless of writer progress, compaction, store GC,
-    or WAL segment deletion (the links keep every needed inode alive).
-    Sessions are directory-addressed: any number of reader threads or
-    *processes* can `Snapshot.open(path)` the same pin concurrently.
+    logical state at the pinned WAL offset; the decoded tail records are
+    shared across opens at the same pinned offset through a small
+    process-wide cache (ISSUE 5 satellite), so the Nth session of a pin
+    skips the decode entirely. Sessions are directory-addressed: any
+    number of reader threads or *processes* can `Snapshot.open(path)` the
+    same pin concurrently.
 
   * `ServiceDB` — the single-writer front end. One lock serializes
-    mutations, snapshot pinning, and maintenance; the insert path only
-    appends to the WAL and the in-memory buffers (`LSMTree.auto_flush` is
-    off), while a maintenance thread drains buffers (running the merges
-    and the partition-sink persistence), takes periodic checkpoints, and
-    GCs — all off the caller's thread. The dirty set is bounded: once
-    buffered edges exceed `backpressure_edges`, writers block until the
-    maintenance thread drains below the high-water mark.
+    mutations, snapshot pinning, and maintenance COMMITS; the insert path
+    only appends to the WAL and the in-memory buffers (`LSMTree.auto_flush`
+    is off). Maintenance is a pipeline (ISSUE 5): a scheduler thread
+    dispatches independent top-level buffer merges to a small worker pool —
+    each flush drains its buffer under the service lock (cheap), runs the
+    merge + partition-sink persistence under only its top-interval lock
+    (expensive, concurrent across intervals), and commits + publishes under
+    the service lock again (cheap). Checkpoints overlap in-flight merges:
+    phase A persists RAM/dirty partitions with NO locks held; phase B takes
+    a short exclusive window (all interval locks + the service lock — which
+    blocks writers briefly, never readers) for the residual flush, manifest
+    write, epoch-aware store GC, and WAL compaction. Reader-latency
+    feedback steers cadence: a WAL tail over `wal_tail_budget_bytes`, or a
+    `begin_snapshot` whose session rebuild exceeded
+    `snapshot_open_budget_s`, schedules a checkpoint early so tail replays
+    stay short. The dirty set is bounded: once buffered + in-flight edges
+    exceed `backpressure_edges`, writers block until the pipeline drains
+    below the high-water mark.
 
-Maintenance thread state machine (DESIGN.md §8):
+Maintenance pipeline (DESIGN.md §9):
 
-    IDLE --buffered > cap--------------> FLUSH  (drain fullest buffer:
-      ^                                          merge + sink persistence)
-      |--ops since ckpt >= interval----> CHECKPOINT (persist + manifest +
-      |                                          store GC + WAL compaction)
-      '--close()-----------------------> final checkpoint, exit
+    scheduler --buffered > cap----> worker pool: FLUSH(j)   [interval lock j]
+       |                            FLUSH(k) runs CONCURRENTLY  [lock k]
+       |--ops/WAL-tail/feedback---> CHECKPOINT: phase A (no locks) overlaps
+       |                            the flushes; phase B brief exclusive
+       '--close()-----------------> drain pool, final checkpoint, exit
 
-Every transition runs under the service lock; between transitions the lock
-is free for writers. Readers never take the lock after `begin_snapshot`
-returns — isolation comes from immutability, not locking.
+Lock order (deadlock-free): interval locks in ascending index, THEN the
+service lock. Deletes/column updates take their one interval lock first for
+the same reason. Readers take neither.
 """
 from __future__ import annotations
 
@@ -45,16 +65,56 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+import time
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from .disk import GraphDB, open_partition_file, replay_ops
+from .disk import DiskPartition, GraphDB, open_partition_file, replay_ops
 from .lsm import LSMTree
 from .pal import IntervalMap
 from .walog import SegmentedWAL
 
-__all__ = ["ServiceDB", "Snapshot", "ServiceStats"]
+__all__ = ["ServiceDB", "Snapshot", "ServiceStats", "tail_cache_stats"]
+
+
+# ---------------------------------------------------------------------------
+# Shared replayed-WAL-tail cache (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+# Decoded tail records keyed by the *inode identity* of the segments plus
+# the [offset, end) window. Session directories of the same pin hard-link
+# the same segment inodes, so every `Snapshot.open` at one pinned offset —
+# from any thread, over any session dir — hits the same entry and skips the
+# decode. Records are numpy views over immutable segment bytes; applying
+# them into each session's private tree copies, so sharing is safe.
+_TAIL_CACHE_MAX = 4
+_TAIL_CACHE: "OrderedDict[tuple, list]" = OrderedDict()
+_TAIL_CACHE_LOCK = threading.Lock()
+_TAIL_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def tail_cache_stats() -> Dict[str, int]:
+    with _TAIL_CACHE_LOCK:
+        return dict(_TAIL_CACHE_STATS)
+
+
+def _cached_tail_ops(wal: SegmentedWAL, offset: int, end: int) -> list:
+    key = wal.segment_identity(offset, end)
+    with _TAIL_CACHE_LOCK:
+        ops = _TAIL_CACHE.get(key)
+        if ops is not None:
+            _TAIL_CACHE.move_to_end(key)
+            _TAIL_CACHE_STATS["hits"] += 1
+            return ops
+        _TAIL_CACHE_STATS["misses"] += 1
+    ops = list(wal.replay(offset=offset, end=end))
+    with _TAIL_CACHE_LOCK:
+        _TAIL_CACHE[key] = ops
+        while len(_TAIL_CACHE) > _TAIL_CACHE_MAX:
+            _TAIL_CACHE.popitem(last=False)
+    return ops
 
 
 # ---------------------------------------------------------------------------
@@ -92,14 +152,18 @@ class Snapshot:
                     continue
                 part = open_partition_file(
                     os.path.join(directory, f"part_{entry['digest']}.pal"))
+                # sessions carry no residency budget: decode pointer
+                # indexes once and keep them (repeat-query speed)
+                part.index_resident = True
                 dead = os.path.join(directory,
                                     f"part_{entry['digest']}.dead.npy")
                 if entry.get("dead") and os.path.exists(dead):
                     part.dead = np.load(dead)
                 tree.levels[li][pi] = part
         wal = SegmentedWAL(os.path.join(directory, "wal"), readonly=True)
-        replay_ops(tree, wal.replay(offset=int(doc["wal_offset"]),
-                                    end=self.pinned_offset))
+        replay_ops(tree, _cached_tail_ops(wal, int(doc["wal_offset"]),
+                                          self.pinned_offset))
+        tree.publish()  # cover the directly-installed pinned partitions
         self.tree = tree
         self._engine = None
 
@@ -156,14 +220,16 @@ class Snapshot:
 
 
 # ---------------------------------------------------------------------------
-# ServiceDB — single writer, background maintenance, snapshot hand-out
+# ServiceDB — single writer, parallel maintenance pipeline, lock-free reads
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class ServiceStats:
-    flushes: int = 0          # maintenance buffer drains (merges + sink)
+    flushes: int = 0          # committed buffer drains (merges + sink)
     checkpoints: int = 0      # maintenance checkpoints (manifest + GC)
     snapshots: int = 0        # sessions pinned
     backpressure_waits: int = 0  # insert calls that blocked on the bound
+    feedback_checkpoints: int = 0  # checkpoints scheduled by reader feedback
+    max_concurrent_flushes: int = 0  # peak in-flight flush jobs (pipeline)
 
 
 class ServiceDB:
@@ -171,15 +237,27 @@ class ServiceDB:
 
     Writer methods (insert/delete/update) append to the WAL + buffers under
     the service lock and return; merges, partition persistence, checkpoint
-    GC, and WAL compaction run on the maintenance thread. `begin_snapshot`
-    pins the current logical state into a session directory and returns a
-    `Snapshot` any number of readers can query (or re-open by path from
-    other processes) without ever contending with the writer."""
+    GC, and WAL compaction run on the maintenance pipeline. Live reads go
+    through `read_view()` — epoch-pinned manifests, NO lock shared with any
+    of the above. `begin_snapshot` pins the current logical state into a
+    session directory and returns a `Snapshot` any number of readers can
+    query (or re-open by path from other processes).
+
+    `pipeline=True` (default) runs the ISSUE-5 parallel pipeline: flush
+    merges of distinct top-level intervals proceed concurrently on
+    `maintenance_workers` threads, and checkpoints overlap them.
+    `pipeline=False` keeps the PR-4 serial loop (one thread, every step
+    under the service lock) — the in-run baseline `bench_service.py`'s
+    contended-read benchmark measures against."""
 
     def __init__(self, db: GraphDB,
                  checkpoint_interval_ops: int = 500_000,
                  backpressure_edges: Optional[int] = None,
-                 maintenance: bool = True):
+                 maintenance: bool = True,
+                 pipeline: bool = True,
+                 maintenance_workers: Optional[int] = None,
+                 wal_tail_budget_bytes: int = 64 << 20,
+                 snapshot_open_budget_s: float = 1.0):
         if db.tree.wal is None:
             raise ValueError("ServiceDB needs a durable GraphDB")
         self.db = db
@@ -189,6 +267,12 @@ class ServiceDB:
         self.backpressure_edges = int(backpressure_edges
                                       if backpressure_edges is not None
                                       else 4 * self.tree.buffer_cap)
+        self.pipeline = bool(pipeline)
+        self.maintenance_workers = int(
+            maintenance_workers if maintenance_workers is not None
+            else max(2, min(4, (os.cpu_count() or 2) - 1)))
+        self.wal_tail_budget_bytes = int(wal_tail_budget_bytes)
+        self.snapshot_open_budget_s = float(snapshot_open_budget_s)
         self.stats = ServiceStats()
         self._lock = threading.RLock()
         self._work = threading.Condition(self._lock)
@@ -197,11 +281,38 @@ class ServiceDB:
         self._ops_since_ckpt = 0
         self._snap_ids = itertools.count()
         self.maintenance_error: Optional[BaseException] = None
+        # merge slots: one lock per top-level destination interval. A flush
+        # job owns its subtree for the whole merge; deletes/column updates
+        # take the one slot their destination maps to. Lock ORDER: interval
+        # locks (ascending index) strictly before the service lock. RLocks,
+        # so a caller may pre-acquire a slot (in order) around a compound
+        # operation that itself takes it.
+        self._interval_locks = [threading.RLock() for _ in self.tree.buffers]
+        self._flushing: set = set()       # top indexes with a job in flight
+        self._ckpt_running = False
+        self._ckpt_requested = False      # reader-feedback checkpoint ask
+        # the tail budget measures what a new session must REPLAY, i.e.
+        # bytes past the manifest-covered offset — a store reopened with a
+        # big pre-existing tail must count it (initializing to the current
+        # tail would report 0 until new writes accrue)
+        try:
+            self._last_ckpt_offset = int(
+                db._read_manifest().get("wal_offset", 0))
+        except OSError:
+            self._last_ckpt_offset = self.tree.wal.tail_offset()
+        self.last_snapshot_open_s = 0.0
         self._thread: Optional[threading.Thread] = None
+        self._pool: Optional[ThreadPoolExecutor] = None
         if maintenance:
+            if self.pipeline:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.maintenance_workers,
+                    thread_name_prefix="graphdb-mw")
+                target = self._scheduler_loop
+            else:
+                target = self._maintenance_loop
             self._thread = threading.Thread(
-                target=self._maintenance_loop, name="graphdb-maintenance",
-                daemon=True)
+                target=target, name="graphdb-maintenance", daemon=True)
             self._thread.start()
 
     # -- lifecycle -------------------------------------------------------------
@@ -209,12 +320,19 @@ class ServiceDB:
     def create(cls, directory: str, max_id: int,
                checkpoint_interval_ops: int = 500_000,
                backpressure_edges: Optional[int] = None,
-               maintenance: bool = True, **graphdb_kw) -> "ServiceDB":
+               maintenance: bool = True, pipeline: bool = True,
+               maintenance_workers: Optional[int] = None,
+               wal_tail_budget_bytes: int = 64 << 20,
+               snapshot_open_budget_s: float = 1.0,
+               **graphdb_kw) -> "ServiceDB":
         graphdb_kw.setdefault("durable", True)
         db = GraphDB.create(directory, max_id=max_id, **graphdb_kw)
         return cls(db, checkpoint_interval_ops=checkpoint_interval_ops,
                    backpressure_edges=backpressure_edges,
-                   maintenance=maintenance)
+                   maintenance=maintenance, pipeline=pipeline,
+                   maintenance_workers=maintenance_workers,
+                   wal_tail_budget_bytes=wal_tail_budget_bytes,
+                   snapshot_open_budget_s=snapshot_open_budget_s)
 
     @classmethod
     def open(cls, directory: str, **service_kw) -> "ServiceDB":
@@ -228,13 +346,17 @@ class ServiceDB:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)  # in-flight jobs finish cleanly
+            self._pool = None
         with self._lock:
             self.db.close()  # final checkpoint + WAL close
 
     # -- writer surface --------------------------------------------------------
     def _after_mutation(self, n_ops: int) -> None:
         """Caller holds the lock. Account ops, wake maintenance, apply
-        backpressure: block while the dirty set exceeds the bound."""
+        backpressure: block while the dirty set (buffered + in-flight
+        drained edges) exceeds the bound."""
         if self.maintenance_error is not None:
             # a dead maintenance thread would leave backpressure waiting
             # forever — surface its failure to the writer instead
@@ -244,7 +366,8 @@ class ServiceDB:
         if self._pending_work():
             self._work.notify()
         waited = False
-        while (self.tree.total_buffered() > self.backpressure_edges
+        while (self.tree.total_buffered() + self.tree.inflight_edges()
+               > self.backpressure_edges
                and not self._closing and self._thread is not None
                and self._thread.is_alive()):
             waited = True
@@ -264,23 +387,54 @@ class ServiceDB:
             self.tree.insert_edges(src, dst, etype=etype, columns=columns)
             self._after_mutation(n)
 
+    def _merge_slot_of(self, dst: int) -> threading.Lock:
+        """The interval lock owning `dst`'s top-level subtree. Structural
+        partition mutations (tombstones, in-place column writes) must hold
+        it so they serialize with an in-flight merge of the same subtree —
+        otherwise the merge's rebuilt partitions would drop a tombstone
+        landed mid-merge. Acquired BEFORE the service lock (lock order)."""
+        idst = int(self.tree.intervals.to_internal_scalar(dst))
+        return self._interval_locks[self.tree._top_index_of(idst)]
+
     def delete_edge(self, src: int, dst: int) -> bool:
-        with self._lock:
-            found = self.tree.delete_edge(src, dst)
-            self._after_mutation(1)
-            return found
+        with self._merge_slot_of(dst):
+            with self._lock:
+                found = self.tree.delete_edge(src, dst)
+                self._after_mutation(1)
+                return found
 
     def update_edge_column(self, src: int, dst: int, name: str, value) -> bool:
-        with self._lock:
-            ok = self.tree.update_edge_column(src, dst, name, value)
-            self._after_mutation(1)
-            return ok
+        with self._merge_slot_of(dst):
+            with self._lock:
+                ok = self.tree.update_edge_column(src, dst, name, value)
+                self._after_mutation(1)
+                return ok
+
+    def _all_merge_slots(self):
+        """Context acquiring every interval lock in index order — the brief
+        exclusive window of checkpoint phase B (writers blocked, epoch
+        readers unaffected)."""
+        class _All:
+            def __init__(_s, locks):
+                _s.locks = locks
+
+            def __enter__(_s):
+                for lk in _s.locks:
+                    lk.acquire()
+
+            def __exit__(_s, *exc):
+                for lk in reversed(_s.locks):
+                    lk.release()
+
+        return _All(self._interval_locks)
 
     def checkpoint(self) -> Dict[str, Any]:
-        with self._lock:
-            manifest = self.db.checkpoint()
-            self._ops_since_ckpt = 0
-            return manifest
+        with self._all_merge_slots():
+            with self._lock:
+                manifest = self.db.checkpoint()
+                self._ops_since_ckpt = 0
+                self._last_ckpt_offset = self.tree.wal.tail_offset()
+                return manifest
 
     # -- snapshot sessions -----------------------------------------------------
     def begin_snapshot(self) -> Snapshot:
@@ -303,21 +457,42 @@ class ServiceDB:
                 except FileExistsError:
                     continue
             self.stats.snapshots += 1
-        return Snapshot(dest, doc=doc)
+        t0 = time.perf_counter()
+        snap = Snapshot(dest, doc=doc)
+        open_s = time.perf_counter() - t0
+        self.last_snapshot_open_s = open_s
+        if open_s > self.snapshot_open_budget_s:
+            # reader-latency feedback: the session rebuild (mmap + tail
+            # replay) is getting slow — a checkpoint shrinks the tail
+            with self._lock:
+                if not self._ckpt_requested:
+                    self._ckpt_requested = True
+                    self.stats.feedback_checkpoints += 1
+                self._work.notify()
+        return snap
 
-    # -- live reads (serialized with the writer) -------------------------------
+    # -- live reads (lock-free: epoch-pinned manifests, ISSUE 5) ---------------
+    def read_view(self):
+        """Pin the current published manifest and return a read-only store
+        view (core/manifest.py). The whole query session on one view —
+        point lookups, batched engine slabs, FoF/BFS, PSW streaming — runs
+        against a single frozen state and NEVER takes the service lock, so
+        read latency is flat while the writer appends and merges run.
+        Release the view (context manager) when done."""
+        return self.tree.read_view()
+
     def out_neighbors(self, v: int) -> np.ndarray:
-        with self._lock:
-            return self.db.out_neighbors(v)
+        with self.read_view() as view:
+            return view.out_neighbors(v)
 
     def in_neighbors(self, v: int) -> np.ndarray:
-        with self._lock:
-            return self.db.in_neighbors(v)
+        with self.read_view() as view:
+            return view.in_neighbors(v)
 
     @property
     def n_edges(self) -> int:
-        with self._lock:
-            return self.tree.n_edges
+        with self.read_view() as view:
+            return view.n_edges
 
     @property
     def intervals(self) -> IntervalMap:
@@ -326,14 +501,25 @@ class ServiceDB:
     def storage_engine(self):
         """The LIVE engine — only safe while no concurrent writer runs
         (e.g. single-thread benchmarking). Concurrent readers should use
-        `begin_snapshot().storage_engine()` instead."""
+        `read_view().storage_engine()` (lock-free, one consistent manifest)
+        or `begin_snapshot().storage_engine()` (process-shareable)."""
         return self.db.storage_engine()
 
     # -- maintenance -----------------------------------------------------------
+    def wal_tail_bytes(self) -> int:
+        """Un-checkpointed WAL bytes — what a new session must replay."""
+        return self.tree.wal.tail_offset() - self._last_ckpt_offset
+
+    def _checkpoint_due(self) -> bool:
+        return (self._ops_since_ckpt >= self.checkpoint_interval_ops
+                or self._ckpt_requested
+                or self.wal_tail_bytes() >= self.wal_tail_budget_bytes)
+
     def _pending_work(self) -> bool:
         return (self.tree.total_buffered() > self.tree.buffer_cap
-                or self._ops_since_ckpt >= self.checkpoint_interval_ops)
+                or self._checkpoint_due())
 
+    # -- the PR-4 serial loop (pipeline=False: the measured baseline) ----------
     def _maintenance_loop(self) -> None:
         try:
             self._maintenance_steps()
@@ -348,8 +534,8 @@ class ServiceDB:
         while True:
             # one lock acquisition per transition: the lock is actually
             # free between a flush and the next flush/checkpoint, so
-            # writers and live reads interleave with a sustained drain
-            # instead of stalling behind the whole backlog
+            # writers interleave with a sustained drain instead of
+            # stalling behind the whole backlog
             with self._lock:
                 while not self._pending_work() and not self._closing:
                     self._work.wait(timeout=0.5)
@@ -361,10 +547,126 @@ class ServiceDB:
                     # one rewrite instead of many
                     self.tree.flush_fullest_buffer()
                     self.stats.flushes += 1
-                elif self._ops_since_ckpt >= self.checkpoint_interval_ops:
+                elif self._checkpoint_due():
                     # CHECKPOINT: persist + manifest + store GC + WAL
                     # segment compaction
                     self.db.checkpoint()
                     self._ops_since_ckpt = 0
+                    self._last_ckpt_offset = self.tree.wal.tail_offset()
+                    self._ckpt_requested = False
                     self.stats.checkpoints += 1
+                self._drained.notify_all()
+
+    # -- the ISSUE-5 pipeline (pipeline=True) ----------------------------------
+    def _scheduler_loop(self) -> None:
+        """Dispatch flush jobs (one per top-level interval, concurrent
+        across intervals) and checkpoint jobs to the worker pool. Holds the
+        service lock only to inspect state and enqueue; all heavy work runs
+        on the workers."""
+        try:
+            with self._lock:
+                while True:
+                    while not self._pending_work() and not self._closing:
+                        self._work.wait(timeout=0.5)
+                    if self._closing:
+                        return  # close() drains the pool + final checkpoint
+                    if self.maintenance_error is not None:
+                        return  # a dead job poisons the service; stop here
+                    submitted = self._schedule_flushes()
+                    if self._checkpoint_due() and not self._ckpt_running:
+                        self._ckpt_running = True
+                        self._pool.submit(self._run_job, self._checkpoint_job)
+                        submitted = True
+                    if not submitted:
+                        # work is pending but every eligible job is already
+                        # in flight — wait for a commit to change the state
+                        self._work.wait(timeout=0.2)
+        except BaseException as e:
+            with self._lock:
+                self.maintenance_error = e
+                self._drained.notify_all()
+
+    def _schedule_flushes(self) -> bool:
+        """Caller holds the lock. Submit flush jobs for the fullest
+        buffers not already in flight while the drainable backlog exceeds
+        the cap — independent intervals drain CONCURRENTLY."""
+        if self.tree.total_buffered() <= self.tree.buffer_cap:
+            return False
+        sizes = [(len(b), j) for j, b in enumerate(self.tree.buffers)
+                 if len(b) and j not in self._flushing]
+        sizes.sort(reverse=True)
+        submitted = False
+        remaining = self.tree.total_buffered()
+        for n, j in sizes:
+            if len(self._flushing) >= self.maintenance_workers:
+                break
+            self._flushing.add(j)
+            self.stats.max_concurrent_flushes = max(
+                self.stats.max_concurrent_flushes, len(self._flushing))
+            self._pool.submit(self._run_job, self._flush_job, j)
+            submitted = True
+            remaining -= n
+            if remaining <= self.tree.buffer_cap:
+                break
+        return submitted
+
+    def _run_job(self, fn, *args) -> None:
+        try:
+            fn(*args)
+        except BaseException as e:
+            with self._lock:
+                self.maintenance_error = e
+                self._drained.notify_all()
+                self._work.notify_all()
+
+    def _flush_job(self, j: int) -> None:
+        """One pipelined flush: drain under the service lock (cheap —
+        detach staging views, publish), merge + persist under ONLY the
+        interval lock (the expensive part, concurrent with other intervals'
+        flushes, the writer, and every reader), commit + publish under the
+        service lock again (cheap pointer swaps)."""
+        try:
+            with self._interval_locks[j]:
+                with self._lock:
+                    st = self.tree.drain_buffer(j)
+                if st is None:
+                    return
+                txn = self.tree.build_flush_txn(j, st)  # off the service lock
+                with self._lock:
+                    self.tree.commit_txn(txn)
+                    self.stats.flushes += 1
+        finally:
+            with self._lock:
+                self._flushing.discard(j)
+                self._drained.notify_all()
+                self._work.notify()
+
+    def _checkpoint_job(self) -> None:
+        """Checkpoint overlapping in-flight merges. Phase A persists every
+        RAM/dirty partition with NO locks held (content-addressed puts are
+        idempotent; a partition a concurrent merge replaces becomes an
+        unreferenced file the next GC removes). Phase B takes all interval
+        locks + the service lock for the residual buffer flush, manifest
+        write, epoch-aware GC, and WAL compaction — by then phase A has
+        already written the bulk of the bytes, so the exclusive window
+        stays short. Writers stall only for phase B; readers never."""
+        try:
+            with self._lock:
+                candidates = [
+                    part for lv in self.tree.levels for part in lv
+                    if part.n_edges
+                    and (not isinstance(part, DiskPartition) or part.dirty)
+                ]
+            for part in candidates:  # phase A: no locks, overlaps merges
+                self.db.store.put(part)
+            with self._all_merge_slots():  # phase B: brief exclusive window
+                with self._lock:
+                    self.db.checkpoint()
+                    self._ops_since_ckpt = 0
+                    self._last_ckpt_offset = self.tree.wal.tail_offset()
+                    self.stats.checkpoints += 1
+        finally:
+            with self._lock:
+                self._ckpt_running = False
+                self._ckpt_requested = False
                 self._drained.notify_all()

@@ -259,6 +259,20 @@ class SegmentedWAL:
     def on_disk_bytes(self) -> int:
         return sum(os.path.getsize(p) for _, _, p in self.segments())
 
+    def segment_identity(self, offset: int, end: int) -> Tuple:
+        """Hashable identity of the record window [offset, end): the
+        (st_dev, st_ino, base) of every segment overlapping it, plus the
+        window itself. Hard-linked copies of the segments (snapshot session
+        dirs pinning the same offset) share inodes and therefore the same
+        identity — the key of the shared replayed-tail cache
+        (core/service.py, ISSUE 5 satellite)."""
+        parts = []
+        for base, seg_end, path in self.segments():
+            if seg_end > offset and base < end:
+                st = os.stat(path)
+                parts.append((st.st_dev, st.st_ino, base))
+        return (tuple(parts), int(offset), int(end))
+
     # -- replay ----------------------------------------------------------------
     def replay(self, offset: int = 0,
                end: Optional[int] = None) -> Iterator[Tuple]:

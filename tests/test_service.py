@@ -173,7 +173,10 @@ class TestConcurrentStress:
                     log.append(("insert", s, d, None))
                 if bi % 3 == 2:  # delete something known to exist
                     s0, d0 = int(s[0]), int(d[0])
-                    with svc._lock:
+                    # lock ORDER: the delete's merge slot before the
+                    # service lock (matching ServiceDB.delete_edge, which
+                    # re-acquires both reentrantly)
+                    with svc._merge_slot_of(d0), svc._lock:
                         svc.delete_edge(s0, d0)
                         log.append(("delete", s0, d0))
             stop.set()
@@ -213,18 +216,20 @@ class TestConcurrentStress:
         backpressure wait."""
         svc = make_service(tmp_path, buffer_cap=100, backpressure_edges=300)
 
-        def boom():
+        def boom(j):
             raise OSError("simulated ENOSPC")
 
-        svc.tree.flush_fullest_buffer = boom
+        # drain_buffer is the first step of BOTH the serial flush and the
+        # pipelined flush job — patching it kills either maintenance mode
+        svc.tree.drain_buffer = boom
         rng = np.random.default_rng(9)
         with pytest.raises((RuntimeError, OSError)):
             for _ in range(50):  # cross the cap, then observe the death
                 svc.insert_edges(rng.integers(0, 10000, 100),
                                  rng.integers(0, 10000, 100))
         assert svc.maintenance_error is not None
-        svc._thread = None  # thread is dead; close() must not join/flush it
-        del svc.tree.flush_fullest_buffer
+        del svc.tree.drain_buffer
+        svc.maintenance_error = None  # cleared: allow the closing checkpoint
         svc.close()
 
     def test_backpressure_bounds_dirty_set(self, tmp_path):
