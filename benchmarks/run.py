@@ -13,7 +13,8 @@ import sys
 import time
 
 from . import (bench_disk, bench_fof, bench_insert, bench_linkbench,
-               bench_psw, bench_query, bench_service, bench_storage)
+               bench_multihop, bench_psw, bench_query, bench_service,
+               bench_storage)
 
 SUITES = {
     "storage": bench_storage.run,      # paper Table 1
@@ -24,6 +25,7 @@ SUITES = {
     "psw": bench_psw.run,              # paper §6 + device PSW
     "disk": bench_disk.run,            # ISSUE 3: out-of-core + Fig 8c real I/O
     "service": bench_service.run,      # ISSUE 4: snapshot readers + maintenance
+    "multihop": bench_multihop.run,    # ISSUE 6: columnar k-hop operators
 }
 
 

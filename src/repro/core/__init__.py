@@ -49,7 +49,28 @@ from .psw import (
     psw_sweep_host,
     stream_interval_buckets,
 )
-from .query import Frontier, bfs, friends_of_friends, shortest_path, traverse_out
+from .multihop import (
+    EdgePredicate,
+    KHopResult,
+    TwoHopResult,
+    dense_plan,
+    expand,
+    khop,
+    semijoin,
+    triangle_count,
+    two_hop_counts,
+)
+from .query import (
+    Frontier,
+    bfs,
+    bfs_perhop,
+    dedup_frontier,
+    friends_of_friends,
+    friends_of_friends_perhop,
+    shortest_path,
+    shortest_path_perhop,
+    traverse_out,
+)
 from .codec import (
     BlockedGammaPointer,
     GammaChunkedIndex,
@@ -76,7 +97,11 @@ __all__ = [
     "DeviceGraph", "build_device_graph", "edge_centric_sweep",
     "edge_centric_sweep_arrays", "pagerank_device", "pagerank_host",
     "pagerank_out_of_core", "psw_sweep_host", "stream_interval_buckets",
-    "Frontier", "bfs", "friends_of_friends", "shortest_path", "traverse_out",
+    "EdgePredicate", "KHopResult", "TwoHopResult", "dense_plan", "expand",
+    "khop", "semijoin", "triangle_count", "two_hop_counts",
+    "Frontier", "bfs", "bfs_perhop", "dedup_frontier", "friends_of_friends",
+    "friends_of_friends_perhop", "shortest_path", "shortest_path_perhop",
+    "traverse_out",
     "BlockedGammaPointer", "GammaChunkedIndex", "SparseIndex",
     "decode_monotonic",
     "decode_monotonic_blocked", "elias_gamma_decode",

@@ -312,6 +312,98 @@ class StorageEngine:
     def in_neighbors_batch(self, vs: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
         return self._neighbors_batch(vs, "in")
 
+    def expand_frontier(self, vs, direction: str = "out", predicate=None,
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Flat one-hop expansion: (owner index into vs, neighbor) pairs in
+        ORIGINAL ids, UNGROUPED and in no particular order.
+
+        This is the multi-hop fast path (core/multihop.py): operators that
+        immediately re-sort the union by packed (owner, neighbor) keys do not
+        need `_neighbors_batch`'s stable per-vertex regrouping, so the
+        argsort over the whole hit set is skipped entirely.
+
+        `predicate` is pushed into the slab scan: an object with
+        `mask(slab, pos) -> bool array` evaluated on edge-array positions
+        BEFORE the destination gather, so non-matching edges never
+        materialize into the result (only their positions are touched).
+        """
+        vs = np.asarray(vs, dtype=np.int64).ravel()
+        iv = self.intervals
+        vis = np.asarray(iv.to_internal(vs))
+        release = getattr(self.graph, "release_slab", None)
+        vals, owners = [], []
+        for slab in self._slabs():
+            pos, owner = _slab_positions(slab, vis, direction)
+            if pos.size and predicate is not None:
+                keep = predicate.mask(slab, pos)
+                pos, owner = pos[keep], owner[keep]
+            if pos.size:
+                vals.append(slab.dst_at(pos) if direction == "out"
+                            else slab.src_at(pos))
+                owners.append(owner)
+            if release is not None:
+                part = getattr(slab, "part", None)
+                if part is not None:
+                    release(part)
+        if not vals:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        flat = np.concatenate(vals)
+        return (np.concatenate(owners),
+                np.asarray(iv.to_original(flat), np.int64))
+
+    def out_degree_batch(self, vs) -> np.ndarray:
+        return self._degree_batch(vs, "out")
+
+    def in_degree_batch(self, vs) -> np.ndarray:
+        return self._degree_batch(vs, "in")
+
+    def _degree_batch(self, vs, direction: str) -> np.ndarray:
+        """Live-edge degree per query vertex (multi-edges counted) without
+        gathering a single endpoint: positions are counted per owner right
+        after the range expansion, so the cost is the pointer-index probes
+        plus one bincount per slab."""
+        vs = np.asarray(vs, dtype=np.int64).ravel()
+        vis = np.asarray(self.intervals.to_internal(vs))
+        deg = np.zeros(vs.shape[0], np.int64)
+        release = getattr(self.graph, "release_slab", None)
+        for slab in self._slabs():
+            pos, owner = _slab_positions(slab, vis, direction)
+            if pos.size:
+                deg += np.bincount(owner, minlength=vs.shape[0])
+            if release is not None:
+                part = getattr(slab, "part", None)
+                if part is not None:
+                    release(part)
+        return deg
+
+    # -- derived-plan memoization (dense frontier plans, edge-key sets) ------
+    def plan_cache(self) -> Dict:
+        """Mutable memo dict for whole-store derived read structures
+        (core/multihop.py dense plans, packed edge-key sets). Entries are
+        keyed by `cache_token()` so a stale plan is never served after the
+        store mutates; engines over immutable state share the dict across
+        readers (idempotent fills, same contract as the manifest cache)."""
+        cache = getattr(self, "_plan_cache", None)
+        if cache is None:
+            cache = self._plan_cache = {}
+        return cache
+
+    def cache_token(self):
+        """Content fingerprint for plan keying, or None when the store
+        cannot be fingerprinted (disables caching, never staleness)."""
+        g = self.graph
+        epochs = getattr(g, "epochs", None)
+        if epochs is not None:
+            cur = epochs.current
+            if cur is not None:
+                return ("epoch", cur.version)
+        n_edges = getattr(g, "n_edges", None)
+        buffered = getattr(g, "total_buffered", None)
+        if n_edges is None:
+            return None
+        return ("edges", int(n_edges),
+                int(buffered()) if buffered is not None else 0)
+
     def _neighbors_batch(self, vs, direction: str):
         vs = np.asarray(vs, dtype=np.int64).ravel()
         iv = self.intervals
@@ -449,13 +541,18 @@ class ManifestEngine(StorageEngine):
 
     def _slabs(self):
         m = self.graph.manifest
-        slabs = m.cache.get("slabs")
-        if slabs is None:
-            slabs = [_PartitionSlab(mp) for lv in m.levels for mp in lv]
-            slabs += [_BufferSlab(st, interval)
-                      for st, interval in m.staging_slabs()]
-            m.cache["slabs"] = slabs  # shared by every reader of this pin
-        return slabs
+        return m.derived("slabs", lambda: (
+            [_PartitionSlab(mp) for lv in m.levels for mp in lv]
+            + [_BufferSlab(st, interval)
+               for st, interval in m.staging_slabs()]))
+
+    def plan_cache(self):
+        # derived plans live on the manifest itself: shared by every reader
+        # of this publication, dropped wholesale when the writer republishes
+        return self.graph.manifest.cache
+
+    def cache_token(self):
+        return ("manifest",)  # one manifest == one immutable edge set
 
 
 class SnapshotEngine(LSMEngine):

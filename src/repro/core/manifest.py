@@ -112,6 +112,16 @@ class LevelManifest:
     def partitions(self) -> List[ManifestPartition]:
         return [p for lv in self.levels for p in lv]
 
+    def derived(self, key, builder):
+        """Memoized derived read structure (engine slab lists, multihop
+        dense plans, edge-key sets). A manifest is immutable, so the build
+        is idempotent: concurrent readers may race to fill the same key and
+        one winner's value sticks — no lock, no staleness."""
+        val = self.cache.get(key)
+        if val is None:
+            val = self.cache[key] = builder()
+        return val
+
     def staging_slabs(self):
         """(staging, interval) for every buffer + in-flight staging, the
         interval being the fed top-level partition's."""

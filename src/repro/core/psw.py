@@ -110,14 +110,18 @@ def psw_sweep_host(
 def pagerank_host(g: GraphLike, n_iters: int = 5, damping: float = 0.85) -> np.ndarray:
     """Vertex-centric PageRank with PSW, state on edges (paper §6.1).
 
-    Edge column 'pr' carries rank(src)/outdeg(src); each sweep computes the
-    interval's new ranks from its in-edges and refreshes its out-edge values
-    through the sliding windows. Returns ranks indexed by internal ID.
+    The edge state rank(src)/outdeg(src) lives in a fresh per-partition
+    OVERLAY keyed by partition identity — the store's attribute columns are
+    never written (they used to be clobbered in place, the ROADMAP-flagged
+    wart; tests/test_psw_query.py now pins source columns bitwise). Each
+    sweep computes an interval's new ranks from its in-edge state and
+    refreshes its out-edge state through the sliding windows. Returns ranks
+    indexed by internal ID.
     """
     iv = g.intervals
     n = iv.max_vertices
-    # edge-state PageRank writes the 'pr' column in place, so an LSM store
-    # merges its buffers first (read-only analytics use snapshot() instead)
+    # PSW windows only cover partitions, so an LSM store merges its buffers
+    # first (read-only analytics use snapshot() instead)
     flush_all = getattr(g, "flush_all", None)
     if flush_all is not None:
         flush_all()
@@ -130,10 +134,15 @@ def pagerank_host(g: GraphLike, n_iters: int = 5, damping: float = 0.85) -> np.n
             live = np.ones(p.n_edges, bool) if p.dead is None else ~p.dead
             np.add.at(outdeg, p.src[live], 1)
     ranks = np.full(n, 1.0, dtype=np.float64)
+    # `parts` (and the window partitions psw_sweep_host hands back) are the
+    # store's own stable partition objects, so identity keys are stable for
+    # the whole run; `parts` holds them alive
+    pr = {}
     for p in parts:
-        p.columns["pr"] = np.zeros(p.n_edges, dtype=np.float64)
         if p.n_edges:
-            p.columns["pr"] = ranks[p.src] / np.maximum(outdeg[p.src], 1)
+            pr[id(p)] = ranks[p.src] / np.maximum(outdeg[p.src], 1)
+        else:
+            pr[id(p)] = np.zeros(0, dtype=np.float64)
 
     def sweep(i, owner, windows):
         lo, hi = iv.interval_range(i)
@@ -144,14 +153,14 @@ def pagerank_host(g: GraphLike, n_iters: int = 5, damping: float = 0.85) -> np.n
                 continue
             live = np.ones(p.n_edges, bool) if p.dead is None else ~p.dead
             sel = live & (p.dst >= lo) & (p.dst < hi)
-            np.add.at(acc, p.dst[sel] - lo, p.columns["pr"][sel])
+            np.add.at(acc, p.dst[sel] - lo, pr[id(p)][sel])
         new_rank = (1 - damping) + damping * acc
         ranks[lo:hi] = new_rank
-        # refresh out-edge values through the windows
+        # refresh out-edge state through the windows
         for p, a, b in windows:
             if b > a:
                 s = p.src[a:b]
-                p.columns["pr"][a:b] = ranks[s] / np.maximum(outdeg[s], 1)
+                pr[id(p)][a:b] = ranks[s] / np.maximum(outdeg[s], 1)
 
     for _ in range(n_iters):
         psw_sweep_host(g, sweep)

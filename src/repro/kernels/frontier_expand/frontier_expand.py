@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: virtual-row ELL frontier expansion.
+
+The multi-hop dense path (core/multihop.py, DESIGN.md §10.3) lays the
+store's deduplicated edge set out destination-grouped in rows of at most K
+sources — a destination of degree d spans ceil(d/K) VIRTUAL rows, so the
+layout is linear in |E| where `pad_to_ell`'s per-vertex padding explodes on
+power-law degree tails. The kernel accumulates, per virtual row, the masked
+sum of frontier-indicator rows; the per-destination reduction over virtual
+rows happens outside (a sorted segment-sum keyed by the plan's `row_dst`).
+
+Tiling: grid = (n_row_blocks, n_frontier_blocks). idx/mask tiles (Br, K)
+sit in VMEM; the indicator panel x stays in ANY/HBM memory space and rows
+are fetched with dynamic loads (row DMAs on real TPU — source locality
+follows PAL's interval layout, same argument as segment_ell). The K slots
+of one virtual row are an unrolled masked-load loop on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import default_interpret
+
+__all__ = ["frontier_expand_pallas"]
+
+
+def _kernel(idx_ref, mask_ref, x_ref, o_ref, *, k_slots: int):
+    br, fb = o_ref.shape
+    f0 = pl.program_id(1) * fb
+
+    def row_body(i, acc):
+        # one row DMA per (virtual row, source) slot; masked slots add zero
+        def slot_body(k, acc):
+            r = idx_ref[i, k]
+            v = mask_ref[i, k]
+            row = pl.load(x_ref, (pl.dslice(r, 1), pl.dslice(f0, fb)))
+            contrib = jnp.where(v, row[0], jnp.zeros((fb,), o_ref.dtype))
+            return acc.at[i].add(contrib)
+
+        return jax.lax.fori_loop(0, k_slots, slot_body, acc)
+
+    acc0 = jnp.zeros(o_ref.shape, o_ref.dtype)
+    o_ref[...] = jax.lax.fori_loop(0, br, row_body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("r_block", "b_block",
+                                             "interpret"))
+def frontier_expand_pallas(idx, mask, x, *, r_block: int = 128,
+                           b_block: int = 128, interpret=None):
+    """idx/mask: (R, K) virtual-row source slots; x: (M, B) frontier
+    indicator panel. R % r_block == 0, B % b_block == 0. Returns (R, B)
+    per-virtual-row masked sums (pre-reduction)."""
+    if interpret is None:
+        interpret = default_interpret()
+    R, K = idx.shape
+    B = x.shape[-1]
+    assert R % r_block == 0 and B % b_block == 0
+
+    grid = (R // r_block, B // b_block)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_slots=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r_block, K), lambda r, b: (r, 0)),
+            pl.BlockSpec((r_block, K), lambda r, b: (r, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),     # x stays in HBM
+        ],
+        out_specs=pl.BlockSpec((r_block, b_block), lambda r, b: (r, b)),
+        out_shape=jax.ShapeDtypeStruct((R, B), x.dtype),
+        interpret=interpret,
+    )(idx, mask, x)

@@ -9,6 +9,12 @@ from _hypothesis_compat import given, settings, st
 from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
 from repro.kernels.flash_attention import (attention_ref, flash_attention,
                                            flash_attention_pallas)
+from repro.kernels.common import round_up
+from repro.kernels.frontier_expand import (build_frontier_plan,
+                                           frontier_expand_counts,
+                                           frontier_expand_np,
+                                           frontier_expand_ref)
+from repro.kernels.frontier_expand.frontier_expand import frontier_expand_pallas
 from repro.kernels.psw_spmm import psw_spmm_edges, spmm_dense_ref
 from repro.kernels.segment_ell import (segment_ell, segment_ell_from_edges,
                                        segment_ell_ref)
@@ -175,3 +181,66 @@ class TestEmbeddingBag:
         ref = embedding_bag_ref(idx, w, table)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=1e-4, atol=1e-4)
+
+
+class TestFrontierExpand:
+    @pytest.mark.parametrize("n,e,b", [(100, 500, 16), (300, 4000, 130),
+                                       (64, 64, 1), (513, 9000, 64)])
+    def test_pallas_matches_oracles(self, n, e, b):
+        rng = np.random.default_rng(n + e)
+        src = rng.integers(0, n, e)
+        dst = rng.integers(0, n, e)
+        plan = build_frontier_plan(src, dst, n, n, k_slots=8)
+        # row budget: virtual rows are linear in edges + touched dsts
+        assert plan.idx.shape[0] <= round_up(
+            np.unique(dst * n + src).size // 8 + np.unique(dst).size + 1, 128)
+        x = rng.random((plan.idx.shape[1] and n, b)).astype(np.float32)
+        xp = np.zeros((round_up(n, 128), round_up(b, 128)), np.float32)
+        xp[:n, :b] = x
+        out = frontier_expand_pallas(jnp.asarray(plan.idx),
+                                     jnp.asarray(plan.mask),
+                                     jnp.asarray(xp), interpret=True)
+        ref = frontier_expand_ref(jnp.asarray(plan.idx),
+                                  jnp.asarray(plan.mask), jnp.asarray(xp))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        npo = frontier_expand_np(plan.idx, plan.mask, xp)
+        np.testing.assert_allclose(npo, np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("use_kernel", [False, True])
+    def test_counts_match_dedup_matmul(self, use_kernel):
+        rng = np.random.default_rng(7)
+        n, e = 220, 3000
+        src = rng.integers(0, n, e)
+        dst = rng.integers(0, n, e)
+        plan = build_frontier_plan(src, dst, n, n)
+        x = (rng.random((n, 5)) < 0.3).astype(np.float32)
+        got = frontier_expand_counts(plan, x, use_kernel=use_kernel,
+                                     interpret=True)
+        a = np.zeros((n, n), np.float32)
+        a[dst, src] = 1.0  # dedup: multi-edges count once
+        np.testing.assert_allclose(got, a @ x, rtol=1e-5, atol=1e-5)
+
+    def test_empty_plan(self):
+        plan = build_frontier_plan(np.empty(0, np.int64), np.empty(0, np.int64),
+                                   10, 12)
+        out = frontier_expand_counts(plan, np.ones((10, 3), np.float32),
+                                     use_kernel=False)
+        assert out.shape == (12, 3) and not out.any()
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_property_random_plans(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(2, 300))
+        e = int(rng.integers(0, 2000))
+        src = rng.integers(0, n, e)
+        dst = rng.integers(0, n, e)
+        b = int(rng.integers(1, 40))
+        plan = build_frontier_plan(src, dst, n, n,
+                                   k_slots=int(rng.integers(1, 33)))
+        x = rng.random((n, b)).astype(np.float32)
+        got = frontier_expand_counts(plan, x, use_kernel=False)
+        a = np.zeros((n, n), np.float32)
+        a[dst, src] = 1.0
+        np.testing.assert_allclose(got, a @ x, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,383 @@
+"""Multi-hop operator tests (ISSUE 6): columnar 2-hop / triangle /
+filtered-traversal operators vs naive per-hop references, on messy live LSM
+state (buffers + tombstones), lock-free ManifestView epoch snapshots, the
+dense Pallas plan path, and a reopened on-disk GraphDB."""
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (
+    EdgePredicate,
+    GraphDB,
+    GraphPAL,
+    IntervalMap,
+    LSMTree,
+    as_engine,
+    bfs,
+    bfs_perhop,
+    dedup_frontier,
+    friends_of_friends,
+    friends_of_friends_perhop,
+    khop,
+    shortest_path,
+    triangle_count,
+    two_hop_counts,
+)
+from repro.core import multihop as mh
+
+
+# ---------------------------------------------------------------------------
+# Naive per-hop references (pure-python adjacency sets)
+# ---------------------------------------------------------------------------
+def adjacency(g):
+    """Live adjacency sets in original ids, straight from to_coo()."""
+    so, do = as_engine(g).to_coo()
+    out_adj, in_adj, eset = {}, {}, set()
+    for a, b in zip(np.asarray(so).tolist(), np.asarray(do).tolist()):
+        out_adj.setdefault(a, set()).add(b)
+        in_adj.setdefault(b, set()).add(a)
+        eset.add((a, b))
+    return out_adj, in_adj, eset
+
+
+def naive_two_hop(out_adj, v, max_friends=None):
+    """(ids, counts) per the per-hop FoF semantics: distinct middles,
+    sorted-first-max_friends truncation, seed+friends excluded."""
+    friends = sorted(out_adj.get(v, ()))
+    if max_friends is not None:
+        friends = friends[:max_friends]
+    cnt = {}
+    for u in friends:
+        for w in out_adj.get(u, ()):
+            cnt[w] = cnt.get(w, 0) + 1
+    # only the (possibly truncated) friend set is excluded — exactly the
+    # per-hop `setdiff1d(fof, [friends..., v])` semantics
+    for w in list(cnt):
+        if w == v or w in set(friends):
+            del cnt[w]
+    ids = sorted(cnt)
+    return (np.asarray(ids, np.int64),
+            np.asarray([cnt[w] for w in ids], np.int64))
+
+
+def naive_triangles(out_adj, in_adj, eset):
+    return sum(1 for v in set(in_adj) & set(out_adj)
+               for u in in_adj[v] for w in out_adj[v] if (u, w) in eset)
+
+
+def naive_filtered_khop(fadj, seeds, k):
+    vis = set(seeds)
+    lev = set(seeds)
+    levels = [sorted(lev)]
+    for _ in range(k):
+        nxt = set()
+        for u in lev:
+            nxt |= fadj.get(u, set())
+        fresh = nxt - vis
+        if not fresh:
+            break
+        vis |= fresh
+        levels.append(sorted(fresh))
+        lev = fresh
+    return levels, sorted(vis)
+
+
+def build_messy_lsm(n, e, seed, n_deletes=0, columns=None, etype=None):
+    """Live LSM with flushed levels, tombstones, and a still-buffered tail."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    iv = IntervalMap.for_capacity(n - 1, 16)
+    dtypes = {k: v.dtype for k, v in (columns or {}).items()} or None
+    t = LSMTree(iv, n_levels=3, branching=4, buffer_cap=max(60, e // 8),
+                max_partition_edges=max(100, e // 4), column_dtypes=dtypes)
+    k = e - max(1, e // 10)
+
+    def sl(a, b):
+        cols = {key: v[a:b] for key, v in (columns or {}).items()}
+        et = None if etype is None else etype[a:b]
+        return cols, et
+
+    cols, et = sl(0, k)
+    t.insert_edges(src[:k], dst[:k], etype=et, columns=cols)
+    cols, et = sl(k, e)
+    t.insert_edges(src[k:], dst[k:], etype=et, columns=cols)
+    for i in rng.choice(k, size=min(n_deletes, k), replace=False):
+        t.delete_edge(int(src[i]), int(dst[i]))
+    return t
+
+
+def assert_two_hop_equal(res, seeds, out_adj, max_friends=None):
+    for i, v in enumerate(np.asarray(seeds).tolist()):
+        ids, counts = naive_two_hop(out_adj, v, max_friends)
+        sl = res.slice_of(i)
+        assert np.array_equal(res.ids[sl], ids), v
+        assert np.array_equal(res.counts[sl], counts), v
+
+
+# ---------------------------------------------------------------------------
+# Property tests: random live stores vs the naive reference
+# ---------------------------------------------------------------------------
+class TestPropertyVsNaive:
+    @given(st.integers(0, 10_000), st.integers(20, 400), st.integers(0, 40),
+           st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def test_two_hop_counts_matches_naive(self, seed, e, n_deletes, trunc):
+        n = 120
+        t = build_messy_lsm(n, e, seed, n_deletes)
+        out_adj, _, _ = adjacency(t)
+        rng = np.random.default_rng(seed)
+        seeds = rng.integers(0, n, 17).astype(np.int64)  # dups allowed
+        mf = 3 if trunc else None
+        res = two_hop_counts(t, seeds, max_friends=mf)
+        assert_two_hop_equal(res, seeds, out_adj, mf)
+
+    @given(st.integers(0, 10_000), st.integers(20, 400), st.integers(0, 40))
+    @settings(max_examples=25, deadline=None)
+    def test_triangle_count_matches_naive(self, seed, e, n_deletes):
+        n = 100
+        t = build_messy_lsm(n, e, seed, n_deletes)
+        out_adj, in_adj, eset = adjacency(t)
+        want = naive_triangles(out_adj, in_adj, eset)
+        assert triangle_count(t) == want
+        # chunked wedge budget must not change the count
+        assert triangle_count(t, wedge_budget=7) == want
+
+    @given(st.integers(0, 10_000), st.integers(20, 300))
+    @settings(max_examples=20, deadline=None)
+    def test_filtered_traversal_matches_naive(self, seed, e):
+        n = 90
+        rng = np.random.default_rng(seed)
+        w = rng.integers(0, 10, e).astype(np.float32)
+        et = rng.integers(0, 3, e).astype(np.int8)
+        t = build_messy_lsm(n, e, seed, columns={"w": w}, etype=et)
+        pred = EdgePredicate(etype=1, column="w", op="<=", value=5.0)
+        batch = as_engine(t).edge_columns_batch(np.arange(n), names=["w"])
+        fadj = {}
+        for s, d, ww, ee in zip(batch.src.tolist(), batch.dst.tolist(),
+                                batch.columns["w"].tolist(),
+                                batch.etype.tolist()):
+            if ee == 1 and ww <= 5.0:
+                fadj.setdefault(s, set()).add(d)
+        seeds = [int(rng.integers(0, n))]
+        res = khop(t, seeds, 3, predicate=pred)
+        levels, visited = naive_filtered_khop(fadj, seeds, 3)
+        assert len(res.levels) == len(levels)
+        for got, want in zip(res.levels, levels):
+            assert got.tolist() == want
+        assert res.visited.tolist() == visited
+
+    @given(st.integers(0, 10_000), st.integers(20, 300), st.integers(0, 30))
+    @settings(max_examples=20, deadline=None)
+    def test_dense_paths_bitwise_equal_sparse(self, seed, e, n_deletes):
+        n = 110
+        t = build_messy_lsm(n, e, seed, n_deletes)
+        rng = np.random.default_rng(seed)
+        seeds = np.unique(rng.integers(0, n, 9))
+        sparse = two_hop_counts(t, seeds)
+        dense = two_hop_counts(t, seeds, dense="kernel")
+        assert np.array_equal(sparse.offsets, dense.offsets)
+        assert np.array_equal(sparse.ids, dense.ids)
+        assert np.array_equal(sparse.counts, dense.counts)
+        s0 = [int(seeds[0])]
+        base = khop(t, s0, 3, dense="never")
+        for mode in ("kernel", "stream"):
+            other = khop(t, s0, 3, dense=mode)
+            assert len(base.levels) == len(other.levels)
+            for a, b in zip(base.levels, other.levels):
+                assert np.array_equal(a, b)
+            assert np.array_equal(base.visited, other.visited)
+
+    @given(st.integers(0, 10_000), st.integers(20, 300))
+    @settings(max_examples=20, deadline=None)
+    def test_query_facades_match_perhop(self, seed, e):
+        n = 100
+        t = build_messy_lsm(n, e, seed, n_deletes=10)
+        rng = np.random.default_rng(seed)
+        for v in rng.integers(0, n, 4).tolist():
+            assert np.array_equal(friends_of_friends(t, v),
+                                  friends_of_friends_perhop(t, v))
+            assert np.array_equal(friends_of_friends(t, v, max_friends=2),
+                                  friends_of_friends_perhop(t, v, max_friends=2))
+            assert bfs(t, v, max_depth=4) == bfs_perhop(t, v, max_depth=4)
+        s, d = int(rng.integers(0, n)), int(rng.integers(0, n))
+        # the columnar two-sided meet takes the true minimum: oracle is
+        # one-sided BFS, not the first-meet per-hop baseline
+        want = bfs_perhop(t, s, max_depth=4).get(d)
+        assert shortest_path(t, s, d, max_depth=4) == want
+
+
+# ---------------------------------------------------------------------------
+# Store-generality: epoch views and a reopened on-disk GraphDB
+# ---------------------------------------------------------------------------
+class TestAcrossStores:
+    def test_manifest_view_identical_to_live(self):
+        t = build_messy_lsm(300, 2000, seed=3, n_deletes=60)
+        seeds = np.unique(np.random.default_rng(3).integers(0, 300, 40))
+        live = two_hop_counts(t, seeds)
+        with t.read_view() as view:
+            pinned = two_hop_counts(view, seeds)
+            assert np.array_equal(live.offsets, pinned.offsets)
+            assert np.array_equal(live.ids, pinned.ids)
+            assert np.array_equal(live.counts, pinned.counts)
+            assert triangle_count(view) == triangle_count(t)
+            # mutate the live store: the pinned view must not move
+            t.insert_edges(np.arange(50), np.arange(1, 51))
+            again = two_hop_counts(view, seeds)
+            assert np.array_equal(pinned.ids, again.ids)
+            assert np.array_equal(pinned.counts, again.counts)
+        # the LIVE store sees the mutation (fresh cache token -> no stale
+        # plan reuse)
+        after_sparse = two_hop_counts(t, seeds)
+        after_dense = two_hop_counts(t, seeds, dense="kernel")
+        assert np.array_equal(after_sparse.ids, after_dense.ids)
+        assert np.array_equal(after_sparse.counts, after_dense.counts)
+
+    def test_reopened_graphdb_matches_prior_answers(self, tmp_path):
+        rng = np.random.default_rng(11)
+        n, e = 400, 3000
+        src = rng.integers(0, n, e)
+        dst = rng.integers(0, n, e)
+        d = os.path.join(str(tmp_path), "db")
+        db = GraphDB.create(d, max_id=n - 1, n_partitions=8, n_levels=2,
+                            branching=4, buffer_cap=800,
+                            max_partition_edges=1500, persist_min_edges=64)
+        db.insert_edges(src[:e - 200], dst[:e - 200])
+        db.checkpoint()
+        db.insert_edges(src[e - 200:], dst[e - 200:])  # WAL-tail edges
+        seeds = np.unique(rng.integers(0, n, 64))
+        live = two_hop_counts(db, seeds)
+        tri = triangle_count(db)
+        out_adj, in_adj, eset = adjacency(db)
+        assert tri == naive_triangles(out_adj, in_adj, eset)
+        assert_two_hop_equal(live, seeds, out_adj)
+        db.close()
+
+        re_db = GraphDB.open(d)
+        res = two_hop_counts(re_db, seeds)
+        assert np.array_equal(res.offsets, live.offsets)
+        assert np.array_equal(res.ids, live.ids)
+        assert np.array_equal(res.counts, live.counts)
+        assert triangle_count(re_db) == tri
+        dense = two_hop_counts(re_db, seeds, dense="kernel")
+        assert np.array_equal(dense.ids, live.ids)
+        assert np.array_equal(dense.counts, live.counts)
+        re_db.close()
+
+
+# ---------------------------------------------------------------------------
+# Engine primitives behind the operators
+# ---------------------------------------------------------------------------
+class TestEnginePrimitives:
+    def test_expand_frontier_matches_grouped_batch(self):
+        t = build_messy_lsm(200, 1200, seed=5, n_deletes=30)
+        eng = as_engine(t)
+        vs = np.unique(np.random.default_rng(5).integers(0, 200, 60))
+        for direction in ("out", "in"):
+            owner, nb = eng.expand_frontier(vs, direction)
+            vals, offsets = (eng.out_neighbors_batch(vs) if direction == "out"
+                             else eng.in_neighbors_batch(vs))
+            M = np.int64(eng.n_internal_vertices)
+            got = np.sort(owner * M + nb)
+            want = np.sort(np.repeat(np.arange(vs.shape[0], dtype=np.int64),
+                                     np.diff(offsets)) * M + vals)
+            assert np.array_equal(got, want), direction
+
+    def test_predicate_pushdown_prunes_before_gather(self):
+        rng = np.random.default_rng(6)
+        n, e = 150, 900
+        src = rng.integers(0, n, e)
+        dst = rng.integers(0, n, e)
+        w = rng.normal(size=e)
+        et = rng.integers(0, 2, e).astype(np.int8)
+        g = GraphPAL.from_edges(src, dst, n_partitions=4, max_id=n - 1,
+                                columns={"w": w}, etype=et)
+        eng = as_engine(g)
+        pred = EdgePredicate(etype=1, column="w", op=">", value=0.0)
+        vs = np.arange(0, n, 2, dtype=np.int64)
+        owner, nb = eng.expand_frontier(vs, "out", pred)
+        keep = (et == 1) & (w > 0.0)
+        want = sorted(zip(src[keep].tolist(), dst[keep].tolist()))
+        got = sorted(zip(vs[owner].tolist(), nb.tolist()))
+        want = [p for p in want if p[0] % 2 == 0]
+        assert got == want
+
+    def test_degree_batch_counts_live_multi_edges(self):
+        t = build_messy_lsm(120, 700, seed=7, n_deletes=25)
+        eng = as_engine(t)
+        so, do = t.to_coo()
+        vs = np.arange(120, dtype=np.int64)
+        out_want = np.bincount(np.asarray(so), minlength=120)
+        in_want = np.bincount(np.asarray(do), minlength=120)
+        assert np.array_equal(eng.out_degree_batch(vs), out_want)
+        assert np.array_equal(eng.in_degree_batch(vs), in_want)
+
+    def test_dedup_frontier_degree_order(self):
+        t = build_messy_lsm(100, 600, seed=8)
+        eng = as_engine(t)
+        ids = np.array([5, 5, 9, 3, 9, 40, 3], np.int64)
+        out = dedup_frontier(eng, ids)
+        assert np.array_equal(out, [3, 5, 9, 40])
+        out = dedup_frontier(eng, ids, visited=np.array([9, 40]))
+        assert np.array_equal(out, [3, 5])
+        ordered = dedup_frontier(eng, ids, degree_order=True)
+        deg = eng.out_degree_batch(ordered)
+        assert np.all(np.diff(deg) <= 0)  # descending
+        assert set(ordered.tolist()) == {3, 5, 9, 40}
+
+    def test_semijoin_and_aggregate(self):
+        table = np.array([2, 5, 9], np.int64)
+        keys = np.array([9, 1, 5, 10, 2, 2], np.int64)
+        assert mh.semijoin(keys, table).tolist() == \
+            [True, False, True, False, True, True]
+        assert mh.semijoin(keys, np.empty(0, np.int64)).tolist() == [False] * 6
+        u, c = mh.aggregate_counts(np.array([3, 1, 3, 3, 1], np.int64))
+        assert u.tolist() == [1, 3] and c.tolist() == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# The frontier-expansion kernel plan
+# ---------------------------------------------------------------------------
+class TestFrontierPlan:
+    def test_virtual_rows_linear_in_edges(self):
+        from repro.kernels.frontier_expand import build_frontier_plan
+        rng = np.random.default_rng(9)
+        # one hub: degree 5000 would make pad_to_ell allocate n*5000 slots
+        src = np.concatenate([rng.integers(0, 1000, 5000),
+                              rng.integers(0, 1000, 2000)])
+        dst = np.concatenate([np.zeros(5000, np.int64),
+                              rng.integers(0, 1000, 2000)])
+        plan = build_frontier_plan(src, dst, 1000, 1000, k_slots=32)
+        assert plan.idx.shape[0] <= ((plan.n_edges // 32 + 1000 + 1) // 128
+                                     + 1) * 128
+        assert plan.mask.sum() == plan.n_edges  # exact, no truncation
+
+    def test_counts_match_dedup_matmul(self):
+        from repro.kernels.frontier_expand import (build_frontier_plan,
+                                                   frontier_expand_counts)
+        rng = np.random.default_rng(10)
+        n, e, B = 300, 2500, 5
+        src = rng.integers(0, n, e)
+        dst = rng.integers(0, n, e)
+        plan = build_frontier_plan(src, dst, n, n, k_slots=8)
+        x = (rng.random((n, B)) < 0.2).astype(np.float32)
+        A = np.zeros((n, n), np.float32)
+        A[dst, src] = 1.0  # dedup adjacency
+        want = A @ x
+        for use_kernel in (False, True):
+            got = frontier_expand_counts(plan, x, use_kernel=use_kernel)
+            assert np.array_equal(got, want), use_kernel
+        from repro.kernels.frontier_expand import frontier_expand_np
+        rows = frontier_expand_np(plan.idx, plan.mask, x)
+        out = np.zeros((n + 1, B), np.float32)
+        np.add.at(out, plan.row_dst, rows)
+        assert np.array_equal(out[:n], want)
+
+    def test_empty_plan(self):
+        from repro.kernels.frontier_expand import (build_frontier_plan,
+                                                   frontier_expand_counts)
+        plan = build_frontier_plan(np.empty(0), np.empty(0), 10, 10)
+        out = frontier_expand_counts(plan, np.ones((10, 2), np.float32))
+        assert out.shape == (10, 2) and not out.any()

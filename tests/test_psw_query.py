@@ -89,6 +89,42 @@ class TestHostPSW:
         intern = np.asarray(iv.to_internal(np.arange(n)))
         np.testing.assert_allclose(ranks[intern], ref, rtol=1e-6)
 
+    def test_pagerank_host_leaves_columns_bitwise_unchanged(self, small_graph):
+        """Regression (ISSUE 6): edge state lives in an overlay — a run must
+        neither mutate existing attribute columns nor leave new keys (the
+        old code wrote a 'pr' column in place)."""
+        n, src, dst = small_graph
+        w = (src * 13 + dst).astype(np.float32)
+        g = GraphPAL.from_edges(src, dst, n_partitions=4, max_id=n - 1,
+                                columns={"w": w})
+        before = [(set(p.columns),
+                   {k: (v.copy(), v) for k, v in p.columns.items()})
+                  for p in g.partitions]
+        ranks = pagerank_host(g, n_iters=3)
+        assert np.isfinite(ranks).all()
+        for p, (keys, snap) in zip(g.partitions, before):
+            assert set(p.columns) == keys  # no 'pr' key injected
+            for k, (copy, ref) in snap.items():
+                assert p.columns[k] is ref  # same array object...
+                assert np.array_equal(np.asarray(p.columns[k]),
+                                      np.asarray(copy))  # ...bitwise intact
+
+    def test_pagerank_host_leaves_lsm_columns_unchanged(self, small_graph):
+        n, src, dst = small_graph
+        iv = IntervalMap.for_capacity(n - 1, 8)
+        t = LSMTree(iv, n_levels=2, branching=4, buffer_cap=300,
+                    max_partition_edges=600,
+                    column_dtypes={"w": np.float32})
+        t.insert_edges(src, dst, columns={"w": (src + dst).astype(np.float32)})
+        t.flush_all()
+        before = [(set(p.columns), {k: v.copy() for k, v in p.columns.items()})
+                  for p in t.all_partitions()]
+        pagerank_host(t, n_iters=3)
+        for p, (keys, snap) in zip(t.all_partitions(), before):
+            assert set(p.columns) == keys
+            for k, v in snap.items():
+                assert np.array_equal(np.asarray(p.columns[k]), v)
+
 
 class TestDevicePSW:
     @pytest.mark.parametrize("mode", ["dense_gather", "psw_windows"])
