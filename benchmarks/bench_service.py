@@ -1,6 +1,7 @@
-"""ISSUE 4 + ISSUE 5: the concurrent service tier — BENCH_service.json.
+"""ISSUE 4 + ISSUE 5 + ISSUE 7: the concurrent service tier —
+BENCH_service.json.
 
-Four sections:
+Five sections:
 
   1. `single_insert`: bulk-insert throughput, plain synchronous GraphDB vs
      ServiceDB (WAL + buffer append on the caller's thread, merges /
@@ -25,6 +26,9 @@ Four sections:
      epoch aggregate throughput must beat locked by `contended_gate_x`,
      and epoch p99 during active merges must stay within
      `P99_UNCONTENDED_X` of the in-run single-threaded (uncontended) p99.
+  5. `checksum` (ISSUE 7): the full durable write path and reads with
+     end-to-end CRCs on vs off — checksumming must cost < 5% in-run
+     (`CHECKSUM_GATE`).
 
 Gates are *in-run relative* (service path vs plain path measured on the
 same machine seconds apart) because the committed BENCH_insert/BENCH_query
@@ -61,6 +65,14 @@ CONTENDED_GATE_X_SMOKE = 1.2  # CI-noise-tolerant smoke version
 # collapsing on a future machine.
 P99_VS_LOCKED = 0.8
 P99_UNCONTENDED_X = 25.0
+# ISSUE 7: end-to-end integrity must be ~free — the checksummed path must
+# keep >= 95% of the unchecksummed path's speed (< 5% overhead), measured
+# in the same run on both the durable write path and warm reads. The
+# smoke run's builds are ~100ms, where fsync-latency jitter is
+# proportionally larger, so CI tolerates more noise (same precedent as
+# CONTENDED_GATE_X_SMOKE); the <5% contract is the full-scale run's.
+CHECKSUM_GATE = 0.95
+CHECKSUM_GATE_SMOKE = 0.80
 
 
 def _best_of(fn, n=3):
@@ -138,6 +150,62 @@ def bench_single_query(src, dst, n_vertices, workdir,
     }
     snap.release()
     svc.close()
+    return out
+
+
+def bench_checksum(src, dst, n_vertices, workdir,
+                   frontier_size=2048) -> dict:
+    """ISSUE 7 satellite: integrity checking must be ~free. Times the full
+    durable write path (insert + checkpoint: per-record WAL CRCs plus
+    per-section partition CRCs) and reads (cold reopen = first-touch
+    verification; warm = verified sections cached) with checksums on vs
+    off in the same run."""
+    from repro.core import GraphDB
+
+    rng = np.random.default_rng(13)
+    frontier = np.unique(rng.integers(0, n_vertices, frontier_size))
+
+    def build(enabled):
+        d = os.path.join(workdir, f"crc_{time.monotonic_ns()}")
+        db = GraphDB.create(d, checksums=enabled, **_db_opts(n_vertices))
+        db.insert_edges(src, dst)
+        db.checkpoint()
+        db.tree.close()
+        return d
+
+    # interleave on/off builds so page-cache / fsync-latency drift hits
+    # both arms equally; take the min of each arm
+    times = {"on": [], "off": []}
+    keep = {}
+    for rep in range(5):
+        for mode, enabled in (("on", True), ("off", False)):
+            t0 = time.perf_counter()
+            d = build(enabled)
+            times[mode].append(time.perf_counter() - t0)
+            if mode in keep:
+                shutil.rmtree(keep.pop(mode), ignore_errors=True)
+            keep[mode] = d
+    out = {}
+    for mode in ("on", "off"):
+        db = GraphDB.open(keep[mode])
+        eng = db.storage_engine()
+        t0 = time.perf_counter()
+        eng.out_neighbors_batch(frontier)  # cold: first-touch verify
+        t_cold = time.perf_counter() - t0
+        t_warm = _best_of(lambda: eng.out_neighbors_batch(frontier), n=9)
+        db.tree.close()
+        shutil.rmtree(keep[mode], ignore_errors=True)
+        out[mode] = {"write_s": min(times[mode]), "cold_read_s": t_cold,
+                     "warm_read_s": t_warm}
+    out.update({
+        "n_edges": int(src.shape[0]),
+        # >= 1 means checksumming is free; the gate allows down to 0.95
+        "write_ratio": out["off"]["write_s"] / out["on"]["write_s"],
+        "cold_read_ratio": (out["off"]["cold_read_s"]
+                            / out["on"]["cold_read_s"]),
+        "warm_read_ratio": (out["off"]["warm_read_s"]
+                            / out["on"]["warm_read_s"]),
+    })
     return out
 
 
@@ -451,6 +519,8 @@ def run(scale: float = 1.0, smoke: bool = False,
         "contended_gate_x": (CONTENDED_GATE_X_SMOKE if smoke
                              else CONTENDED_GATE_X),
         "p99_uncontended_x": P99_UNCONTENDED_X,
+        "checksum_gate": (CHECKSUM_GATE_SMOKE if smoke
+                          else CHECKSUM_GATE),
         "committed_baselines": _committed_baselines(),
     })
 
@@ -503,6 +573,24 @@ def run(scale: float = 1.0, smoke: bool = False,
             print(f"    epoch/locked speedup {cont['speedup']:.2f}x; epoch "
                   f"p99 {cont['epoch']['contended']['latency_ms']['p99']:.1f}"
                   f"ms vs gate bound {cont['p99_bound_ms']:.1f}ms")
+        if want("checksum"):
+            # this section's gate divides two write times; at smoke scale
+            # a build is ~20ms and fsync jitter swamps the CRC cost, so
+            # floor the workload regardless of --scale (still ~2s of CI)
+            if n_edges >= 300_000:
+                cn_vertices, csrc, cdst = n_vertices, src, dst
+            else:
+                cn_vertices = max(n_vertices, 30_000)
+                csrc, cdst = power_law_graph(cn_vertices, 300_000, seed=1)
+            print(f"  checksum: {csrc.shape[0]} edges, durable write + "
+                  f"reads, CRC on vs off (ISSUE 7) ...")
+            payload["checksum"] = crc = bench_checksum(
+                csrc, cdst, cn_vertices, workdir)
+            print(f"    write on {crc['on']['write_s']:.2f}s / off "
+                  f"{crc['off']['write_s']:.2f}s (ratio "
+                  f"{crc['write_ratio']:.3f}); warm read ratio "
+                  f"{crc['warm_read_ratio']:.3f}; cold (first-touch "
+                  f"verify) ratio {crc['cold_read_ratio']:.3f}")
     finally:
         shutil.rmtree(workdir, ignore_errors=True)
 
@@ -522,6 +610,16 @@ def run(scale: float = 1.0, smoke: bool = False,
     if want("readers") and readers and readers["scaling"] < 1.0:
         failures.append(f"multi-reader aggregate throughput did not exceed "
                         f"1 reader ({readers['scaling']:.2f}x)")
+    crc = payload.get("checksum")
+    if want("checksum") and crc:
+        crc_gate = payload["checksum_gate"]
+        worst = min(crc["write_ratio"], crc["warm_read_ratio"])
+        if worst < crc_gate:
+            failures.append(
+                f"checksumming overhead past the gate: write "
+                f"{crc['write_ratio']:.2f}x / warm read "
+                f"{crc['warm_read_ratio']:.2f}x the unchecksummed path "
+                f"(< {crc_gate})")
     if want("contended") and cont:
         gate_x = payload["contended_gate_x"]
         if cont["speedup"] < gate_x:
@@ -553,7 +651,7 @@ def main() -> None:
                     help="tiny scale + enforce the regression gates")
     ap.add_argument("--section", default="all",
                     choices=["all", "base", "insert", "query", "readers",
-                             "contended"])
+                             "contended", "checksum"])
     args = ap.parse_args()
     run(scale=args.scale if not args.smoke else min(args.scale, 0.05),
         smoke=args.smoke, section=args.section)

@@ -1,0 +1,169 @@
+"""ISSUE 7: the crash-consistency torture sweep — BENCH_torture.json.
+
+Enumerates crash points along the whole ingest -> merge -> checkpoint ->
+GC schedule straight from the failpoint CATALOG: every write-path site,
+each at several trigger offsets (hit #1, #2, #5 — early, mid, repeated),
+runs the deterministic torture workload (`repro.torture`) in a subprocess
+armed with `GRAPHDB_FAILPOINTS="<site>=crash@N"`, then recovers in a
+FRESH subprocess and checks the prefix-equality oracle: the recovered
+store must be bitwise-equal to a durable prefix of the op stream at least
+as long as the acked prefix.
+
+Recorded per site: schedules attempted, crashes actually triggered
+(a site may not be crossed N times in a bounded run — recorded, not
+hidden), recoveries verified, failures (must be zero). `--smoke` runs a
+seeded subset of the matrix as the CI gate and exits non-zero on any
+verification failure.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+from .common import save
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+# every CATALOG site on the torture workload's write path. Read-path and
+# service-read sites (part.read.section) crash nothing durable and are
+# covered by the corruption tests instead.
+WRITE_PATH_SITES = [
+    "wal.append.write",
+    "wal.append.fsync",
+    "wal.segment.create",
+    "wal.segment.rotate",
+    "wal.compact.unlink",
+    "part.write.body",
+    "part.write.fsync",
+    "part.write.rename",
+    "store.gc.unlink",
+    "store.link",
+    "manifest.write",
+    "manifest.rename",
+    "dead.write",
+    "dead.rename",
+    "dir.fsync",
+    "service.flush.merge",
+    "service.ckpt.phaseA",
+    "service.ckpt.phaseB",
+]
+OFFSETS = (1, 2, 5)  # crash on the 1st, 2nd, 5th crossing of the site
+
+SMOKE_SITES = [
+    "wal.append.write",
+    "wal.segment.rotate",
+    "part.write.rename",
+    "manifest.rename",
+    "service.ckpt.phaseB",
+    "dir.fsync",
+]
+SMOKE_OFFSETS = (1, 3)
+
+CRASH_EXIT_CODE = 41  # keep in sync with repro.core.failpoints
+BATCHES = 10
+BATCH_SIZE = 150
+
+
+def _subprocess(cmd, dbdir, oracle, failpoints=None,
+                batches=BATCHES, batch_size=BATCH_SIZE):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("GRAPHDB_FAILPOINTS", None)
+    if failpoints:
+        env["GRAPHDB_FAILPOINTS"] = failpoints
+    return subprocess.run(
+        [sys.executable, "-m", "repro.torture", cmd, dbdir,
+         "--oracle", oracle, "--batches", str(batches),
+         "--batch-size", str(batch_size)],
+        env=env, capture_output=True, text=True, timeout=600)
+
+
+def torture_one(workdir, site, offset) -> dict:
+    """One cell of the matrix: crash at the offset-th crossing of the
+    site, recover, verify the durable prefix."""
+    tag = f"{site.replace('.', '_')}_{offset}"
+    dbdir = os.path.join(workdir, tag)
+    oracle = os.path.join(workdir, f"{tag}.oracle")
+    spec = f"{site}=crash@{offset - 1}" if offset > 1 else f"{site}=crash"
+    t0 = time.perf_counter()
+    run = _subprocess("run", dbdir, oracle, failpoints=spec)
+    crashed = run.returncode == CRASH_EXIT_CODE
+    cell = {"site": site, "offset": offset, "crashed": crashed,
+            "run_rc": run.returncode}
+    if run.returncode not in (0, CRASH_EXIT_CODE):
+        cell["ok"] = False
+        cell["error"] = (f"workload died with rc={run.returncode}: "
+                         f"{run.stderr[-500:]}")
+        return cell
+    ver = _subprocess("verify", dbdir, oracle)
+    cell["ok"] = ver.returncode == 0
+    if not cell["ok"]:
+        cell["error"] = f"verify failed: {ver.stdout}\n{ver.stderr[-800:]}"
+    else:
+        cell["verify"] = ver.stdout.strip()
+    cell["wall_s"] = time.perf_counter() - t0
+    return cell
+
+
+def run(smoke: bool = False) -> dict:
+    sites = SMOKE_SITES if smoke else WRITE_PATH_SITES
+    offsets = SMOKE_OFFSETS if smoke else OFFSETS
+    matrix = [(s, o) for s in sites for o in offsets]
+    print(f"  torture: {len(matrix)} crash schedules "
+          f"({len(sites)} sites x offsets {offsets}) ...")
+    cells = []
+    failures = []
+    crashes = 0
+    with tempfile.TemporaryDirectory(prefix="bench_torture_") as workdir:
+        for i, (site, offset) in enumerate(matrix):
+            cell = torture_one(workdir, site, offset)
+            cells.append(cell)
+            crashes += int(cell["crashed"])
+            if not cell["ok"]:
+                failures.append(f"{site}@{offset}: {cell['error']}")
+                print(f"    FAIL {site}@{offset}: {cell['error'][:200]}")
+            elif (i + 1) % 6 == 0:
+                print(f"    {i + 1}/{len(matrix)} verified "
+                      f"({crashes} actual crashes so far)")
+    not_crossed = [f"{c['site']}@{c['offset']}" for c in cells
+                   if c["ok"] and not c["crashed"]]
+    if not_crossed:
+        # the site wasn't crossed `offset` times in this bounded run —
+        # the clean completion still verified, but say so
+        print(f"    note: {len(not_crossed)} schedules completed without "
+              f"crashing (site not crossed often enough): "
+              f"{', '.join(not_crossed)}")
+    payload = {
+        "smoke": smoke,
+        "batches": BATCHES,
+        "batch_size": BATCH_SIZE,
+        "schedules": len(matrix),
+        "crashes_triggered": crashes,
+        "verified": sum(1 for c in cells if c["ok"]),
+        "not_crossed": not_crossed,
+        "failures": failures,
+        "cells": cells,
+    }
+    print(f"  {payload['verified']}/{len(matrix)} schedules verified, "
+          f"{crashes} real crashes, {len(failures)} failures")
+    save("BENCH_torture", payload)
+    if failures:
+        sys.exit(1)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seeded subset of the matrix (the CI gate)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Failpoint coverage lint (ISSUE 7): every site in the CATALOG must be
+exercised somewhere in tests/ or benchmarks/ — a failpoint nobody arms is
+dead weight that silently stops guarding its I/O boundary. Conversely,
+tests must not arm sites that are not in the CATALOG (typos never fire:
+`fp_set` rejects them at runtime, but string specs in env vars and
+parametrize lists bypass that check until the test runs).
+
+Exit 1 with a listing on any miss. Run from the repo root:
+
+    PYTHONPATH=src python scripts/check_failpoints.py
+"""
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.core.failpoints import CATALOG  # noqa: E402
+
+SEARCH_DIRS = ("tests", "benchmarks")
+# a site name can appear quoted in fp_set(...)/GRAPHDB_FAILPOINTS specs
+# ("wal.append.write=crash@5") or in a Python list of spec strings
+SITE_RE = re.compile(r"[a-z]+(?:\.[A-Za-z_0-9]+){1,3}")
+
+
+def referenced_sites():
+    found = {}
+    for d in SEARCH_DIRS:
+        root = os.path.join(REPO, d)
+        for dirpath, _, files in os.walk(root):
+            for fn in files:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path, encoding="utf-8") as f:
+                    text = f.read()
+                for m in SITE_RE.finditer(text):
+                    found.setdefault(m.group(0), set()).add(
+                        os.path.relpath(path, REPO))
+    return found
+
+
+def main() -> int:
+    found = referenced_sites()
+    uncovered = sorted(s for s in CATALOG if s not in found)
+    # dotted tokens that LOOK like failpoint specs but name no catalog
+    # site: only flag ones appearing inside a =action spec to avoid
+    # false positives on ordinary attribute access
+    spec_re = re.compile(
+        r"([a-z]+(?:\.[A-Za-z_0-9]+){1,3})=(?:crash|raise|errno:[A-Z]+)")
+    phantom = {}
+    for d in SEARCH_DIRS:
+        root = os.path.join(REPO, d)
+        for dirpath, _, files in os.walk(root):
+            for fn in files:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path, encoding="utf-8") as f:
+                    text = f.read()
+                for m in spec_re.finditer(text):
+                    if m.group(1) not in CATALOG:
+                        phantom.setdefault(m.group(1), set()).add(
+                            os.path.relpath(path, REPO))
+    rc = 0
+    if uncovered:
+        rc = 1
+        print(f"UNCOVERED failpoints ({len(uncovered)}/{len(CATALOG)}): "
+              "no test or benchmark ever arms them")
+        for s in uncovered:
+            print(f"  {s}")
+    if phantom:
+        rc = 1
+        print("PHANTOM failpoint specs (site not in the CATALOG — typo?):")
+        for s, paths in sorted(phantom.items()):
+            print(f"  {s}  ({', '.join(sorted(paths))})")
+    if rc == 0:
+        print(f"ok: all {len(CATALOG)} catalog sites are exercised by "
+              f"{'/'.join(SEARCH_DIRS)}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,9 @@ import numpy as np
 
 import jax
 
+from ..core.failpoints import failpoint
+from ..core.integrity import fsync_dir
+
 __all__ = ["CheckpointManager", "save_lsm", "restore_lsm"]
 
 
@@ -63,9 +66,14 @@ class CheckpointManager:
 
     def _write_manifest(self, m: Dict[str, Any]) -> None:
         tmp = self._manifest_path() + ".tmp"
+        failpoint("manifest.write")
         with open(tmp, "w") as f:
             json.dump(m, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        failpoint("manifest.rename")
         os.replace(tmp, self._manifest_path())      # atomic
+        fsync_dir(self.dir)
 
     # -- save/restore ----------------------------------------------------------
     def save(self, step: int, tree, blocking: bool = True) -> str:
@@ -79,7 +87,10 @@ class CheckpointManager:
             tmp = fpath + ".tmp"
             with open(tmp, "wb") as f:       # file handle: no .npz suffixing
                 np.savez(f, **items)
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, fpath)           # atomic publish
+            fsync_dir(self.dir)
             m = self._read_manifest()
             m["checkpoints"] = [c for c in m["checkpoints"] if c["step"] != step]
             m["checkpoints"].append({"step": step, "file": fname,
@@ -187,6 +198,7 @@ def save_lsm(tree, directory: str) -> Dict[str, Any]:
                 fname = os.path.basename(part.path)
                 fpath = os.path.join(directory, fname)
                 if not os.path.exists(fpath):
+                    failpoint("store.link")
                     try:
                         os.link(part.path, fpath)
                     except OSError:
@@ -240,7 +252,10 @@ def save_lsm(tree, directory: str) -> Dict[str, Any]:
     tmp = os.path.join(directory, "GRAPH_MANIFEST.json.tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, os.path.join(directory, "GRAPH_MANIFEST.json"))
+    fsync_dir(directory)
     return manifest
 
 

@@ -38,6 +38,7 @@ import json
 import mmap
 import os
 import shutil
+import struct
 import threading
 import weakref
 from typing import Any, Dict, List, Optional, Tuple
@@ -50,8 +51,18 @@ from .codec import (
     SparseIndex,
     encode_monotonic_blocked,
 )
-from .lsm import LSMTree
-from .pal import EdgePartition, IntervalMap
+from .failpoints import failpoint
+from .integrity import (
+    CKSUM_ALGO,
+    CRC_ALGO,
+    CorruptionError,
+    RecoveryError,
+    checksum32,
+    crc32,
+    fsync_dir,
+)
+from .lsm import EdgeBuffer, LSMTree
+from .pal import EdgePartition, IntervalMap, build_partition
 from .walog import SegmentedWAL
 
 __all__ = [
@@ -135,7 +146,7 @@ def _pad(f, align: int = _ALIGN) -> int:
 
 
 def write_partition_file(path: str, part: EdgePartition,
-                         fsync: bool = True) -> None:
+                         fsync: bool = True, checksums: bool = True) -> None:
     """Serialize a partition to one flat file: magic, JSON header, aligned
     raw sections. Written to a per-thread-unique `<path>.tmp*` then
     atomically renamed — a crash mid-write can never leave a half-file at
@@ -143,9 +154,16 @@ def write_partition_file(path: str, part: EdgePartition,
     same digest each write their own temp (last rename wins, same bytes).
     With `fsync=False` durability is deferred: correct as long as the
     caller syncs before publishing a manifest that references the file (a
-    torn unreferenced file is never read by recovery)."""
+    torn unreferenced file is never read by recovery).
+
+    With `checksums=True` (the default since ISSUE 7) the file is format
+    version 2: the header carries a CRC-32 per 64B-aligned section (plus
+    its own trailing CRC), and readers verify each section lazily on first
+    touch — bit rot under the mmap becomes a typed `CorruptionError`
+    instead of garbage edges. Version-1 files stay readable (unverified)."""
     sections: Dict[str, Tuple[int, str, int]] = {}
     gamma: Dict[str, Dict[str, int]] = {}
+    crcs: Dict[str, int] = {}
 
     arrays: List[Tuple[str, np.ndarray]] = [
         ("src", np.ascontiguousarray(part.src, np.int64)),
@@ -171,35 +189,52 @@ def write_partition_file(path: str, part: EdgePartition,
         f.write(b"\0" * 8)  # header-length placeholder
         # reserve generous header space by writing it twice: first pass with
         # zero offsets to learn its size, then seek back with real offsets
-        header_probe = _header_json(part, sections, gamma, probe=True,
-                                    arrays=arrays, blobs=gamma_blobs)
+        header_probe = _header_json(part, sections, gamma, crcs, probe=True,
+                                    arrays=arrays, blobs=gamma_blobs,
+                                    checksums=checksums)
         f.write(header_probe)
+        f.write(b"\0" * 4)  # header-CRC placeholder (v2)
         _pad(f)
+        failpoint("part.write.body")
+
+        def _emit(name: str, data: bytes, dtype_str: str, n: int) -> None:
+            off = _pad(f)
+            sections[name] = (off, dtype_str, n)
+            if checksums:
+                crcs[name] = checksum32(data)
+            f.write(data)
+
         for name, arr in arrays:
-            off = _pad(f)
-            sections[name] = (off, arr.dtype.str, int(arr.shape[0]))
-            f.write(arr.tobytes())
+            _emit(name, arr.tobytes(), arr.dtype.str, int(arr.shape[0]))
         for name, packed, offsets, nbits, first, n in gamma_blobs:
-            off = _pad(f)
-            sections[f"g_{name}"] = (off, "|u1", int(packed.shape[0]))
-            f.write(packed.tobytes())
-            off = _pad(f)
-            sections[f"gd_{name}"] = (off, "<i8", int(offsets.shape[0]))
-            f.write(np.ascontiguousarray(offsets, np.int64).tobytes())
+            _emit(f"g_{name}", packed.tobytes(), "|u1", int(packed.shape[0]))
+            _emit(f"gd_{name}",
+                  np.ascontiguousarray(offsets, np.int64).tobytes(),
+                  "<i8", int(offsets.shape[0]))
             gamma[name] = {"nbits": nbits, "first": first, "n": n}
-        header = _header_json(part, sections, gamma, probe=False,
-                              arrays=arrays, blobs=gamma_blobs)
+        header = _header_json(part, sections, gamma, crcs, probe=False,
+                              arrays=arrays, blobs=gamma_blobs,
+                              checksums=checksums)
         assert len(header) == len(header_probe), "header size drifted"
         f.seek(len(_MAGIC))
         f.write(np.uint64(len(header)).tobytes())
         f.write(header)
+        f.write(struct.pack("<I", crc32(header)))
         f.flush()
         if fsync:
+            failpoint("part.write.fsync")
             os.fsync(f.fileno())
+    failpoint("part.write.rename")
     os.replace(tmp, path)
+    # the rename is atomic but its directory entry is only durable once the
+    # parent directory is synced (ISSUE 7 satellite); deferred-fsync writes
+    # get their dir sync from PartitionStore.sync before publication
+    if fsync:
+        fsync_dir(path)
 
 
-def _header_json(part, sections, gamma, probe: bool, arrays, blobs) -> bytes:
+def _header_json(part, sections, gamma, crcs, probe: bool, arrays, blobs,
+                 checksums: bool = True) -> bytes:
     if probe:
         # same shape/keys as the real header, with fixed-width placeholder
         # numbers so the byte length matches the final write
@@ -210,11 +245,12 @@ def _header_json(part, sections, gamma, probe: bool, arrays, blobs) -> bytes:
             sections[f"gd_{name}"] = (2 ** 52, "<i8", int(offsets.shape[0]))
         gamma = {name: {"nbits": nbits, "first": first, "n": n}
                  for name, packed, offsets, nbits, first, n in blobs}
+        crcs = {k: 0 for k in sections} if checksums else {}
     else:
         sections = {k: (int(v[0]) + 2 ** 52, v[1], v[2])
                     for k, v in sections.items()}  # keep fixed width
     doc = {
-        "version": 1,
+        "version": 2 if checksums else 1,
         "interval": [int(part.interval[0]), int(part.interval[1])],
         "n_edges": int(part.n_edges),
         "columns": sorted(part.columns),
@@ -222,25 +258,47 @@ def _header_json(part, sections, gamma, probe: bool, arrays, blobs) -> bytes:
         "sections": {k: list(v) for k, v in sections.items()},
         "gamma": gamma,
     }
+    if checksums:
+        # same fixed-width bias trick for the checksum values (u32 < 2**52)
+        doc["crc_algo"] = CKSUM_ALGO
+        doc["crc"] = {k: int(v) + 2 ** 52 for k, v in crcs.items()}
     return json.dumps(doc, sort_keys=True).encode()
 
 
 def _read_header(path: str) -> Dict[str, Any]:
-    with open(path, "rb") as f:
-        magic = f.read(8)
-        if magic != _MAGIC:
-            raise ValueError(f"{path}: not a partition file")
-        hlen = int(np.frombuffer(f.read(8), np.uint64)[0])
-        doc = json.loads(f.read(hlen))
+    try:
+        with open(path, "rb") as f:
+            magic = f.read(8)
+            if magic != _MAGIC:
+                raise CorruptionError(path, "not a partition file (bad magic)")
+            hlen = int(np.frombuffer(f.read(8), np.uint64)[0])
+            raw = f.read(hlen)
+            doc = json.loads(raw)
+            if int(doc.get("version", 1)) >= 2:
+                trailer = f.read(4)
+                if (len(trailer) < 4
+                        or struct.unpack("<I", trailer)[0] != crc32(raw)):
+                    raise CorruptionError(path, "partition header failed CRC")
+    except CorruptionError:
+        raise
+    except (OSError, ValueError, KeyError, json.JSONDecodeError,
+            struct.error) as e:
+        if isinstance(e, FileNotFoundError):
+            raise
+        raise CorruptionError(path, f"unreadable partition header: {e}")
     # undo the fixed-width offset bias
     doc["sections"] = {k: (int(v[0]) - 2 ** 52, v[1], int(v[2]))
                        for k, v in doc["sections"].items()}
+    if doc.get("crc"):
+        doc["crc"] = {k: int(v) - 2 ** 52 for k, v in doc["crc"].items()}
     return doc
 
 
 def open_partition_file(path: str, io: Optional[IOStats] = None,
-                        index_mode: str = "gamma") -> "DiskPartition":
-    return DiskPartition(path, _read_header(path), io=io, index_mode=index_mode)
+                        index_mode: str = "gamma",
+                        verify: bool = True) -> "DiskPartition":
+    return DiskPartition(path, _read_header(path), io=io,
+                         index_mode=index_mode, verify=verify)
 
 
 # ---------------------------------------------------------------------------
@@ -259,12 +317,23 @@ class DiskPartition(EdgePartition):
     cache — only `resident_nbytes()` bytes stay pinned."""
 
     def __init__(self, path: str, header: Dict[str, Any],
-                 io: Optional[IOStats] = None, index_mode: str = "gamma"):
+                 io: Optional[IOStats] = None, index_mode: str = "gamma",
+                 verify: bool = True):
         assert index_mode in ("gamma", "raw"), index_mode
         self.path = path
         self.header = header
         self.io = io
         self.index_mode = index_mode
+        # per-section CRC verification, lazy on first touch (format v2;
+        # v1 files carry no CRCs and skip it). `_verified` persists across
+        # evict() — re-verification of long-lived partitions is the
+        # background scrub's job (GraphDB.scrub), not the query path's.
+        self._crc = header.get("crc") if verify else None
+        # the header names its algorithm: wsum32 files (current writer)
+        # and crc32-zlib files (earlier v2 writers) both verify
+        self._crc_fn = (crc32 if header.get("crc_algo") == CRC_ALGO
+                        else checksum32)
+        self._verified: set = set()
         # stores WITHOUT a residency budget (the service tier's default)
         # set this: queries then use the fully-decoded pointer arrays —
         # decoded ONCE per immutable partition and cached — instead of
@@ -296,12 +365,28 @@ class DiskPartition(EdgePartition):
         off, dt, n = self.header["sections"][name]
         return off, np.dtype(dt), n
 
+    def _verify(self, name: str, data) -> None:
+        """Check one section against its header CRC on FIRST touch (the
+        cost is one linear pass over bytes a query is about to fault in
+        anyway; later touches are free). Typed failure, never garbage."""
+        if self._crc is None or name in self._verified:
+            return
+        want = self._crc.get(name)
+        if want is not None and self._crc_fn(data) != want:
+            raise CorruptionError(
+                self.path, f"section {name!r} failed its checksum "
+                           f"(stored {want:#010x})")
+        self._verified.add(name)
+
     def _read_section(self, name: str) -> np.ndarray:
         """Eager read (small pinned things: gamma blobs, directories)."""
+        failpoint("part.read.section")
         off, dt, n = self._section_spec(name)
         with open(self.path, "rb") as f:
             f.seek(off)
-            return np.frombuffer(f.read(n * dt.itemsize), dt)
+            raw = f.read(n * dt.itemsize)
+        self._verify(name, raw)
+        return np.frombuffer(raw, dt)
 
     def _mmap(self, name: str) -> np.ndarray:
         arr = self._mm.get(name)
@@ -309,6 +394,8 @@ class DiskPartition(EdgePartition):
             off, dt, n = self._section_spec(name)
             arr = np.memmap(self.path, dtype=dt, mode="r", offset=off,
                             shape=(n,))
+            if n:
+                self._verify(name, memoryview(arr).cast("B"))
             self._mm[name] = arr
         return arr
 
@@ -563,6 +650,7 @@ class _ColumnDict(dict):
 def _link_or_copy(src: str, dst: str) -> str:
     """Hard-link (pin the inode, zero data copy); copy across filesystems."""
     if not os.path.exists(dst):
+        failpoint("store.link")
         try:
             os.link(src, dst)
         except OSError:
@@ -579,10 +667,12 @@ class PartitionStore:
     so dedup (same content → same file), checkpoint hard-links, and GC are
     all trivially safe."""
 
-    def __init__(self, directory: str, io: Optional[IOStats] = None):
+    def __init__(self, directory: str, io: Optional[IOStats] = None,
+                 checksums: bool = True):
         self.dir = os.path.join(directory, "parts")
         os.makedirs(self.dir, exist_ok=True)
         self.io = io
+        self.checksums = bool(checksums)
         self._unsynced: set = set()
 
     def path_of(self, digest: str) -> str:
@@ -595,26 +685,34 @@ class PartitionStore:
         digest = partition_digest(part)
         path = self.path_of(digest)
         if not os.path.exists(path):
-            write_partition_file(path, part, fsync=fsync)
+            write_partition_file(path, part, fsync=fsync,
+                                 checksums=self.checksums)
             if not fsync:
                 self._unsynced.add(digest)
         return digest
 
     def sync(self, digests) -> None:
+        synced = 0
         for digest in list(digests):
             if digest in self._unsynced:
                 path = self.path_of(digest)
                 if os.path.exists(path):
                     fd = os.open(path, os.O_RDONLY)
                     try:
+                        failpoint("part.write.fsync")
                         os.fsync(fd)
                     finally:
                         os.close(fd)
+                    synced += 1
                 self._unsynced.discard(digest)
+        if synced:
+            # one dir sync settles every deferred rename's directory entry
+            fsync_dir(self.dir)
 
     def open(self, digest: str, index_mode: str = "gamma") -> DiskPartition:
         return open_partition_file(self.path_of(digest), io=self.io,
-                                   index_mode=index_mode)
+                                   index_mode=index_mode,
+                                   verify=self.checksums)
 
     def gc(self, keep_digests) -> int:
         """Delete store files whose digest is not in `keep_digests`.
@@ -624,6 +722,7 @@ class PartitionStore:
         removed = 0
         for fname in os.listdir(self.dir):
             if fname.endswith(".pal") and fname not in keep:
+                failpoint("store.gc.unlink")
                 os.remove(os.path.join(self.dir, fname))
                 removed += 1
             elif ".pal.tmp" in fname:
@@ -697,11 +796,16 @@ class GraphDB:
                  io: Optional[IOStats] = None):
         self.dir = directory
         self.io = io or IOStats()
-        self.store = PartitionStore(directory, io=self.io)
+        self.store = PartitionStore(directory, io=self.io,
+                                    checksums=config.get("checksums", True))
         self.tree = tree
         self.config = config
         self.persist_min_edges = int(config.get("persist_min_edges", 4096))
         self.resident_budget_bytes = config.get("resident_budget_bytes")
+        # integrity accounting (ISSUE 7): every detected corruption /
+        # quarantine / rebuild is appended here — `integrity_report()`
+        # surfaces what was lost vs recovered instead of serving garbage
+        self.integrity_log: List[Dict[str, Any]] = []
         # per-partition touch recency (monotone clock) for LRU-first
         # eviction; partitions never touched sort oldest
         self._touch_clock = itertools.count(1)
@@ -728,6 +832,8 @@ class GraphDB:
         persist_min_edges: int = 4096,
         resident_budget_bytes: Optional[int] = None,
         wal_segment_bytes: int = 4 << 20,
+        checksums: bool = True,
+        wal_keep_history: bool = False,
     ) -> "GraphDB":
         os.makedirs(directory, exist_ok=True)
         if os.path.exists(os.path.join(directory, cls.MANIFEST)):
@@ -737,7 +843,7 @@ class GraphDB:
         column_dtypes = {k: np.dtype(v) for k, v in (column_dtypes or {}).items()}
         wal = (SegmentedWAL(os.path.join(directory, "wal"),
                             column_dtypes=column_dtypes, sync=wal_sync,
-                            segment_bytes=wal_segment_bytes)
+                            segment_bytes=wal_segment_bytes, crc=checksums)
                if durable else None)
         tree = LSMTree(
             iv, n_levels=n_levels, branching=branching, buffer_cap=buffer_cap,
@@ -757,6 +863,8 @@ class GraphDB:
             "persist_min_edges": persist_min_edges,
             "resident_budget_bytes": resident_budget_bytes,
             "wal_segment_bytes": wal_segment_bytes,
+            "checksums": bool(checksums),
+            "wal_keep_history": bool(wal_keep_history),
         }
         db = cls(directory, tree, config)
         db._write_manifest(wal_offset=db._wal_offset())
@@ -776,7 +884,8 @@ class GraphDB:
         wal = (SegmentedWAL(
                    os.path.join(directory, "wal"),
                    column_dtypes=column_dtypes, sync=config["wal_sync"],
-                   segment_bytes=int(config.get("wal_segment_bytes", 4 << 20)))
+                   segment_bytes=int(config.get("wal_segment_bytes", 4 << 20)),
+                   crc=config.get("checksums", True))
                if config["durable"] else None)
         tree = LSMTree(
             iv, n_levels=config["n_levels"], branching=config["branching"],
@@ -785,11 +894,26 @@ class GraphDB:
             column_dtypes=column_dtypes, durable=config["durable"],
             wal=wal, wal_sync=config["wal_sync"])
         db = cls(directory, tree, config)
+        lost = []
         for li, level in enumerate(manifest["levels"]):
             for pi, entry in enumerate(level):
                 if entry is None:
                     continue
-                part = db._open_part(entry["digest"])
+                try:
+                    part = db._open_part(entry["digest"])
+                except (CorruptionError, FileNotFoundError) as exc:
+                    # a manifest-referenced partition is unreadable: move
+                    # it out of the store (if it exists at all) and leave
+                    # the slot's default empty partition — the WAL decides
+                    # below whether the data is recoverable
+                    db._quarantine_files(entry["digest"])
+                    db.integrity_log.append({
+                        "event": "quarantine", "digest": entry["digest"],
+                        "interval": list(entry["interval"]),
+                        "level": li, "slot": pi, "detail": str(exc),
+                    })
+                    lost.append(entry)
+                    continue
                 dead_path = os.path.join(db.store.dir,
                                          f"part_{entry['digest']}.dead.npy")
                 if entry.get("dead") and os.path.exists(dead_path):
@@ -809,8 +933,27 @@ class GraphDB:
                                   np.asarray(iv.to_original(d)), etype=ty)
             os.replace(legacy, legacy + ".migrated")
             db.checkpoint()
+        elif lost and db._full_history_available():
+            # quarantined partitions, but the WAL still reaches back to
+            # offset 0: rebuild the WHOLE store from the log (surviving
+            # partitions hold state the pre-compaction log also carries,
+            # so they are dropped and re-derived — correctness over speed)
+            db._rebuild_from_wal()
+            db.integrity_log.append({
+                "event": "rebuild", "recovered": [e["digest"] for e in lost],
+            })
         else:
             db._replay_wal_tail(int(manifest.get("wal_offset", 0)))
+            for e in lost:
+                # compaction already dropped the log below the manifest
+                # offset: the quarantined interval's pre-offset state is
+                # gone. Report the unrecoverable range — never serve
+                # silently-wrong (empty) data as if it were complete.
+                db.integrity_log.append({
+                    "event": "unrecoverable", "digest": e["digest"],
+                    "interval": list(e["interval"]),
+                    "n_edges_lost": int(e["n_edges"]),
+                })
         # recovery installed partitions by direct slot assignment; publish
         # so epoch readers see the recovered store even with an empty tail
         tree.publish()
@@ -837,6 +980,136 @@ class GraphDB:
             replay_ops(self.tree, wal.replay(offset=offset, end=end))
         finally:
             self.tree.wal = wal
+
+    # -- integrity: quarantine / rebuild / scrub (ISSUE 7) ---------------------
+    def _quarantine_files(self, digest: str) -> List[str]:
+        """Move a corrupt partition file (and its tombstone sidecar) out of
+        the store into `dbdir/quarantine/` so nothing can re-open it. The
+        bytes are preserved for forensics, not deleted."""
+        qdir = os.path.join(self.dir, "quarantine")
+        moved = []
+        for fname in (f"part_{digest}.pal", f"part_{digest}.dead.npy"):
+            src = os.path.join(self.store.dir, fname)
+            if os.path.exists(src):
+                os.makedirs(qdir, exist_ok=True)
+                os.replace(src, os.path.join(qdir, fname))
+                moved.append(fname)
+        if moved:
+            fsync_dir(self.store.dir)
+        self.store._unsynced.discard(digest)
+        return moved
+
+    def _empty_slot(self, interval) -> EdgePartition:
+        return build_partition(
+            (int(interval[0]), int(interval[1])),
+            np.empty(0, np.int64), np.empty(0, np.int64),
+            columns={k: np.empty(0, dt)
+                     for k, dt in self.tree.column_dtypes.items()})
+
+    def quarantine(self, digest: str, detail: str = "corruption") -> bool:
+        """Drop a live corrupt partition: quarantine its file, replace its
+        tree slot with an empty partition, and publish — reads keep flowing
+        from every surviving level (plus buffered/WAL-covered state) while
+        the quarantined interval's persisted edges are reported, not served
+        as garbage. The manifest is NOT rewritten here: the next checkpoint
+        re-derives it, and a crash-before-then reopen re-detects the missing
+        file and re-quarantines (or rebuilds from a full-history WAL)."""
+        hit = False
+        for li, level in enumerate(self.tree.levels):
+            for pi, part in enumerate(level):
+                if (isinstance(part, DiskPartition)
+                        and os.path.basename(part.path)[5:-4] == digest):
+                    entry = {
+                        "event": "quarantine", "digest": digest,
+                        "interval": [int(part.interval[0]),
+                                     int(part.interval[1])],
+                        "level": li, "slot": pi, "detail": detail,
+                        "n_edges_lost": int(part.n_edges),
+                    }
+                    part.evict()
+                    self.tree.levels[li][pi] = self._empty_slot(part.interval)
+                    self.integrity_log.append(entry)
+                    hit = True
+        self._quarantine_files(digest)
+        if hit:
+            self.tree.publish()
+        return hit
+
+    def _full_history_available(self) -> bool:
+        """True when the WAL still starts at offset 0 (never compacted past
+        the first record) — the whole store is re-derivable from the log."""
+        if self.tree.wal is None:
+            return False
+        segs = self.tree.wal.segments()
+        return bool(segs) and int(segs[0][0]) == 0
+
+    def _rebuild_from_wal(self) -> int:
+        """Full-store rebuild: reset every level slot and buffer to empty,
+        then replay the ENTIRE log from offset 0 (logging suspended).
+        Only sound when `_full_history_available()`."""
+        tree = self.tree
+        for li, level in enumerate(tree.levels):
+            for pi, part in enumerate(level):
+                if isinstance(part, DiskPartition):
+                    part.evict()
+                tree.levels[li][pi] = self._empty_slot(part.interval)
+        tree.buffers = [EdgeBuffer(tree.column_dtypes)
+                        for _ in tree.levels[0]]
+        tree._buffered = 0
+        tree._pending = [[] for _ in tree.buffers]
+        tree._inflight_edges = 0
+        wal, tree.wal = tree.wal, None
+        try:
+            n = replay_ops(tree, wal.replay(offset=0))
+        finally:
+            tree.wal = wal
+        tree.publish()
+        return n
+
+    def scrub(self, limit: Optional[int] = None) -> Dict[str, Any]:
+        """Background integrity scrub: re-verify every section CRC of up to
+        `limit` live partition files AND re-hash their content digests
+        against the content address. Corrupt partitions are quarantined
+        (reads keep flowing from survivors). Returns a report dict."""
+        checked, quarantined = 0, []
+        for part in list(self._disk_partitions()):
+            if limit is not None and checked >= limit:
+                break
+            digest = os.path.basename(part.path)[5:-4]
+            checked += 1
+            try:
+                # a fresh verifying open: touches every section (CRC check
+                # on first touch) without disturbing the live partition's
+                # caches, then re-derives the content address
+                probe = open_partition_file(part.path, verify=True)
+                try:
+                    found = partition_digest(probe)
+                finally:
+                    probe.evict()
+                if found != digest:
+                    raise CorruptionError(
+                        part.path,
+                        f"content digest {found} != address {digest}")
+            except CorruptionError as exc:
+                quarantined.append(digest)
+                self.quarantine(digest, detail=str(exc))
+            except FileNotFoundError:
+                quarantined.append(digest)
+                self.quarantine(digest, detail="file missing")
+        return {"checked": checked, "quarantined": quarantined}
+
+    def integrity_report(self) -> Dict[str, Any]:
+        """What corruption was seen, what was recovered, what was lost."""
+        return {
+            "events": list(self.integrity_log),
+            "quarantined": [e["digest"] for e in self.integrity_log
+                            if e["event"] == "quarantine"],
+            "unrecoverable": [
+                {"interval": e["interval"],
+                 "n_edges_lost": e["n_edges_lost"]}
+                for e in self.integrity_log
+                if e["event"] == "unrecoverable"],
+        }
 
     # -- the LSM partition sink -----------------------------------------------
     def _open_part(self, digest: str) -> DiskPartition:
@@ -958,7 +1231,12 @@ class GraphDB:
         # only state the manifest already persists. Snapshot sessions that
         # still need those bytes hold hard links — deleting here only drops
         # the store's name for the inode, never the session's.
-        if self.tree.wal is not None:
+        # `wal_keep_history` retains the full log instead: with checksums
+        # on, the whole store is then re-derivable from offset 0, so a
+        # corrupt partition can be REBUILT rather than reported lost
+        # (ISSUE 7 — recoverability traded against log space).
+        if (self.tree.wal is not None
+                and not self.config.get("wal_keep_history")):
             self.tree.wal.compact(int(manifest["wal_offset"]))
         return manifest
 
@@ -1004,7 +1282,11 @@ class GraphDB:
         tmp = os.path.join(dest_dir, self.SNAPSHOT + ".tmp")
         with open(tmp, "w") as f:
             json.dump(doc, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        failpoint("snapshot.json.rename")
         os.replace(tmp, os.path.join(dest_dir, self.SNAPSHOT))
+        fsync_dir(dest_dir)
         return doc
 
     def _write_dead_sidecar(self, digest: str, dead: np.ndarray) -> None:
@@ -1013,12 +1295,15 @@ class GraphDB:
         at checkpoint, so the sidecar must actually be on disk before the
         manifest declares the WAL offset covered."""
         tmp = os.path.join(self.store.dir, f"part_{digest}.dead.npy.tmp")
+        failpoint("dead.write")
         with open(tmp, "wb") as df:
             np.save(df, np.asarray(dead))
             df.flush()
             os.fsync(df.fileno())
+        failpoint("dead.rename")
         os.replace(tmp, os.path.join(self.store.dir,
                                      f"part_{digest}.dead.npy"))
+        fsync_dir(self.store.dir)
 
     def _gc_dead_files(self, manifest: Dict[str, Any]) -> None:
         live = {f"part_{e['digest']}.dead.npy"
@@ -1051,11 +1336,14 @@ class GraphDB:
         manifest = {"config": self.config, "levels": levels,
                     "wal_offset": int(wal_offset)}
         tmp = os.path.join(self.dir, self.MANIFEST + ".tmp")
+        failpoint("manifest.write")
         with open(tmp, "w") as f:
             json.dump(manifest, f, indent=1)
             f.flush()
             os.fsync(f.fileno())
+        failpoint("manifest.rename")
         os.replace(tmp, os.path.join(self.dir, self.MANIFEST))
+        fsync_dir(self.dir)
         return manifest
 
     def close(self) -> None:

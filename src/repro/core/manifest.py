@@ -230,8 +230,28 @@ class EpochGuard:
         out: set = set()
         with self._slots_lock:
             slots = list(self._slots)
+        reclaimed = False
         for slot in slots:
+            if slot.pins:
+                t = slot.thread()
+                if t is None or not t.is_alive():
+                    # the owning thread exited without unpinning (ISSUE 7
+                    # satellite): it can never dereference the pin again,
+                    # so counting it would block manifest retirement and
+                    # store GC forever. Reclaim the abandoned slot — no
+                    # race: only the (dead) owner ever appends to it.
+                    slot.pins.clear()
+                    reclaimed = True
+                    continue
             out.update(slot.pins)
+        if reclaimed:
+            with self._slots_lock:
+                live = []
+                for s in self._slots:
+                    t = s.thread()
+                    if s.pins or (t is not None and t.is_alive()):
+                        live.append(s)
+                self._slots = live
         return out
 
     def min_pinned(self) -> Optional[int]:

@@ -60,6 +60,7 @@ the same reason. Readers take neither.
 from __future__ import annotations
 
 import dataclasses
+import errno
 import itertools
 import json
 import os
@@ -73,6 +74,8 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from .disk import DiskPartition, GraphDB, open_partition_file, replay_ops
+from .failpoints import failpoint
+from .integrity import ReadOnlyError
 from .lsm import LSMTree
 from .pal import IntervalMap
 from .walog import SegmentedWAL
@@ -109,7 +112,9 @@ def _cached_tail_ops(wal: SegmentedWAL, offset: int, end: int) -> list:
             _TAIL_CACHE_STATS["hits"] += 1
             return ops
         _TAIL_CACHE_STATS["misses"] += 1
-    ops = list(wal.replay(offset=offset, end=end))
+    # strict_head: a session dir is a CLOSED set of hard links — a missing
+    # first segment is loss (someone deleted a link), never compaction
+    ops = list(wal.replay(offset=offset, end=end, strict_head=True))
     with _TAIL_CACHE_LOCK:
         _TAIL_CACHE[key] = ops
         while len(_TAIL_CACHE) > _TAIL_CACHE_MAX:
@@ -230,6 +235,17 @@ class ServiceStats:
     backpressure_waits: int = 0  # insert calls that blocked on the bound
     feedback_checkpoints: int = 0  # checkpoints scheduled by reader feedback
     max_concurrent_flushes: int = 0  # peak in-flight flush jobs (pipeline)
+    job_retries: int = 0      # supervised job failures that were retried
+    poisoned_jobs: int = 0    # jobs quarantined after repeated failure
+    read_only_entries: int = 0   # times the service shed to read-only
+    read_only_exits: int = 0     # times auto-recovery cleared it
+    scrubs: int = 0           # background integrity scrub passes
+
+
+# __init__ kwargs that ServiceDB.create must keep for itself rather than
+# forward to GraphDB.create
+_SUPERVISION_KW = ("max_job_failures", "backoff_base_s", "backoff_max_s",
+                   "recovery_probe_s", "scrub_interval_s", "scrub_limit")
 
 
 class ServiceDB:
@@ -257,7 +273,13 @@ class ServiceDB:
                  pipeline: bool = True,
                  maintenance_workers: Optional[int] = None,
                  wal_tail_budget_bytes: int = 64 << 20,
-                 snapshot_open_budget_s: float = 1.0):
+                 snapshot_open_budget_s: float = 1.0,
+                 max_job_failures: int = 3,
+                 backoff_base_s: float = 0.05,
+                 backoff_max_s: float = 5.0,
+                 recovery_probe_s: float = 0.5,
+                 scrub_interval_s: Optional[float] = None,
+                 scrub_limit: Optional[int] = None):
         if db.tree.wal is None:
             raise ValueError("ServiceDB needs a durable GraphDB")
         self.db = db
@@ -281,6 +303,25 @@ class ServiceDB:
         self._ops_since_ckpt = 0
         self._snap_ids = itertools.count()
         self.maintenance_error: Optional[BaseException] = None
+        # -- supervision (ISSUE 7): maintenance jobs are retried with
+        # exponential backoff, quarantined ("poisoned") after K failures,
+        # and persist-path failure sheds the service to READ-ONLY mode —
+        # writes raise ReadOnlyError, epoch reads and snapshots stay live,
+        # and a periodic probe auto-recovers once the condition clears
+        self.max_job_failures = int(max_job_failures)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_max_s = float(backoff_max_s)
+        self.recovery_probe_s = float(recovery_probe_s)
+        self.scrub_interval_s = scrub_interval_s
+        self.scrub_limit = scrub_limit
+        self._job_failures: Dict[str, int] = {}
+        self._job_backoff: Dict[str, float] = {}   # key -> monotonic deadline
+        self._poisoned: set = set()
+        self.read_only = False
+        self.read_only_reason: Optional[str] = None
+        self._next_probe = 0.0
+        self._last_scrub = time.monotonic()
+        self._scrubbing = False
         # merge slots: one lock per top-level destination interval. A flush
         # job owns its subtree for the whole merge; deletes/column updates
         # take the one slot their destination maps to. Lock ORDER: interval
@@ -326,13 +367,16 @@ class ServiceDB:
                snapshot_open_budget_s: float = 1.0,
                **graphdb_kw) -> "ServiceDB":
         graphdb_kw.setdefault("durable", True)
+        service_kw = {k: graphdb_kw.pop(k) for k in _SUPERVISION_KW
+                      if k in graphdb_kw}
         db = GraphDB.create(directory, max_id=max_id, **graphdb_kw)
         return cls(db, checkpoint_interval_ops=checkpoint_interval_ops,
                    backpressure_edges=backpressure_edges,
                    maintenance=maintenance, pipeline=pipeline,
                    maintenance_workers=maintenance_workers,
                    wal_tail_budget_bytes=wal_tail_budget_bytes,
-                   snapshot_open_budget_s=snapshot_open_budget_s)
+                   snapshot_open_budget_s=snapshot_open_budget_s,
+                   **service_kw)
 
     @classmethod
     def open(cls, directory: str, **service_kw) -> "ServiceDB":
@@ -353,37 +397,54 @@ class ServiceDB:
             self.db.close()  # final checkpoint + WAL close
 
     # -- writer surface --------------------------------------------------------
+    def _check_writable(self) -> None:
+        """Caller holds the lock. Raises BEFORE the mutation is applied."""
+        if self.read_only:
+            raise ReadOnlyError(self.read_only_reason or "degraded")
+        if self.maintenance_error is not None:
+            raise RuntimeError("maintenance thread died") \
+                from self.maintenance_error
+
     def _after_mutation(self, n_ops: int) -> None:
         """Caller holds the lock. Account ops, wake maintenance, apply
         backpressure: block while the dirty set (buffered + in-flight
         drained edges) exceeds the bound."""
-        if self.maintenance_error is not None:
-            # a dead maintenance thread would leave backpressure waiting
-            # forever — surface its failure to the writer instead
-            raise RuntimeError("maintenance thread died") \
-                from self.maintenance_error
         self._ops_since_ckpt += n_ops
         if self._pending_work():
             self._work.notify()
         waited = False
         while (self.tree.total_buffered() + self.tree.inflight_edges()
                > self.backpressure_edges
-               and not self._closing and self._thread is not None
+               and not self._closing and not self.read_only
+               and self.maintenance_error is None
+               and self._thread is not None
                and self._thread.is_alive()):
             waited = True
             self._work.notify()
             self._drained.wait(timeout=1.0)
         if waited:
             self.stats.backpressure_waits += 1
+        if self.read_only:
+            # the pipeline degraded while this writer waited: the mutation
+            # IS applied (buffered + WAL) but the writer must learn the
+            # service stopped accepting more
+            raise ReadOnlyError(self.read_only_reason or "degraded")
+        if self.maintenance_error is not None:
+            # a dead maintenance thread would leave backpressure waiting
+            # forever — surface its failure to the writer instead
+            raise RuntimeError("maintenance thread died") \
+                from self.maintenance_error
 
     def insert_edge(self, src: int, dst: int, etype: int = 0, **cols) -> None:
         with self._lock:
+            self._check_writable()
             self.tree.insert_edge(src, dst, etype=etype, **cols)
             self._after_mutation(1)
 
     def insert_edges(self, src, dst, etype=None, columns=None) -> None:
         n = int(np.asarray(src).shape[0])
         with self._lock:
+            self._check_writable()
             self.tree.insert_edges(src, dst, etype=etype, columns=columns)
             self._after_mutation(n)
 
@@ -399,6 +460,7 @@ class ServiceDB:
     def delete_edge(self, src: int, dst: int) -> bool:
         with self._merge_slot_of(dst):
             with self._lock:
+                self._check_writable()
                 found = self.tree.delete_edge(src, dst)
                 self._after_mutation(1)
                 return found
@@ -406,6 +468,7 @@ class ServiceDB:
     def update_edge_column(self, src: int, dst: int, name: str, value) -> bool:
         with self._merge_slot_of(dst):
             with self._lock:
+                self._check_writable()
                 ok = self.tree.update_edge_column(src, dst, name, value)
                 self._after_mutation(1)
                 return ok
@@ -537,24 +600,45 @@ class ServiceDB:
             # writers interleave with a sustained drain instead of
             # stalling behind the whole backlog
             with self._lock:
-                while not self._pending_work() and not self._closing:
+                while (not self._pending_work() and not self._closing
+                       and not self.read_only):
                     self._work.wait(timeout=0.5)
                 if self._closing:
                     return  # close() checkpoints what remains
-                if self.tree.total_buffered() > self.tree.buffer_cap:
+                if self.read_only:
+                    self._probe_recovery()
+                    if self.read_only:
+                        self._work.wait(timeout=self.recovery_probe_s)
+                    continue
+                if (self.tree.total_buffered() > self.tree.buffer_cap
+                        and self._backoff_ready("flush")):
                     # FLUSH: one whole buffer per merge — back-to-back
                     # small flushes of the same top partition batch into
                     # one rewrite instead of many
-                    self.tree.flush_fullest_buffer()
-                    self.stats.flushes += 1
-                elif self._checkpoint_due():
+                    try:
+                        self.tree.flush_fullest_buffer()
+                    except BaseException as e:
+                        self._job_failed("flush", e)
+                    else:
+                        self._job_ok("flush")
+                        self.stats.flushes += 1
+                elif self._checkpoint_due() and self._backoff_ready(
+                        "checkpoint"):
                     # CHECKPOINT: persist + manifest + store GC + WAL
                     # segment compaction
-                    self.db.checkpoint()
-                    self._ops_since_ckpt = 0
-                    self._last_ckpt_offset = self.tree.wal.tail_offset()
-                    self._ckpt_requested = False
-                    self.stats.checkpoints += 1
+                    try:
+                        self.db.checkpoint()
+                    except BaseException as e:
+                        self._job_failed("checkpoint", e)
+                    else:
+                        self._job_ok("checkpoint")
+                        self._ops_since_ckpt = 0
+                        self._last_ckpt_offset = self.tree.wal.tail_offset()
+                        self._ckpt_requested = False
+                        self.stats.checkpoints += 1
+                else:
+                    # pending work, but every step is backing off
+                    self._work.wait(timeout=0.1)
                 self._drained.notify_all()
 
     # -- the ISSUE-5 pipeline (pipeline=True) ----------------------------------
@@ -566,20 +650,34 @@ class ServiceDB:
         try:
             with self._lock:
                 while True:
-                    while not self._pending_work() and not self._closing:
+                    while (not self._pending_work() and not self._closing
+                           and not self.read_only
+                           and not self._scrub_due()):
                         self._work.wait(timeout=0.5)
                     if self._closing:
                         return  # close() drains the pool + final checkpoint
-                    if self.maintenance_error is not None:
-                        return  # a dead job poisons the service; stop here
+                    if self.read_only:
+                        # degraded: no new jobs; probe for recovery
+                        self._probe_recovery()
+                        if self.read_only:
+                            self._work.wait(timeout=self.recovery_probe_s)
+                        continue
                     submitted = self._schedule_flushes()
-                    if self._checkpoint_due() and not self._ckpt_running:
+                    if (self._checkpoint_due() and not self._ckpt_running
+                            and self._backoff_ready("checkpoint")):
                         self._ckpt_running = True
-                        self._pool.submit(self._run_job, self._checkpoint_job)
+                        self._pool.submit(self._run_job, "checkpoint",
+                                          self._checkpoint_job)
+                        submitted = True
+                    if self._scrub_due():
+                        self._scrubbing = True
+                        self._pool.submit(self._run_job, "scrub",
+                                          self._scrub_job)
                         submitted = True
                     if not submitted:
                         # work is pending but every eligible job is already
-                        # in flight — wait for a commit to change the state
+                        # in flight (or backing off) — wait for a commit or
+                        # a backoff expiry to change the state
                         self._work.wait(timeout=0.2)
         except BaseException as e:
             with self._lock:
@@ -593,7 +691,8 @@ class ServiceDB:
         if self.tree.total_buffered() <= self.tree.buffer_cap:
             return False
         sizes = [(len(b), j) for j, b in enumerate(self.tree.buffers)
-                 if len(b) and j not in self._flushing]
+                 if len(b) and j not in self._flushing
+                 and self._backoff_ready(f"flush:{j}")]
         sizes.sort(reverse=True)
         submitted = False
         remaining = self.tree.total_buffered()
@@ -603,21 +702,130 @@ class ServiceDB:
             self._flushing.add(j)
             self.stats.max_concurrent_flushes = max(
                 self.stats.max_concurrent_flushes, len(self._flushing))
-            self._pool.submit(self._run_job, self._flush_job, j)
+            self._pool.submit(self._run_job, f"flush:{j}",
+                              self._flush_job, j)
             submitted = True
             remaining -= n
             if remaining <= self.tree.buffer_cap:
                 break
         return submitted
 
-    def _run_job(self, fn, *args) -> None:
+    # -- supervision (ISSUE 7) -------------------------------------------------
+    def _job_ok(self, key: str) -> None:
+        with self._lock:
+            self._job_failures.pop(key, None)
+            self._job_backoff.pop(key, None)
+
+    def _job_failed(self, key: str, exc: BaseException) -> None:
+        """Supervisor policy: exponential-backoff retry; poison-quarantine
+        the job after `max_job_failures`; ENOSPC or a poisoned persist-path
+        job sheds the whole service to read-only (writes rejected typed,
+        epoch reads + snapshot sessions stay live; auto-recovery probes)."""
+        with self._lock:
+            n = self._job_failures.get(key, 0) + 1
+            self._job_failures[key] = n
+            is_enospc = (isinstance(exc, OSError)
+                         and exc.errno == errno.ENOSPC)
+            poisoned = n >= self.max_job_failures
+            if poisoned and key not in self._poisoned:
+                self._poisoned.add(key)
+                self.stats.poisoned_jobs += 1
+            if not poisoned:
+                self.stats.job_retries += 1
+                delay = min(self.backoff_max_s,
+                            self.backoff_base_s * (2 ** (n - 1)))
+                self._job_backoff[key] = time.monotonic() + delay
+            if (is_enospc or poisoned) and not key.startswith("scrub"):
+                # persist-path degradation: record the fault (legacy
+                # `maintenance_error` surface) and shed to read-only
+                self.maintenance_error = exc
+                self._enter_read_only(
+                    "ENOSPC" if is_enospc
+                    else f"maintenance job {key!r} failed {n}x: {exc}")
+            self._drained.notify_all()
+            self._work.notify_all()
+
+    def _enter_read_only(self, reason: str) -> None:
+        """Caller holds the lock."""
+        if not self.read_only:
+            self.read_only = True
+            self.read_only_reason = reason
+            self.stats.read_only_entries += 1
+            self._next_probe = time.monotonic() + self.recovery_probe_s
+
+    def _exit_read_only(self) -> None:
+        """Caller holds the lock. Clears degradation state entirely: the
+        poisoned jobs get a fresh supervisor ledger — if the fault is
+        still there they re-fail and the service re-degrades."""
+        self.read_only = False
+        self.read_only_reason = None
+        self.maintenance_error = None
+        self._job_failures.clear()
+        self._job_backoff.clear()
+        self._poisoned.clear()
+        self.stats.read_only_exits += 1
+        self._drained.notify_all()
+        self._work.notify_all()
+
+    def _probe_recovery(self) -> None:
+        """Caller holds the lock, service is read-only. Probe the cheapest
+        operation resembling the persist path (create + fsync + publish a
+        tiny file); success clears read-only and un-poisons every job."""
+        now = time.monotonic()
+        if now < self._next_probe:
+            return
+        self._next_probe = now + self.recovery_probe_s
+        probe = os.path.join(self.db.dir, ".recovery_probe.tmp")
+        try:
+            failpoint("part.write.fsync")
+            with open(probe, "wb") as f:
+                f.write(b"probe")
+                f.flush()
+                os.fsync(f.fileno())
+            os.remove(probe)
+        except OSError:
+            return  # still degraded; probe again later
+        self._exit_read_only()
+
+    def _backoff_ready(self, key: str) -> bool:
+        """Caller holds the lock: job not poisoned and past its backoff."""
+        if key in self._poisoned:
+            return False
+        until = self._job_backoff.get(key)
+        return until is None or time.monotonic() >= until
+
+    def _scrub_due(self) -> bool:
+        """Caller holds the lock."""
+        return (self.scrub_interval_s is not None
+                and not self._scrubbing
+                and self._backoff_ready("scrub")
+                and (time.monotonic() - self._last_scrub
+                     >= self.scrub_interval_s))
+
+    def _scrub_job(self) -> None:
+        """Idle-cadence background scrub (worker pool): re-verify section
+        CRCs + content digests of live partition files; corrupt ones are
+        quarantined under the exclusive window, readers keep flowing from
+        the surviving levels."""
+        try:
+            failpoint("service.scrub")
+            with self._all_merge_slots():
+                with self._lock:
+                    self.db.scrub(limit=self.scrub_limit)
+            with self._lock:
+                self.stats.scrubs += 1
+        finally:
+            with self._lock:
+                self._scrubbing = False
+                self._last_scrub = time.monotonic()
+
+    def _run_job(self, key: str, fn, *args) -> None:
         try:
             fn(*args)
         except BaseException as e:
-            with self._lock:
-                self.maintenance_error = e
-                self._drained.notify_all()
-                self._work.notify_all()
+            self._job_failed(key, e)
+        else:
+            self._job_ok(key)
 
     def _flush_job(self, j: int) -> None:
         """One pipelined flush: drain under the service lock (cheap —
@@ -631,6 +839,7 @@ class ServiceDB:
                     st = self.tree.drain_buffer(j)
                 if st is None:
                     return
+                failpoint("service.flush.merge")
                 txn = self.tree.build_flush_txn(j, st)  # off the service lock
                 with self._lock:
                     self.tree.commit_txn(txn)
@@ -657,10 +866,12 @@ class ServiceDB:
                     if part.n_edges
                     and (not isinstance(part, DiskPartition) or part.dirty)
                 ]
+            failpoint("service.ckpt.phaseA")
             for part in candidates:  # phase A: no locks, overlaps merges
                 self.db.store.put(part)
             with self._all_merge_slots():  # phase B: brief exclusive window
                 with self._lock:
+                    failpoint("service.ckpt.phaseB")
                     self.db.checkpoint()
                     self._ops_since_ckpt = 0
                     self._last_ckpt_offset = self.tree.wal.tail_offset()

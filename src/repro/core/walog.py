@@ -35,9 +35,23 @@ Record stream grammar (little-endian):
     DELETE  = 0x02  i64 src, i64 dst                (internal IDs)
     COLUMN  = 0x03  u16 schema_index, i64 src, i64 dst, itemsize value
 
-A torn trailing record (crash mid-write) is detected by length and dropped;
-opening for append truncates the active segment back to the last whole
-record so new records never follow garbage.
+Segments whose header declares `"crc": 1` (every segment written since
+ISSUE 7) append a u32 CRC-32 over the record bytes after EVERY record;
+older segments parse exactly as before. The CRC turns silent bit rot into
+a typed failure (`WALCorruptionError`) instead of garbage edges:
+
+  * a bad record in a SEALED segment — or followed by further valid bytes
+    — is corruption of acknowledged history and raises, carrying the
+    global offset of the durable prefix before it;
+  * a bad or length-torn record at the very tail of the LAST segment is a
+    torn write (crash mid-append, possibly spanning a filesystem-section
+    boundary): it was never acknowledged-and-synced, so replay drops it
+    and opening for append truncates back to the last whole record.
+
+Replay also verifies the segment CHAIN: each segment must begin exactly
+where its predecessor ended (`WALGapError` otherwise), so a missing or
+header-torn middle segment — e.g. a snapshot dir that lost a hard link —
+fails typed instead of silently skipping acknowledged mutations.
 """
 from __future__ import annotations
 
@@ -48,6 +62,17 @@ import threading
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
+
+from .failpoints import failpoint
+from .integrity import (
+    CKSUM_ALGO,
+    CRC_ALGO,
+    WALCorruptionError,
+    WALGapError,
+    crc32,
+    fsync_dir,
+    record_checksum,
+)
 
 __all__ = ["SegmentedWAL", "REC_INSERT", "REC_DELETE", "REC_COLUMN"]
 
@@ -70,12 +95,16 @@ class SegmentedWAL:
     def __init__(self, directory: str,
                  column_dtypes: Optional[Dict[str, Any]] = None,
                  sync: str = "commit", segment_bytes: int = 4 << 20,
-                 readonly: bool = False):
+                 readonly: bool = False, crc: bool = True):
         assert sync in ("always", "commit", "close"), sync
         self.dir = directory
         self.sync = sync
         self.segment_bytes = int(segment_bytes)
         self.readonly = readonly
+        # new segments carry per-record checksums; the int is the
+        # record-checksum VERSION (2 = record_checksum: crc32 small /
+        # wsum32 bulk; 1 = plain crc32, still replayable)
+        self.crc = 2 if crc else 0
         self._lock = threading.Lock()
         self._f = None
         os.makedirs(directory, exist_ok=True)
@@ -111,9 +140,13 @@ class SegmentedWAL:
         if segs:
             base, path = segs[-1]
             self._base = base
-            # truncate a torn tail so appends resume at a record boundary
+            # truncate a torn tail so appends resume at a record boundary;
+            # in a CRC segment a fully-written record whose bytes were only
+            # partially persisted (torn page across a section boundary)
+            # also fails here and is truncated with it
+            self._seg_crc = int(_read_header(path).get("crc", 0))
             body_len = os.path.getsize(path) - _header_len(path)
-            good = _parse_len(_read_body(path), self.schema)
+            good = _parse_len(_read_body(path), self.schema, self._seg_crc)
             if good < body_len:
                 with open(path, "r+b") as f:
                     f.truncate(_header_len(path) + good)
@@ -141,21 +174,30 @@ class SegmentedWAL:
 
     def _open_segment(self, base: int) -> None:
         path = os.path.join(self.dir, f"seg_{base:020d}.wal")
-        header = json.dumps({
-            "base": base,
-            "schema": [[n, dt.str] for n, dt in self.schema],
-        }, sort_keys=True).encode()
+        doc = {"base": base,
+               "schema": [[n, dt.str] for n, dt in self.schema]}
+        if self.crc:
+            doc["crc"] = self.crc
+            doc["crc_algo"] = (CRC_ALGO if self.crc == 1 else
+                               f"{CRC_ALGO}<1KiB/{CKSUM_ALGO}")
+        header = json.dumps(doc, sort_keys=True).encode()
+        failpoint("wal.segment.create")
         with open(path, "wb") as f:
             f.write(_MAGIC)
             f.write(struct.pack("<I", len(header)))
             f.write(header)
             f.flush()
             os.fsync(f.fileno())
+        # the segment's directory entry must be durable before any record
+        # in it is acknowledged (rename-without-dir-fsync loses the file)
+        fsync_dir(self.dir)
         self._f = open(path, "ab", buffering=1 << 20)
         self._base = base
         self._seg_bytes = 0
+        self._seg_crc = self.crc
 
     def _rotate(self) -> None:
+        failpoint("wal.segment.rotate")
         self._f.flush()
         os.fsync(self._f.fileno())  # seal: a sealed segment is fully durable
         self._f.close()
@@ -165,6 +207,11 @@ class SegmentedWAL:
     def _append(self, payload: bytes) -> None:
         assert not self.readonly, "read-only WAL"
         with self._lock:
+            if self._seg_crc:
+                ck = (crc32 if self._seg_crc == 1
+                      else record_checksum)(payload)
+                payload += struct.pack("<I", ck)
+            failpoint("wal.append.write")
             self._f.write(payload)
             self._tail += len(payload)
             self._seg_bytes += len(payload)
@@ -172,6 +219,7 @@ class SegmentedWAL:
                 self._f.flush()
             elif self.sync == "always":
                 self._f.flush()
+                failpoint("wal.append.fsync")
                 os.fsync(self._f.fileno())
             if self._seg_bytes >= self.segment_bytes:
                 self._rotate()
@@ -215,6 +263,7 @@ class SegmentedWAL:
         with self._lock:
             self._f.flush()
             if fsync:
+                failpoint("wal.append.fsync")
                 os.fsync(self._f.fileno())
 
     def tail_offset(self) -> int:
@@ -252,6 +301,7 @@ class SegmentedWAL:
                 self._rotate()
         for base, end, path in self.segments():
             if end <= covered_offset and base != self._base:
+                failpoint("wal.compact.unlink")
                 os.remove(path)
                 removed += 1
         return removed
@@ -274,28 +324,67 @@ class SegmentedWAL:
         return (tuple(parts), int(offset), int(end))
 
     # -- replay ----------------------------------------------------------------
-    def replay(self, offset: int = 0,
-               end: Optional[int] = None) -> Iterator[Tuple]:
+    def replay(self, offset: int = 0, end: Optional[int] = None,
+               strict_head: bool = False) -> Iterator[Tuple]:
         """Decode records whose global offsets lie in [offset, end). Yields
         ("insert", src, dst, etype, columns) | ("delete", s, d) |
         ("column", name, s, d, value), in log order. `offset`/`end` must be
         record boundaries the WAL handed out (tail offsets); a torn
-        trailing record is dropped."""
+        trailing record is dropped. Failure is TYPED, never silent: a hole
+        BETWEEN available segments raises `WALGapError` (acknowledged
+        mutations would silently vanish); a CRC-failed record that is not
+        the torn tail raises `WALCorruptionError` carrying the offset of
+        the durable prefix before it. A hole before the FIRST available
+        segment is compaction (only whole leading segments are ever
+        deleted) and is skipped — unless `strict_head` is set, for readers
+        of a pinned session dir where the first segment must cover
+        `offset` and a missing link is loss, not compaction."""
         self.flush()
-        for base, path in self._scan():
+        segs = [(base, path, _try_header(path)) for base, path in self._scan()]
+        # a crash during rotation leaves torn-header files only at the TAIL
+        # (possibly several from a crash loop): they hold no acked records
+        # and are skipped. An unreadable segment with a readable one after
+        # it is a hole in acked history — typed failure below.
+        while segs and segs[-1][2] is None:
+            segs.pop()
+        if strict_head and end is not None and end > offset and not segs:
+            # a pinned dir whose [offset, end) window is non-empty must
+            # hold at least the segment covering `offset`
+            raise WALGapError(self.dir, int(offset), int(end))
+        pos: Optional[int] = None  # None until the first readable segment
+        for i, (base, path, hdr) in enumerate(segs):
             if end is not None and base >= end:
                 break
-            hdr = _try_header(path)
             if hdr is None:
-                continue  # torn-header tail segment: holds no acked records
+                raise WALGapError(self.dir,
+                                  base if pos is None else pos,
+                                  segs[i + 1][0])
             body = _read_body(path)
             seg_end = base + len(body)
             if seg_end <= offset:
+                pos = max(pos or 0, seg_end)
                 continue
+            if pos is None:
+                if strict_head and base > offset:
+                    raise WALGapError(self.dir, int(offset), base)
+            elif base > pos:
+                raise WALGapError(self.dir, pos, base)
             lo = max(0, offset - base)
             hi = len(body) if end is None else min(len(body), end - base)
             schema = [(n, np.dtype(s)) for n, s in hdr["schema"]]
-            yield from _parse(body[lo:hi], schema)
+            crc = int(hdr.get("crc", 0))
+            window = body[lo:hi]
+            good = _parse_len(window, schema, crc)
+            if good < len(window):
+                # bytes past the last whole valid record: a torn tail is
+                # droppable, anything else is corruption of acked history
+                tail_of_log = (i == len(segs) - 1 and hi == len(body))
+                if not tail_of_log:
+                    raise WALCorruptionError(
+                        path, base + lo + good,
+                        "WAL record failed CRC / framing mid-stream")
+            yield from _parse(window[:good], schema, crc)
+            pos = seg_end
 
 
 # ---------------------------------------------------------------------------
@@ -355,22 +444,41 @@ def _record_span(buf: bytes, p: int, schema) -> int:
     return -1  # unknown kind: treat as torn
 
 
-def _parse_len(buf: bytes, schema) -> int:
-    """Length of the longest whole-record prefix of buf."""
+def _rec_at(buf: bytes, p: int, schema, crc: int) -> int:
+    """Total stream span of the record at p (CRC trailer included), after
+    verifying the trailer when the segment carries one. -1 = torn/bad."""
+    span = _record_span(buf, p, schema)
+    if span < 0:
+        return -1
+    total = span + 4 if crc else span
+    if p + total > len(buf):
+        return -1
+    if crc:
+        (want,) = struct.unpack_from("<I", buf, p + span)
+        body = memoryview(buf)[p:p + span]
+        got = crc32(body) if crc == 1 else record_checksum(body)
+        if got != want:
+            return -1
+    return total
+
+
+def _parse_len(buf: bytes, schema, crc: int = 0) -> int:
+    """Length of the longest valid whole-record prefix of buf (in a CRC
+    segment, "valid" includes the checksum)."""
     p = 0
     while p < len(buf):
-        span = _record_span(buf, p, schema)
-        if span < 0 or p + span > len(buf):
+        total = _rec_at(buf, p, schema, crc)
+        if total < 0:
             break
-        p += span
+        p += total
     return p
 
 
-def _parse(buf: bytes, schema) -> Iterator[Tuple]:
+def _parse(buf: bytes, schema, crc: int = 0) -> Iterator[Tuple]:
     p = 0
     while p < len(buf):
-        span = _record_span(buf, p, schema)
-        if span < 0 or p + span > len(buf):
+        total = _rec_at(buf, p, schema, crc)
+        if total < 0:
             break  # torn trailing record
         kind = buf[p]
         if kind == REC_INSERT:
@@ -392,4 +500,4 @@ def _parse(buf: bytes, schema) -> Iterator[Tuple]:
             val = np.frombuffer(buf, dt, count=1,
                                 offset=p + _COLUMN_HDR.size)[0]
             yield ("column", name, s, d, val)
-        p += span
+        p += total

@@ -70,6 +70,31 @@ class TestManifestViews:
         assert t.epochs.min_pinned() is None
         assert t.epochs._retired == []
 
+    def test_dead_reader_thread_pins_are_reclaimed(self):
+        """Regression (ISSUE 7 satellite): a reader thread that pinned a
+        view and died without releasing it must not retain epochs forever
+        — its pin slot is reclaimed once the thread is gone, so GC can
+        proceed."""
+        t = make_tree()
+        t.insert_edges([1, 2, 3], [4, 5, 6])
+
+        def leaky_reader():
+            t.read_view()  # pins, never releases
+
+        th = threading.Thread(target=leaky_reader)
+        th.start()
+        th.join()
+        t.insert_edges([7], [8])  # retires the pinned manifest
+        assert t.epochs.min_pinned() is None, (
+            "dead reader's pin still retains an epoch")
+        t.insert_edges([9], [10])  # next publish trims the retired list
+        assert t.epochs._retired == []
+        # a LIVE pin on this thread is still honored after reclamation
+        v = t.read_view()
+        t.insert_edges([11], [12])
+        assert t.epochs.min_pinned() is not None
+        v.release()
+
     def test_view_includes_pending_drains(self):
         t = make_tree(buffer_cap=10 ** 9)
         t.insert_edges([1, 2], [3, 4])
