@@ -1,7 +1,7 @@
-"""ISSUE 4 + ISSUE 5 + ISSUE 7: the concurrent service tier —
+"""ISSUE 4 + ISSUE 5 + ISSUE 7 + ISSUE 8: the concurrent service tier —
 BENCH_service.json.
 
-Five sections:
+Six sections:
 
   1. `single_insert`: bulk-insert throughput, plain synchronous GraphDB vs
      ServiceDB (WAL + buffer append on the caller's thread, merges /
@@ -26,7 +26,12 @@ Five sections:
      epoch aggregate throughput must beat locked by `contended_gate_x`,
      and epoch p99 during active merges must stay within
      `P99_UNCONTENDED_X` of the in-run single-threaded (uncontended) p99.
-  5. `checksum` (ISSUE 7): the full durable write path and reads with
+  5. `zipf` (ISSUE 8): skewed (zipfian) vs uniform read/write mix on the
+     live epoch path — both reads and writer sources drawn from a hot
+     contiguous id head, the interval-imbalance case a sharded deployment
+     must absorb. Recorded, not gated (skew can legitimately win via
+     caching or lose via hot-interval churn).
+  6. `checksum` (ISSUE 7): the full durable write path and reads with
      end-to-end CRCs on vs off — checksumming must cost < 5% in-run
      (`CHECKSUM_GATE`).
 
@@ -473,6 +478,122 @@ def bench_contended(workdir, n_readers=2, duration_s=5.0) -> dict:
     return out
 
 
+def _zipf_keys(rng, n_vertices, size, alpha=1.3):
+    """Skewed key sampler: zipf-ranked ids WITHOUT scattering, so the hot
+    head is a contiguous low-id range — i.e. it lands in a few vertex
+    intervals. That is exactly the hostile case for interval-partitioned
+    stores (ISSUE 8): a handful of partitions absorb most of the traffic."""
+    return (rng.zipf(alpha, size) - 1) % n_vertices
+
+
+def _mix_reader(svc, sampler, duration_s, seed, barrier, out, idx):
+    rng = np.random.default_rng(seed)
+    lat = []
+    n = 0
+    barrier.wait()
+    t_end = time.perf_counter() + duration_s
+    while time.perf_counter() < t_end:
+        vs = sampler(rng, 256)
+        t0 = time.perf_counter()
+        with svc.read_view() as view:
+            view.storage_engine().out_neighbors_batch(vs)
+        lat.append((time.perf_counter() - t0) * 1e3)
+        n += int(vs.shape[0])
+    out[idx] = (lat, n)
+
+
+def _mix_phase(svc, sampler, n_vertices, n_readers, duration_s,
+               write_rate=60_000) -> dict:
+    """One read/write-mix phase: N readers on `sampler`-drawn keys, one
+    paced writer whose SOURCE vertices come from the same sampler (so
+    writes churn the same hot intervals the readers hammer)."""
+    stop = threading.Event()
+    wrote = [0.0]
+
+    def writer():
+        rng = np.random.default_rng(23)
+        n = 0
+        batch = 5000
+        t0 = time.perf_counter()
+        while not stop.is_set():
+            svc.insert_edges(sampler(rng, batch),
+                             rng.integers(0, n_vertices, batch))
+            n += batch
+            ahead = n / write_rate - (time.perf_counter() - t0)
+            if ahead > 0:
+                time.sleep(ahead)
+        wrote[0] = n / (time.perf_counter() - t0)
+
+    barrier = threading.Barrier(n_readers)
+    out = [None] * n_readers
+    readers = [
+        threading.Thread(target=_mix_reader,
+                         args=(svc, sampler, duration_s, 500 + i, barrier,
+                               out, i))
+        for i in range(n_readers)
+    ]
+    wt = threading.Thread(target=writer)
+    wt.start()
+    for r in readers:
+        r.start()
+    for r in readers:
+        r.join()
+    stop.set()
+    wt.join()
+    lats = [x for lat, _ in out for x in lat]
+    return {
+        "aggregate_vertices_per_s": sum(n for _, n in out) / duration_s,
+        "latency_ms": percentiles(lats),
+        "writer_edges_per_s": wrote[0],
+    }
+
+
+def bench_zipf(workdir, n_vertices, n_readers=2, duration_s=4.0) -> dict:
+    """Skewed (zipfian) vs uniform read/write mix on the live epoch path.
+    Uniform traffic spreads across all vertex intervals; the zipf mix
+    concentrates both reads and writes on a contiguous hot-id head. The
+    section records the throughput/latency delta plus the measured hot-set
+    concentration — the imbalance a sharded deployment (bench_shard) must
+    absorb when hot intervals all land on one shard. No pass/fail gate:
+    skew can legitimately run FASTER (hot neighborhoods stay cached) or
+    slower (buffer contention on hot intervals); the number is the point."""
+    from repro.core import ServiceDB
+
+    preload = max(100_000, n_vertices * 10)
+    psrc, pdst = power_law_graph(n_vertices, preload, seed=7)
+    d = os.path.join(workdir, "zipfdb")
+    svc = ServiceDB.create(
+        d, max_id=n_vertices - 1, n_partitions=16, n_levels=2, branching=8,
+        buffer_cap=50_000, max_partition_edges=8_000_000,
+        persist_min_edges=4096, checkpoint_interval_ops=10 ** 9,
+        wal_tail_budget_bytes=1 << 40)
+    svc.insert_edges(psrc, pdst)
+    _quiesce(svc)
+    alpha = 1.3
+    rng = np.random.default_rng(0)
+    probe = _zipf_keys(rng, n_vertices, 200_000, alpha)
+    hot_cut = max(1, n_vertices // 100)
+    out = {
+        "n_vertices": n_vertices,
+        "preload_edges": preload,
+        "zipf_alpha": alpha,
+        "top1pct_key_share": float((probe < hot_cut).mean()),
+    }
+    samplers = {
+        "uniform": lambda r, k: r.integers(0, n_vertices, k),
+        "zipf": lambda r, k: _zipf_keys(r, n_vertices, k, alpha),
+    }
+    for name, sampler in samplers.items():
+        out[name] = _mix_phase(svc, sampler, n_vertices, n_readers,
+                               duration_s)
+    svc.close()
+    shutil.rmtree(d, ignore_errors=True)
+    uni = out["uniform"]["aggregate_vertices_per_s"]
+    out["zipf_vs_uniform_x"] = (
+        out["zipf"]["aggregate_vertices_per_s"] / uni if uni else None)
+    return out
+
+
 def _committed_baselines() -> dict:
     """Echo the committed single-thread baselines for cross-reference."""
     out = {}
@@ -573,6 +694,21 @@ def run(scale: float = 1.0, smoke: bool = False,
             print(f"    epoch/locked speedup {cont['speedup']:.2f}x; epoch "
                   f"p99 {cont['epoch']['contended']['latency_ms']['p99']:.1f}"
                   f"ms vs gate bound {cont['p99_bound_ms']:.1f}ms")
+        if want("zipf"):
+            n_readers = 2
+            zdur = max(1.5, duration_s)
+            print(f"  zipf: skewed vs uniform read/write mix, "
+                  f"{n_readers} readers + 1 writer (ISSUE 8) ...")
+            payload["zipf"] = zf = bench_zipf(
+                workdir, n_vertices, n_readers=n_readers, duration_s=zdur)
+            for name in ("uniform", "zipf"):
+                z = zf[name]
+                print(f"    {name:8}: {z['aggregate_vertices_per_s']:,.0f} "
+                      f"verts/s  p99={z['latency_ms']['p99']:.2f}ms  "
+                      f"writer {z['writer_edges_per_s']:,.0f}/s")
+            print(f"    zipf/uniform {zf['zipf_vs_uniform_x']:.2f}x "
+                  f"(top-1% ids drew {zf['top1pct_key_share'] * 100:.0f}% "
+                  f"of traffic)")
         if want("checksum"):
             # this section's gate divides two write times; at smoke scale
             # a build is ~20ms and fsync jitter swamps the CRC cost, so
@@ -651,7 +787,7 @@ def main() -> None:
                     help="tiny scale + enforce the regression gates")
     ap.add_argument("--section", default="all",
                     choices=["all", "base", "insert", "query", "readers",
-                             "contended", "checksum"])
+                             "contended", "checksum", "zipf"])
     args = ap.parse_args()
     run(scale=args.scale if not args.smoke else min(args.scale, 0.05),
         smoke=args.smoke, section=args.section)

@@ -1,0 +1,363 @@
+"""ISSUE 8: shared-nothing interval sharding — BENCH_shard.json.
+
+Three sections, one sharded store per shard count (1, 2, 4, 8; `--smoke`
+runs 1 and 2):
+
+  1. `ingest`: scatter-insert throughput through the router. Each batch is
+     split by source-vertex ownership and shipped to its shard over the
+     length-prefixed IPC protocol; every shard runs its own WAL + buffer +
+     maintenance pipeline, so ingest parallelism is bounded only by cores
+     and fsync.
+  2. `reads`: contended read throughput — a fixed pool of client threads
+     (the same pool size at every shard count, so the offered load is
+     constant) issues batched frontier expansions against the live router.
+     Each client thread holds one private connection per shard and each
+     worker serves each connection on its own handler thread, so requests
+     to different shards execute in genuinely parallel processes. Per-query
+     latencies and per-shard block-read deltas are recorded: the block-read
+     accounting proves the read WORK (not just the RPCs) was partitioned
+     across all shards.
+  3. `equality`: the acceptance bitwise gate — the max-shard-count store
+     and an unsharded ServiceDB are fed the SAME op prefix (same insert
+     batches in the same order, then the same deletes); sorted
+     out-neighborhoods over a vertex sample, 2-hop BFS levels, and
+     friends-of-friends counts must match bitwise between the sharded
+     engine (`consistent_engine` over a pinned ShardedView) and the
+     unsharded engine.
+
+The scaling gate is CORE-AWARE because shard processes cannot scale past
+the machine: on >= 4 cores the acceptance gate applies (4-shard aggregate
+read throughput >= 2.5x the 1-shard router); on 2-3 cores a 2-shard >=
+1.3x gate applies (the CI smoke gate); on a single core no speedup is
+physically possible, so the gate inverts into an overhead bound — the
+max-shard configuration must keep >= 0.35x of the 1-shard throughput
+(i.e. scatter/gather + IPC framing must not eat the store). Which gate was
+applied is recorded in the JSON (`scaling_gate`) together with
+`cpu_count`, so a full-scale run on real hardware is distinguishable from
+a 1-core container run. The bitwise-equality and partitioned-block-read
+gates apply everywhere, at every core count.
+
+`--smoke` shrinks the store, runs shard counts (1, 2) and exits non-zero
+on any gate failure — the CI step.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from .common import percentiles, power_law_graph, save
+
+SHARD_COUNTS_FULL = (1, 2, 4, 8)
+SHARD_COUNTS_SMOKE = (1, 2)
+# the acceptance gate (>= 4 cores): 4-shard aggregate read throughput vs
+# the 1-shard router (same IPC path, so the ratio isolates sharding)
+SCALE_GATE_4SHARD = 2.5
+# 2-3 cores (CI runners): 2 shards must still beat 1. The smoke store is
+# tiny (per-RPC framing is a larger share of each query), so CI tolerates
+# more noise — same precedent as bench_service's CONTENDED_GATE_X_SMOKE.
+SCALE_GATE_2SHARD = 1.3
+SCALE_GATE_2SHARD_SMOKE = 1.15
+# 1 core: no speedup is possible — bound the scatter/gather overhead
+# instead. Measured at 2 shards (the smallest sharded config): higher
+# counts on one core measure scheduler oversubscription, not the router
+# (8 processes time-slicing one core is thrash by construction; those
+# rows are still recorded, unguarded)
+OVERHEAD_GATE_1CORE = 0.35
+
+
+def _db_kw():
+    """Per-shard ServiceDB shape. n_partitions must be a multiple of every
+    shard count benchmarked (8 covers 1/2/4/8). The maintenance cadence is
+    left to the router's checkpoint_all calls."""
+    return dict(n_partitions=8, n_levels=2, branching=8,
+                buffer_cap=50_000, max_partition_edges=16_000_000,
+                persist_min_edges=4096, checkpoint_interval_ops=10 ** 9,
+                wal_tail_budget_bytes=1 << 40)
+
+
+def _op_prefix(n_vertices, n_edges, batch=200_000):
+    """The SHARED op prefix: insert batches in a fixed order, then a fixed
+    set of deletes. Both the sharded and unsharded stores replay exactly
+    this sequence — the bitwise gate compares the results."""
+    src, dst = power_law_graph(n_vertices, n_edges, seed=8)
+    batches = [(src[i:i + batch], dst[i:i + batch])
+               for i in range(0, n_edges, batch)]
+    # delete a handful of known-present edges (exercises routed deletes)
+    deletes = [(int(src[i]), int(dst[i]))
+               for i in range(0, min(n_edges, 50 * 97), 97)]
+    return batches, deletes
+
+
+def _ingest(store, batches, deletes) -> float:
+    t0 = time.perf_counter()
+    for s, d in batches:
+        store.insert_edges(s, d)
+    for s, d in deletes:
+        store.delete_edge(s, d)
+    return time.perf_counter() - t0
+
+
+def _read_worker(router, n_vertices, duration_s, seed, barrier, out, idx):
+    """One client thread: batched frontier expansions against the live
+    router. view=None reads pin a private per-op epoch worker-side."""
+    rng = np.random.default_rng(seed)
+    eng = router.storage_engine()
+    lat = []
+    n = 0
+    barrier.wait()
+    t_end = time.perf_counter() + duration_s
+    while time.perf_counter() < t_end:
+        vs = rng.integers(0, n_vertices, 512)
+        t0 = time.perf_counter()
+        eng.out_neighbors_batch(vs)
+        lat.append((time.perf_counter() - t0) * 1e3)
+        n += int(vs.shape[0])
+    out[idx] = (lat, n)
+
+
+def _read_phase(router, n_vertices, n_threads, duration_s) -> dict:
+    io0 = router.io_stats()
+    barrier = threading.Barrier(n_threads)
+    out = [None] * n_threads
+    threads = [
+        threading.Thread(target=_read_worker,
+                         args=(router, n_vertices, duration_s, 800 + i,
+                               barrier, out, i))
+        for i in range(n_threads)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    io1 = router.io_stats()
+    lats = [x for lat, _ in out for x in lat]
+    per_shard = [
+        {"shard": i,
+         "block_reads": io1[i]["block_reads"] - io0[i]["block_reads"],
+         "bytes_read": io1[i]["bytes_read"] - io0[i]["bytes_read"],
+         "gathers": io1[i]["gathers"] - io0[i]["gathers"]}
+        for i in range(len(io0))
+    ]
+    return {
+        "n_client_threads": n_threads,
+        "aggregate_vertices_per_s":
+            sum(n for _, n in out) / duration_s,
+        "latency_ms": percentiles(lats),
+        "queries": len(lats),
+        "per_shard_io": per_shard,
+    }
+
+
+def _khop_levels(eng, seeds, k=2):
+    from repro.core import khop
+    res = khop(eng, seeds, k=k)
+    return [np.asarray(lv) for lv in res.levels]
+
+
+def _equality(router, ref_svc, n_vertices) -> dict:
+    """The bitwise gate: sharded vs unsharded on the same op prefix."""
+    from repro.core import consistent_engine, two_hop_counts
+
+    rng = np.random.default_rng(17)
+    sample = rng.integers(0, n_vertices, 200)
+    seeds = rng.integers(0, n_vertices, 64)
+    checks = {}
+    with consistent_engine(router) as eng, ref_svc.read_view() as view:
+        ref_eng = view.storage_engine()
+        checks["n_edges"] = bool(router.n_edges == ref_svc.n_edges)
+        outs_ok = True
+        for v in sample[:50]:
+            a = np.sort(router.out_neighbors(int(v)))
+            b = np.sort(ref_eng.out_neighbors_batch([int(v)])[0])
+            if a.shape != b.shape or not np.array_equal(a, b):
+                outs_ok = False
+                break
+        checks["out_neighbors"] = outs_ok
+        a_lv = _khop_levels(eng, seeds)
+        b_lv = _khop_levels(ref_eng, seeds)
+        checks["khop_levels"] = bool(
+            len(a_lv) == len(b_lv)
+            and all(np.array_equal(x, y) for x, y in zip(a_lv, b_lv)))
+        a_fof = two_hop_counts(eng, sample)
+        b_fof = two_hop_counts(ref_eng, sample)
+        checks["fof_counts"] = bool(
+            np.array_equal(a_fof.offsets, b_fof.offsets)
+            and np.array_equal(a_fof.ids, b_fof.ids)
+            and np.array_equal(a_fof.counts, b_fof.counts))
+    checks["all_bitwise_equal"] = all(checks.values())
+    return checks
+
+
+def run(scale: float = 1.0, smoke: bool = False) -> dict:
+    from repro.core import ServiceDB, ShardRouter
+
+    ncpu = os.cpu_count() or 1
+    if smoke:
+        n_vertices, n_edges = 4_000, 50_000
+        counts = SHARD_COUNTS_SMOKE
+        duration_s, n_threads = 2.0, 2
+    else:
+        n_vertices = max(4_000, int(200_000 * scale))
+        n_edges = max(50_000, int(3_000_000 * scale))
+        counts = SHARD_COUNTS_FULL
+        duration_s, n_threads = 5.0, max(SHARD_COUNTS_FULL)
+    batches, deletes = _op_prefix(n_vertices, n_edges,
+                                  batch=max(10_000, n_edges // 16))
+
+    payload = {
+        "scale": scale,
+        "smoke": smoke,
+        "cpu_count": ncpu,
+        "n_vertices": n_vertices,
+        "n_edges": n_edges,
+        "n_deletes": len(deletes),
+        "shard_counts": list(counts),
+        "gates": {
+            "scale_4shard_x": SCALE_GATE_4SHARD,
+            "scale_2shard_x": (SCALE_GATE_2SHARD_SMOKE if smoke
+                               else SCALE_GATE_2SHARD),
+            "overhead_1core_x": OVERHEAD_GATE_1CORE,
+        },
+    }
+    workdir = tempfile.mkdtemp(prefix="bench_shard_")
+    agg = {}
+    failures = []
+    try:
+        # the unsharded reference: same op prefix, in-process reads
+        print(f"  reference: unsharded ServiceDB, {n_edges} edges ...")
+        ref_dir = os.path.join(workdir, "ref")
+        ref = ServiceDB.create(ref_dir, max_id=n_vertices - 1, **_db_kw())
+        t_ref = _ingest(ref, batches, deletes)
+        ref.checkpoint()
+        rng = np.random.default_rng(99)
+        t0 = time.perf_counter()
+        n_ref = 0
+        t_end = t0 + max(1.0, duration_s / 2)
+        with ref.read_view() as view:
+            ref_eng = view.storage_engine()
+            while time.perf_counter() < t_end:
+                vs = rng.integers(0, n_vertices, 512)
+                ref_eng.out_neighbors_batch(vs)
+                n_ref += int(vs.shape[0])
+        payload["unsharded"] = {
+            "ingest_edges_per_s": n_edges / t_ref,
+            "inprocess_read_vertices_per_s":
+                n_ref / (time.perf_counter() - t0),
+        }
+        print(f"    ingest {n_edges / t_ref:,.0f} edges/s; in-process "
+              f"reads {payload['unsharded']['inprocess_read_vertices_per_s']:,.0f} vertices/s")
+
+        for n_shards in counts:
+            d = os.path.join(workdir, f"shards_{n_shards}")
+            print(f"  {n_shards} shard(s): ingest + contended reads "
+                  f"({n_threads} client threads x {duration_s}s) ...")
+            router = ShardRouter.create(d, max_id=n_vertices - 1,
+                                        n_shards=n_shards, **_db_kw())
+            try:
+                t_ing = _ingest(router, batches, deletes)
+                router.checkpoint_all()
+                reads = _read_phase(router, n_vertices, n_threads,
+                                    duration_s)
+                agg[n_shards] = reads["aggregate_vertices_per_s"]
+                entry = {
+                    "ingest_edges_per_s": n_edges / t_ing,
+                    "reads": reads,
+                    "n_edges": router.n_edges,
+                }
+                blocks = [s["block_reads"] for s in reads["per_shard_io"]]
+                entry["blocks_partitioned"] = all(b > 0 for b in blocks)
+                if not entry["blocks_partitioned"]:
+                    failures.append(
+                        f"{n_shards}-shard store: some shard served ZERO "
+                        f"block reads during the read phase "
+                        f"(per-shard: {blocks}) — work not partitioned")
+                payload[f"shards_{n_shards}"] = entry
+                print(f"    ingest {n_edges / t_ing:,.0f} edges/s; reads "
+                      f"{agg[n_shards]:,.0f} vertices/s  "
+                      f"p99={reads['latency_ms']['p99']:.2f}ms  "
+                      f"per-shard blocks {blocks}")
+                if n_shards == counts[-1]:
+                    print("  equality: sharded vs unsharded on the same "
+                          "op prefix ...")
+                    payload["equality"] = eq = _equality(
+                        router, ref, n_vertices)
+                    print(f"    {eq}")
+                    if not eq["all_bitwise_equal"]:
+                        bad = [k for k, v in eq.items() if not v]
+                        failures.append(
+                            f"sharded results NOT bitwise-equal to the "
+                            f"unsharded engine: {bad}")
+            finally:
+                router.close()
+                shutil.rmtree(d, ignore_errors=True)
+        ref.close()
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    # ingest scales even on one core: each shard's WAL fsync + maintenance
+    # overlap across processes (recorded, not gated — fsync-bound)
+    ing = {c: payload[f"shards_{c}"]["ingest_edges_per_s"]
+           for c in counts if f"shards_{c}" in payload}
+    if ing.get(1):
+        payload["ingest_scaling_x"] = {str(c): v / ing[1]
+                                       for c, v in ing.items()}
+
+    # --- the core-aware scaling gate -------------------------------------
+    base = agg.get(1, 0.0)
+    if ncpu >= 4 and 4 in agg and base:
+        name, observed, required = ("4shard_vs_1", agg[4] / base,
+                                    SCALE_GATE_4SHARD)
+    elif ncpu >= 2 and 2 in agg and base:
+        name, observed, required = ("2shard_vs_1", agg[2] / base,
+                                    SCALE_GATE_2SHARD_SMOKE if smoke
+                                    else SCALE_GATE_2SHARD)
+    elif base and len(agg) > 1:
+        m = min(c for c in agg if c > 1)
+        name, observed, required = (f"overhead_1core_{m}shard",
+                                    agg[m] / base, OVERHEAD_GATE_1CORE)
+    else:
+        name, observed, required = ("none", 0.0, 0.0)
+    payload["scaling_gate"] = {
+        "applied": name,
+        "observed_x": observed,
+        "required_x": required,
+        "ok": observed >= required,
+        "note": ("full acceptance gate (4-shard >= 2.5x) applies only "
+                 "with >= 4 cores; this run recorded cpu_count="
+                 f"{ncpu}"),
+    }
+    if observed < required:
+        failures.append(
+            f"scaling gate '{name}': {observed:.2f}x < required "
+            f"{required:.2f}x (cpu_count={ncpu})")
+    print(f"  scaling gate [{name}]: {observed:.2f}x "
+          f"(required {required:.2f}x, {ncpu} cores) "
+          f"{'OK' if observed >= required else 'FAIL'}")
+
+    for f in failures:
+        print("  GATE FAIL:", f)
+    payload["gate_failures"] = failures
+    save("BENCH_shard", payload)
+    if failures and smoke:
+        sys.exit(1)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny store, 2 shards max, enforce the gates")
+    args = ap.parse_args()
+    run(scale=args.scale, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

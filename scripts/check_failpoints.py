@@ -1,10 +1,17 @@
 #!/usr/bin/env python
-"""Failpoint coverage lint (ISSUE 7): every site in the CATALOG must be
-exercised somewhere in tests/ or benchmarks/ — a failpoint nobody arms is
-dead weight that silently stops guarding its I/O boundary. Conversely,
-tests must not arm sites that are not in the CATALOG (typos never fire:
-`fp_set` rejects them at runtime, but string specs in env vars and
-parametrize lists bypass that check until the test runs).
+"""Failpoint coverage lint (ISSUE 7 + ISSUE 8): four invariants —
+
+  1. every site in the CATALOG is exercised somewhere in tests/ or
+     benchmarks/ — a failpoint nobody arms is dead weight that silently
+     stops guarding its I/O boundary;
+  2. tests must not arm sites that are not in the CATALOG (typos never
+     fire: `fp_set` rejects them at runtime, but string specs in env vars
+     and parametrize lists bypass that check until the test runs);
+  3. every `failpoint("...")` crossing in src/ names a CATALOG site — new
+     instrumentation (e.g. the ISSUE-8 shard IPC/router sites) MUST be
+     added to the catalog, or armed specs for it would be rejected;
+  4. every CATALOG site is actually crossed by a `failpoint(...)` call in
+     src/ — a catalog entry whose call site was refactored away is a lie.
 
 Exit 1 with a listing on any miss. Run from the repo root:
 
@@ -42,9 +49,35 @@ def referenced_sites():
     return found
 
 
+# a failpoint crossing in product code: failpoint("site.name", ...)
+CROSSING_RE = re.compile(r"failpoint\(\s*[\"']([^\"']+)[\"']")
+
+
+def src_crossings():
+    """Map site -> src files that cross it via a literal failpoint() call."""
+    found = {}
+    root = os.path.join(REPO, "src")
+    for dirpath, _, files in os.walk(root):
+        for fn in files:
+            # failpoints.py defines the mechanism; its docstring example
+            # ("site.name") is not a crossing
+            if not fn.endswith(".py") or fn == "failpoints.py":
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+            for m in CROSSING_RE.finditer(text):
+                found.setdefault(m.group(1), set()).add(
+                    os.path.relpath(path, REPO))
+    return found
+
+
 def main() -> int:
     found = referenced_sites()
     uncovered = sorted(s for s in CATALOG if s not in found)
+    crossings = src_crossings()
+    uncataloged = sorted(s for s in crossings if s not in CATALOG)
+    orphaned = sorted(s for s in CATALOG if s not in crossings)
     # dotted tokens that LOOK like failpoint specs but name no catalog
     # site: only flag ones appearing inside a =action spec to avoid
     # false positives on ordinary attribute access
@@ -76,9 +109,20 @@ def main() -> int:
         print("PHANTOM failpoint specs (site not in the CATALOG — typo?):")
         for s, paths in sorted(phantom.items()):
             print(f"  {s}  ({', '.join(sorted(paths))})")
+    if uncataloged:
+        rc = 1
+        print("UNCATALOGED src crossings (add them to failpoints.CATALOG):")
+        for s in uncataloged:
+            print(f"  {s}  ({', '.join(sorted(crossings[s]))})")
+    if orphaned:
+        rc = 1
+        print("ORPHANED catalog sites (no failpoint() call in src/ crosses "
+              "them — stale entry?):")
+        for s in orphaned:
+            print(f"  {s}")
     if rc == 0:
-        print(f"ok: all {len(CATALOG)} catalog sites are exercised by "
-              f"{'/'.join(SEARCH_DIRS)}")
+        print(f"ok: all {len(CATALOG)} catalog sites are crossed in src/ "
+              f"and exercised by {'/'.join(SEARCH_DIRS)}")
     return rc
 
 

@@ -1242,7 +1242,8 @@ class GraphDB:
 
     SNAPSHOT = "SNAPSHOT.json"
 
-    def pin_snapshot(self, dest_dir: str) -> Dict[str, Any]:
+    def pin_snapshot(self, dest_dir: str,
+                     pinned_offset: Optional[int] = None) -> Dict[str, Any]:
         """Pin the database's CURRENT logical state into `dest_dir` without
         copying data: hard-link the last published manifest's partition
         files (+ dead sidecars) and every WAL segment carrying records in
@@ -1251,14 +1252,31 @@ class GraphDB:
         compaction, so the session stays readable — and bitwise stable up
         to its pinned offset — no matter what the writer does next.
         Single-writer callers may call this directly; under concurrency the
-        service tier (core/service.py) serializes it with mutations."""
+        service tier (core/service.py) serializes it with mutations.
+
+        `pinned_offset` pins at a PAST logical offset instead of the tail —
+        the epoch-view bridge (ISSUE 8): passing a `ManifestView.wal_tail`
+        yields a session whose replayed state equals that pinned view, so
+        an in-process epoch becomes addressable from another process. The
+        offset must be at or past the offset the on-disk manifest covers
+        (an older one would need WAL bytes a later checkpoint may already
+        have compacted away, and un-replaying a manifest is impossible)."""
         if self.tree.wal is None:
             raise ValueError("snapshots need a durable GraphDB (the WAL "
                              "covers RAM partitions and live buffers)")
-        os.makedirs(dest_dir)
         manifest = self._read_manifest()
         self.tree.wal_flush(fsync=False)
-        pinned = self.tree.wal.tail_offset()
+        if pinned_offset is None:
+            pinned = self.tree.wal.tail_offset()
+        else:
+            pinned = int(pinned_offset)
+            covered = int(manifest["wal_offset"])
+            if pinned < covered:
+                raise ValueError(
+                    f"pinned_offset {pinned} predates the checkpointed "
+                    f"manifest (covers WAL up to {covered}); a view that "
+                    f"old cannot be reconstructed from the current store")
+        os.makedirs(dest_dir)
         for lv in manifest["levels"]:
             for e in lv:
                 if e is None:

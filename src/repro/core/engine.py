@@ -289,6 +289,15 @@ class StorageEngine:
     applied at the boundary, paper §7.2).
     """
 
+    #: hop-execution modes this engine can serve (core/multihop.py checks
+    #: before choosing one): "sparse" = per-slab probes via expand_frontier;
+    #: "stream" = whole-store edge_chunks sweeps; "kernel" = dense Pallas
+    #: plans built from the full edge set. Engines that cannot enumerate
+    #: every edge cheaply (the sharded scatter/gather engine — shipping the
+    #: whole edge set over IPC per hop would drown the win) restrict this
+    #: to ("sparse",) and the density heuristic clamps to it.
+    supported_hop_modes: Tuple[str, ...] = ("sparse", "stream", "kernel")
+
     def __init__(self, graph):
         self.graph = graph
 

@@ -117,6 +117,11 @@ CATALOG: Dict[str, str] = {
     "service.ckpt.phaseA":  "checkpoint phase A per-partition persist",
     "service.ckpt.phaseB":  "checkpoint phase B exclusive commit",
     "service.scrub":        "background scrub of one partition file",
+    # --- shard router / worker IPC (core/shardrouter.py) ---
+    "shard.rpc.send":       "a frame about to be written to a shard socket",
+    "shard.rpc.recv":       "a received frame's header+checksum verification",
+    "shard.worker.op":      "a shard worker dispatching one decoded request",
+    "shard.worker.serve":   "a spawned shard worker entering its accept loop",
 }
 
 

@@ -533,8 +533,22 @@ class LSMTree:
             stagings[j] = self.buffers[j].staging()
         self._mversion += 1
         m = LevelManifest(self._mversion, tuple(levels), tuple(stagings),
-                          cur.pending, cur.wal_tail)
+                          cur.pending, self._fresh_wal_tail(cur.wal_tail))
         self.epochs.publish(m)
+
+    def _fresh_wal_tail(self, fallback: int) -> int:
+        """The post-append WAL tail for a targeted publish. Stamping it on
+        every manifest (ISSUE 8) makes each published epoch *addressable*:
+        `pin_snapshot(pinned_offset=view.wal_tail)` reconstructs exactly
+        that view's logical state in another process. The mutation paths
+        append to the WAL before publishing, so the tail read here covers
+        everything the manifest contains."""
+        if self.wal is None:
+            return fallback
+        try:
+            return self.wal.tail_offset()
+        except Exception:
+            return fallback
 
     def publish_buffers(self, idxs) -> None:
         """Cheap publication for append-only buffer changes: splice the
@@ -548,8 +562,9 @@ class LSMTree:
         for j in idxs:
             stagings[j] = self.buffers[j].staging()
         self._mversion += 1
-        self.epochs.publish(cur.with_stagings(self._mversion,
-                                              tuple(stagings)))
+        self.epochs.publish(cur.with_stagings(
+            self._mversion, tuple(stagings),
+            wal_tail=self._fresh_wal_tail(cur.wal_tail)))
 
     def read_view(self) -> ManifestView:
         """Pin the current manifest under an epoch guard and return a

@@ -103,11 +103,15 @@ class LevelManifest:
         self.wal_tail = wal_tail
         self.cache: Dict = {}
 
-    def with_stagings(self, version: int, stagings: Tuple) -> "LevelManifest":
+    def with_stagings(self, version: int, stagings: Tuple,
+                      wal_tail: Optional[int] = None) -> "LevelManifest":
         """The insert-path splice: same partitions/pending, new buffer
-        stagings, fresh cache."""
+        stagings, fresh cache. `wal_tail` updates the manifest's logical
+        offset (the insert path passes the post-append tail so the manifest
+        is *addressable*: pinning a session at exactly `wal_tail` replays
+        to exactly this manifest's logical state)."""
         return LevelManifest(version, self.levels, stagings, self.pending,
-                             self.wal_tail)
+                             self.wal_tail if wal_tail is None else wal_tail)
 
     def partitions(self) -> List[ManifestPartition]:
         return [p for lv in self.levels for p in lv]
@@ -345,6 +349,15 @@ class ManifestView:
     @property
     def version(self) -> int:
         return self.manifest.version
+
+    @property
+    def wal_tail(self) -> int:
+        """The WAL offset this view's manifest is addressable at: every
+        targeted publish stamps the post-append tail (ISSUE 8), so a
+        snapshot pinned at exactly this offset replays to exactly this
+        view's logical state — the bridge that lets an epoch view cross a
+        process boundary via `GraphDB.pin_snapshot(pinned_offset=...)`."""
+        return self.manifest.wal_tail
 
     @property
     def n_edges(self) -> int:

@@ -279,14 +279,19 @@ def _hop_mode(eng: StorageEngine, frontier_size: int, dense: str,
     otherwise a one-shot bottom-up edge stream, which needs no prep."""
     if predicate is not None or dense == "never":
         return "sparse"
+    supported = getattr(eng, "supported_hop_modes",
+                        ("sparse", "stream", "kernel"))
     if dense in ("kernel", "stream"):
-        return dense
+        # an engine that cannot serve the requested mode (the sharded
+        # scatter/gather engine only probes — ISSUE 8) clamps to sparse
+        # rather than erroring: mode is an execution hint, not semantics
+        return dense if dense in supported else "sparse"
     if frontier_size <= threshold * eng.n_internal_vertices:
         return "sparse"
-    if (_plan_cached(eng, "out")
+    if ("kernel" in supported and _plan_cached(eng, "out")
             and eng.n_internal_vertices <= DENSE_MAX_VERTICES):
         return "kernel"
-    return "stream"
+    return "stream" if "stream" in supported else "sparse"
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,7 @@ anywhere in this module.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Optional, Sequence
 
 import numpy as np
@@ -37,6 +38,7 @@ __all__ = [
     "Frontier",
     "bfs",
     "bfs_perhop",
+    "consistent_engine",
     "dedup_frontier",
     "friends_of_friends",
     "friends_of_friends_perhop",
@@ -112,11 +114,37 @@ def traverse_out(g: GraphLike, frontier: Frontier,
     eng = as_engine(g)
     ids = dedup_frontier(eng, frontier.ids, visited=visited)
     n_vert = eng.n_internal_vertices
-    if ids.shape[0] > bottom_up_threshold * n_vert:
+    if (ids.shape[0] > bottom_up_threshold * n_vert
+            and "stream" in getattr(eng, "supported_hop_modes",
+                                    ("sparse", "stream", "kernel"))):
+        # engines that cannot stream the whole edge set (the sharded
+        # scatter/gather engine, ISSUE 8) stay on the batched probe path
         nbrs = _bottom_up_step(eng, ids)
     else:
         nbrs, _ = eng.out_neighbors_batch(ids)
     return Frontier(nbrs)
+
+
+@contextlib.contextmanager
+def consistent_engine(g: GraphLike):
+    """One pinned StorageEngine for a multi-op read session, uniform over
+    every tier (ISSUE 8): a `ServiceDB` yields its lock-free epoch view's
+    engine, a `ShardRouter` pins one manifest in EVERY shard worker and
+    yields the scatter/gather engine over those pins, and anything else
+    (GraphPAL, LSMTree, GraphDB, ManifestView, Snapshot) passes through
+    `as_engine` unchanged. The pin — single- or multi-process — is released
+    on exit, so traversals composed of many engine calls (khop, FoF, BFS)
+    read one frozen state per store regardless of concurrent writers."""
+    pin_view = getattr(g, "pin_view", None)       # ShardRouter
+    read_view = getattr(g, "read_view", None)     # ServiceDB / GraphDB
+    if pin_view is not None:
+        with pin_view() as view:
+            yield view.storage_engine()
+    elif read_view is not None:
+        with read_view() as view:
+            yield view.storage_engine()
+    else:
+        yield as_engine(g)
 
 
 # ---------------------------------------------------------------------------

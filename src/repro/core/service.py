@@ -135,6 +135,13 @@ class Snapshot:
     private in-memory state. Mutating methods are deliberately absent."""
 
     def __init__(self, directory: str, doc: Optional[Dict[str, Any]] = None):
+        # resolve once, against the CALLER's cwd: every store path below is
+        # derived from the session dir (SNAPSHOT.json stores only digests,
+        # never absolute paths), so a session dir can be renamed, moved, or
+        # handed to another process and opened there. The abspath matters
+        # because partition mmaps open lazily — a relative path captured
+        # here would break on the first read after any chdir (ISSUE 8).
+        directory = os.path.abspath(directory)
         self.dir = directory
         if doc is None:
             with open(os.path.join(directory, GraphDB.SNAPSHOT)) as f:
@@ -500,11 +507,18 @@ class ServiceDB:
                 return manifest
 
     # -- snapshot sessions -----------------------------------------------------
-    def begin_snapshot(self) -> Snapshot:
+    def begin_snapshot(self, view=None) -> Snapshot:
         """Pin the current logical state and return a read-only session.
         The pin (hard links + SNAPSHOT.json) happens under the lock — a
         few syscalls, no data copy; the session rebuild (mmap + WAL tail
-        replay) happens outside it, off the writer's critical path."""
+        replay) happens outside it, off the writer's critical path.
+
+        With `view` (a pinned `ManifestView`), the session is pinned at the
+        view's logical offset instead of the current tail: the rebuilt
+        state is bitwise the view's state, which is how an in-process epoch
+        crosses the process boundary (shard workers export their pinned
+        epoch this way — core/shardrouter.py)."""
+        offset = None if view is None else int(view.wal_tail)
         with self._lock:
             base = os.path.join(self.db.dir, "snapshots")
             os.makedirs(base, exist_ok=True)
@@ -515,7 +529,7 @@ class ServiceDB:
                 sid = f"snap_{os.getpid()}_{next(self._snap_ids):06d}"
                 dest = os.path.join(base, sid)
                 try:
-                    doc = self.db.pin_snapshot(dest)
+                    doc = self.db.pin_snapshot(dest, pinned_offset=offset)
                     break
                 except FileExistsError:
                     continue
@@ -567,6 +581,29 @@ class ServiceDB:
         `read_view().storage_engine()` (lock-free, one consistent manifest)
         or `begin_snapshot().storage_engine()` (process-shareable)."""
         return self.db.storage_engine()
+
+    def health(self) -> Dict[str, Any]:
+        """One liveness/progress probe, cheap enough to poll: what a shard
+        router's supervisor (core/shardrouter.py) uses to decide a worker
+        is alive and making progress, and what `bench_shard.py` records
+        per shard. Taken without the service lock — every field is a
+        single read of published state (approximate by design)."""
+        with self.read_view() as view:
+            n_edges = view.n_edges
+            epoch = view.version
+        return {
+            "pid": os.getpid(),
+            "n_edges": int(n_edges),
+            "epoch": int(epoch),
+            "read_only": bool(self.read_only),
+            "read_only_reason": self.read_only_reason,
+            "wal_tail_bytes": int(self.wal_tail_bytes()),
+            "buffered": int(self.tree.total_buffered()),
+            "poisoned_jobs": sorted(self._poisoned),
+            "maintenance_alive": bool(self._thread is not None
+                                      and self._thread.is_alive()),
+            "io": self.db.io.snapshot(),
+        }
 
     # -- maintenance -----------------------------------------------------------
     def wal_tail_bytes(self) -> int:

@@ -1,0 +1,972 @@
+"""Shared-nothing interval sharding (ISSUE 8, DESIGN.md §12).
+
+The single-process engine is GIL-bound: epoch views, merges, and query
+glue all share one interpreter, so reader threads scale at ~1.26x for 2
+readers (BENCH_service). This module splits the vertex-interval space
+across N *shard worker processes* — each running its own full `ServiceDB`
+(own WAL, own partition store, own maintenance pipeline, own
+epoch-published manifests) — fronted by a `ShardRouter` that:
+
+  * routes single-shard ops (insert, out_neighbors, per-source range
+    reads) by interval ownership,
+  * scatter/gathers batched frontier expansions: `expand_frontier`
+    slices the frontier by owner shard, ships each slice over a binary
+    length-prefixed IPC protocol (checksummed with the existing wsum32,
+    failpoint-instrumented), and fans the flat (owner, neighbor) results
+    back into the columnar operator layer (core/multihop.py) unchanged,
+  * maintains per-shard manifest epochs: a `ShardedView` pins one
+    published manifest in every worker, so a cross-shard read is a vector
+    of per-shard snapshot pins (the consistency model in DESIGN.md §12).
+
+Ownership
+---------
+A vertex's owner shard is a pure function of its id:
+
+    owner(v) = interval_of(to_internal(v)) % n_shards == (v % P) % n_shards
+
+(`P` = n_partitions; the equality holds because the reversible hash puts
+`v` into interval `v % P` — paper §7.2). Edges live on the shard owning
+their SOURCE: `out_neighbors`/insert/source-range ops touch exactly one
+shard, while in-direction ops broadcast to all shards and merge. With
+`P % n_shards == 0` (enforced) the hash spreads consecutive original ids
+uniformly across shards, so hot id ranges don't pile onto one worker.
+
+Wire protocol
+-------------
+Frames over an AF_UNIX stream socket (one listener per worker, one
+connection per router thread — the connection is the epoch-pin scope):
+
+    header  <IIII  = magic "SHRD", payload length, wsum32(payload), status
+    payload <I     = meta length, then meta JSON, then raw ndarray bytes
+
+`meta["arrays"]` lists (name, dtype, shape) for the concatenated array
+blobs — numpy buffers cross the boundary as raw bytes, never pickled.
+status 0 = request, 1 = ok, 2 = typed error (re-raised router-side).
+Failpoint sites: `shard.rpc.send`, `shard.rpc.recv`, `shard.worker.op`,
+`shard.worker.serve` — all in the closed CATALOG, all reachable from
+tests and the torture harness via `GRAPHDB_FAILPOINTS` (spawned workers
+inherit the environment).
+
+Failure / restart
+-----------------
+Workers are supervised: a dead worker (crash failpoint, OOM-kill, bug) is
+respawned by the router *on the same durable directory* — recovery is the
+ordinary manifest + WAL-replay open. Reads retry transparently once after
+a respawn (they are idempotent against the recovered state); writes never
+auto-retry (the WAL may or may not have acknowledged the mutation — the
+caller must decide). Epoch pins die with their connection: a `ShardedView`
+spanning a restart raises `ShardEpochLost` rather than silently serving a
+different epoch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import multiprocessing as mp
+import os
+import socket
+import struct
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .engine import StorageEngine
+from .failpoints import failpoint
+from .integrity import GraphDBError, checksum32
+from .pal import IntervalMap
+
+__all__ = [
+    "ShardConfig",
+    "ShardEpochLost",
+    "ShardProtocolError",
+    "ShardRemoteError",
+    "ShardRouter",
+    "ShardUnavailable",
+    "ShardedEngine",
+    "ShardedView",
+    "shard_of",
+]
+
+
+# ---------------------------------------------------------------------------
+# errors
+# ---------------------------------------------------------------------------
+class ShardProtocolError(GraphDBError):
+    """Bytes on a shard socket disagree with the framing contract (bad
+    magic, checksum mismatch, truncated frame). The connection that saw it
+    is poisoned and torn down — frames after a framing error cannot be
+    trusted to be aligned."""
+
+
+class ShardUnavailable(GraphDBError):
+    """A shard worker could not serve the request and the router did not
+    (or must not) retry: writes after a worker death, or a worker that
+    stayed dead through a respawn attempt."""
+
+    def __init__(self, shard: int, detail: str):
+        super().__init__(f"shard {shard}: {detail}")
+        self.shard = shard
+
+
+class ShardRemoteError(GraphDBError):
+    """A typed error raised inside a shard worker, carried back over the
+    wire. `kind` is the worker-side exception class name."""
+
+    def __init__(self, shard: int, kind: str, message: str):
+        super().__init__(f"shard {shard}: {kind}: {message}")
+        self.shard = shard
+        self.kind = kind
+
+    def to_payload(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "message": str(self)}
+
+
+class ShardEpochLost(ShardUnavailable):
+    """The worker holding a ShardedView's epoch pin restarted (or the pin's
+    connection dropped): the pinned manifest is gone and the view cannot
+    answer consistently. Callers open a fresh view."""
+
+    def __init__(self, shard: int):
+        super().__init__(shard, "pinned epoch lost (worker restarted)")
+
+
+# ---------------------------------------------------------------------------
+# ownership
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardConfig:
+    """The sharding geometry every participant derives routing from. All
+    shards share ONE internal id space (same IntervalMap), so internal ids,
+    packed multihop keys, and engine outputs are identical across shards
+    and bitwise-comparable with an unsharded store of the same config."""
+
+    n_shards: int
+    n_partitions: int
+    interval_len: int
+    max_id: int
+
+    @property
+    def intervals(self) -> IntervalMap:
+        return IntervalMap(n_partitions=self.n_partitions,
+                           interval_len=self.interval_len)
+
+    def shard_of(self, vs) -> np.ndarray:
+        return shard_of(vs, self.n_partitions, self.n_shards)
+
+
+def shard_of(vs, n_partitions: int, n_shards: int) -> np.ndarray:
+    """Owner shard of each ORIGINAL vertex id — `(v % P) % n_shards`,
+    which equals `interval_of(to_internal(v)) % n_shards` for every id the
+    store can hold (the reversible hash maps v into interval `v % P`;
+    tests/test_shard.py asserts the equivalence)."""
+    vs = np.asarray(vs, dtype=np.int64)
+    return (vs % np.int64(n_partitions)) % np.int64(n_shards)
+
+
+# ---------------------------------------------------------------------------
+# wire protocol
+# ---------------------------------------------------------------------------
+_MAGIC = 0x53485244  # "SHRD"
+_HEADER = struct.Struct("<IIII")  # magic, payload_len, wsum32, status
+ST_REQUEST, ST_OK, ST_ERROR = 0, 1, 2
+_MAX_FRAME = 1 << 31
+
+
+def encode_payload(meta: Dict[str, Any],
+                   arrays: Optional[Dict[str, np.ndarray]] = None) -> bytes:
+    """meta JSON + raw C-contiguous array bytes, self-describing via
+    meta["arrays"]. Arrays are never pickled: the receiver re-views the
+    exact dtype/shape over the wire bytes."""
+    arrays = arrays or {}
+    meta = dict(meta)
+    specs, blobs = [], []
+    for name, arr in arrays.items():
+        arr = np.ascontiguousarray(arr)
+        specs.append([name, arr.dtype.str, list(arr.shape)])
+        blobs.append(arr.tobytes())
+    meta["arrays"] = specs
+    mbytes = json.dumps(meta, separators=(",", ":")).encode()
+    return b"".join([struct.pack("<I", len(mbytes)), mbytes] + blobs)
+
+
+def decode_payload(buf: bytes) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+    (mlen,) = struct.unpack_from("<I", buf, 0)
+    meta = json.loads(buf[4:4 + mlen].decode())
+    arrays: Dict[str, np.ndarray] = {}
+    off = 4 + mlen
+    for name, dtype, shape in meta.pop("arrays", []):
+        dt = np.dtype(dtype)
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        end = off + n * dt.itemsize
+        arrays[name] = np.frombuffer(buf[off:end], dtype=dt).reshape(shape)
+        off = end
+    return meta, arrays
+
+
+def send_frame(sock: socket.socket, status: int, meta: Dict[str, Any],
+               arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
+    payload = encode_payload(meta, arrays)
+    failpoint("shard.rpc.send")
+    sock.sendall(_HEADER.pack(_MAGIC, len(payload), checksum32(payload),
+                              status) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n:
+        b = sock.recv(min(n, 1 << 20))
+        if not b:
+            raise ConnectionError("shard connection closed mid-frame")
+        chunks.append(b)
+        n -= len(b)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket
+               ) -> Tuple[int, Dict[str, Any], Dict[str, np.ndarray]]:
+    head = _recv_exact(sock, _HEADER.size)
+    magic, length, cksum, status = _HEADER.unpack(head)
+    failpoint("shard.rpc.recv")
+    if magic != _MAGIC or length > _MAX_FRAME:
+        raise ShardProtocolError(
+            f"bad frame header (magic {magic:#x}, length {length})")
+    payload = _recv_exact(sock, length)
+    if checksum32(payload) != cksum:
+        raise ShardProtocolError(
+            f"frame checksum mismatch over {length} payload bytes")
+    meta, arrays = decode_payload(payload)
+    return status, meta, arrays
+
+
+# ---------------------------------------------------------------------------
+# worker process
+# ---------------------------------------------------------------------------
+def _predicate_from(d: Optional[Dict[str, Any]]):
+    if d is None:
+        return None
+    from .multihop import EdgePredicate
+    return EdgePredicate(**d)
+
+
+class _WorkerState:
+    """Per-process state of one shard worker: the shard's ServiceDB plus
+    the accept loop's stop flag."""
+
+    def __init__(self, shard_id: int, svc):
+        self.shard_id = shard_id
+        self.svc = svc
+        self.stop = threading.Event()
+
+
+class _Connection:
+    """One router connection served by one worker thread. The connection
+    is the epoch-pin scope: pinned views die (and are released) with it,
+    which is what makes 'pin lost after restart' detectable instead of
+    silently re-pinning a different epoch."""
+
+    def __init__(self, state: _WorkerState, sock: socket.socket):
+        self.state = state
+        self.sock = sock
+        self.views: Dict[int, Any] = {}
+        self._next_view = 0
+
+    # -- op handlers ---------------------------------------------------------
+    def _store(self, kw: Dict[str, Any]):
+        """The read target: a pinned epoch view when the request names one,
+        the live tree otherwise (single-op reads pin their own view)."""
+        token = kw.get("epoch")
+        if token is None:
+            return None
+        view = self.views.get(int(token))
+        if view is None:
+            raise KeyError(f"unknown epoch token {token} (pin lost?)")
+        return view
+
+    def handle(self, meta: Dict[str, Any],
+               arrays: Dict[str, np.ndarray]
+               ) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+        op = meta["op"]
+        kw = meta.get("kw", {})
+        svc = self.state.svc
+        if op == "ping":
+            return {"shard": self.state.shard_id, **svc.health()}, {}
+        if op == "insert_edges":
+            cols = {n[4:]: a for n, a in arrays.items()
+                    if n.startswith("col:")}
+            svc.insert_edges(arrays["src"], arrays["dst"],
+                             etype=arrays.get("etype"),
+                             columns=cols or None)
+            return {"n": int(arrays["src"].shape[0])}, {}
+        if op == "delete_edge":
+            return {"found": bool(svc.delete_edge(kw["src"], kw["dst"]))}, {}
+        if op == "pin_epoch":
+            view = svc.read_view()
+            token = self._next_view
+            self._next_view += 1
+            self.views[token] = view
+            return {"epoch": token, "version": int(view.version),
+                    "n_edges": int(view.n_edges)}, {}
+        if op == "release_epoch":
+            view = self.views.pop(int(kw["epoch"]), None)
+            if view is not None:
+                view.release()
+            return {"released": view is not None}, {}
+        if op == "snapshot":
+            view = self._store(kw)
+            snap = svc.begin_snapshot(view=view)
+            snap.close()  # the worker keeps no mapping; the dir is the API
+            return {"dir": snap.dir}, {}
+        if op == "checkpoint":
+            svc.checkpoint()
+            return {"ok": True}, {}
+        if op == "io_stats":
+            return dict(svc.db.io.snapshot()), {}
+
+        # -- reads: answered from the pinned epoch (or a private pin) -------
+        view = self._store(kw)
+        owns_pin = view is None
+        if owns_pin:
+            view = svc.read_view()
+        try:
+            eng = view.storage_engine()
+            if op == "out_neighbors":
+                return {}, {"nb": view.out_neighbors(int(kw["v"]))}
+            if op == "in_neighbors":
+                return {}, {"nb": view.in_neighbors(int(kw["v"]))}
+            if op == "expand":
+                owner, nb = eng.expand_frontier(
+                    arrays["vs"], kw.get("direction", "out"),
+                    _predicate_from(kw.get("predicate")))
+                return {}, {"owner": owner, "nb": nb}
+            if op == "degree_batch":
+                deg = eng._degree_batch(arrays["vs"],
+                                        kw.get("direction", "out"))
+                return {}, {"deg": deg}
+            if op == "coo":
+                s, d = view.to_coo()
+                return {}, {"src": np.asarray(s, np.int64),
+                            "dst": np.asarray(d, np.int64)}
+            if op == "n_edges":
+                return {"n_edges": int(view.n_edges)}, {}
+        finally:
+            if owns_pin:
+                view.release()
+        raise ValueError(f"unknown shard op {op!r}")
+
+    def serve(self) -> None:
+        try:
+            while not self.state.stop.is_set():
+                try:
+                    status, meta, arrays = recv_frame(self.sock)
+                except (ConnectionError, OSError):
+                    return
+                if status != ST_REQUEST:
+                    raise ShardProtocolError(
+                        f"worker received non-request status {status}")
+                if meta.get("op") == "shutdown":
+                    send_frame(self.sock, ST_OK, {"ok": True})
+                    self.state.stop.set()
+                    return
+                try:
+                    failpoint("shard.worker.op")
+                    rmeta, rarrays = self.handle(meta, arrays)
+                    send_frame(self.sock, ST_OK, rmeta, rarrays)
+                except BrokenPipeError:
+                    return
+                except Exception as exc:  # typed errors cross the wire
+                    try:
+                        send_frame(self.sock, ST_ERROR,
+                                   {"kind": type(exc).__name__,
+                                    "message": str(exc)})
+                    except OSError:
+                        return
+        finally:
+            for view in self.views.values():
+                try:
+                    view.release()
+                except Exception:
+                    pass
+            self.views.clear()
+            try:
+                self.sock.close()
+            except OSError:
+                pass
+
+
+def _worker_main(shard_id: int, directory: str, sock_path: str,
+                 db_kw: Dict[str, Any]) -> None:
+    """Entry point of a spawned shard worker: open (or create) the shard's
+    ServiceDB on its own durable directory, bind the shard socket, and
+    serve router connections until told to shut down. Crash-restart safe:
+    a respawn on the same directory is the ordinary WAL-replay open."""
+    from .service import ServiceDB
+    from .disk import GraphDB
+    if os.path.exists(os.path.join(directory, GraphDB.MANIFEST)):
+        svc = ServiceDB.open(directory)
+    else:
+        svc = ServiceDB.create(directory, **db_kw)
+    state = _WorkerState(shard_id, svc)
+    try:
+        os.unlink(sock_path)  # a stale socket from a crashed predecessor
+    except FileNotFoundError:
+        pass
+    listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    listener.bind(sock_path)
+    listener.listen(16)
+    listener.settimeout(0.25)
+    failpoint("shard.worker.serve")
+    threads: List[threading.Thread] = []
+    try:
+        while not state.stop.is_set():
+            try:
+                conn, _ = listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            t = threading.Thread(target=_Connection(state, conn).serve,
+                                 name=f"shard{shard_id}-conn", daemon=True)
+            t.start()
+            threads.append(t)
+    finally:
+        listener.close()
+        try:
+            os.unlink(sock_path)
+        except OSError:
+            pass
+        for t in threads:
+            t.join(timeout=2.0)
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+class _ShardProc:
+    """Router-side handle of one worker: process, socket path, and a
+    generation counter — bumped on every respawn so threads' cached
+    connections (and the epoch pins living on them) detect the restart."""
+
+    def __init__(self, shard_id: int, directory: str, sock_path: str):
+        self.shard_id = shard_id
+        self.dir = directory
+        self.sock_path = sock_path
+        self.proc: Optional[mp.process.BaseProcess] = None
+        self.generation = 0
+        self.lock = threading.Lock()  # serializes respawns, not requests
+
+
+class ShardRouter:
+    """Front end over N shard worker processes (module docstring). Thread
+    safe: each router thread keeps one connection per shard (the worker
+    runs one handler thread per connection), so concurrent reader threads
+    fan out to genuinely parallel workers without sharing sockets."""
+
+    CONFIG = "SHARDS.json"
+    SPAWN_TIMEOUT_S = 120.0  # worker import (numpy+jax) + recovery replay
+
+    def __init__(self, directory: str, config: ShardConfig,
+                 db_kw: Dict[str, Any], start: bool = True):
+        self.dir = os.path.abspath(directory)
+        self.config = config
+        self.intervals = config.intervals
+        self.db_kw = dict(db_kw)
+        self._ctx = mp.get_context("spawn")
+        self._tls = threading.local()
+        self._closed = False
+        self.restarts = 0
+        self.shards = [
+            _ShardProc(i, os.path.join(self.dir, f"shard_{i:02d}"),
+                       os.path.join(self.dir, f"shard_{i:02d}.sock"))
+            for i in range(config.n_shards)
+        ]
+        if start:
+            for sp in self.shards:
+                self._spawn(sp)
+            for sp in self.shards:
+                self._wait_ready(sp)
+
+    # -- lifecycle -------------------------------------------------------------
+    @classmethod
+    def create(cls, directory: str, max_id: int, n_shards: int,
+               **db_kw) -> "ShardRouter":
+        """Create a sharded store: N empty per-shard ServiceDBs under
+        `directory`, all sharing one internal id space. `db_kw` forwards
+        to `ServiceDB.create` in every worker (identical config per shard
+        — routing and bitwise comparability depend on it)."""
+        n_partitions = int(db_kw.get("n_partitions", 8))
+        if n_partitions % n_shards:
+            raise ValueError(
+                f"n_partitions ({n_partitions}) must be a multiple of "
+                f"n_shards ({n_shards}) for balanced interval ownership")
+        db_kw.setdefault("n_partitions", n_partitions)
+        db_kw["max_id"] = int(max_id)
+        # workers on a 1-core box each default to multiple maintenance
+        # threads; one per worker process keeps N shards from oversubscribing
+        db_kw.setdefault("maintenance_workers", 1)
+        os.makedirs(directory, exist_ok=True)
+        iv = IntervalMap.for_capacity(max_id, n_partitions)
+        config = ShardConfig(n_shards=n_shards, n_partitions=iv.n_partitions,
+                             interval_len=iv.interval_len, max_id=int(max_id))
+        doc = {"n_shards": n_shards, "n_partitions": iv.n_partitions,
+               "interval_len": iv.interval_len, "max_id": int(max_id),
+               "db_kw": {k: v for k, v in db_kw.items()
+                         if isinstance(v, (int, float, str, bool,
+                                           type(None)))}}
+        with open(os.path.join(directory, cls.CONFIG), "w") as f:
+            json.dump(doc, f, indent=1)
+        return cls(directory, config, db_kw)
+
+    @classmethod
+    def open(cls, directory: str) -> "ShardRouter":
+        with open(os.path.join(directory, cls.CONFIG)) as f:
+            doc = json.load(f)
+        config = ShardConfig(n_shards=doc["n_shards"],
+                             n_partitions=doc["n_partitions"],
+                             interval_len=doc["interval_len"],
+                             max_id=doc["max_id"])
+        return cls(directory, config, doc.get("db_kw", {}))
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for sp in self.shards:
+            try:
+                conn = self._conn(sp)
+                send_frame(conn, ST_REQUEST, {"op": "shutdown"})
+                recv_frame(conn)
+            except (GraphDBError, OSError, ConnectionError):
+                pass
+        for sp in self.shards:
+            if sp.proc is not None:
+                sp.proc.join(timeout=30.0)
+                if sp.proc.is_alive():
+                    sp.proc.terminate()
+                    sp.proc.join(timeout=5.0)
+                sp.proc = None
+
+    def __enter__(self) -> "ShardRouter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- supervision -----------------------------------------------------------
+    def _spawn(self, sp: _ShardProc) -> None:
+        sp.proc = self._ctx.Process(
+            target=_worker_main,
+            args=(sp.shard_id, sp.dir, sp.sock_path, self.db_kw),
+            name=f"graphdb-shard-{sp.shard_id}", daemon=True)
+        sp.proc.start()
+
+    def _wait_ready(self, sp: _ShardProc) -> None:
+        deadline = time.monotonic() + self.SPAWN_TIMEOUT_S
+        while True:
+            if sp.proc is not None and not sp.proc.is_alive():
+                raise ShardUnavailable(
+                    sp.shard_id,
+                    f"worker died during startup "
+                    f"(exit code {sp.proc.exitcode})")
+            try:
+                conn = self._connect(sp)
+                send_frame(conn, ST_REQUEST, {"op": "ping"})
+                status, meta, _ = recv_frame(conn)
+                if status == ST_OK:
+                    self._cache_conn(sp, conn)
+                    return
+            except (OSError, ConnectionError):
+                pass
+            if time.monotonic() > deadline:
+                raise ShardUnavailable(sp.shard_id, "worker never came up")
+            time.sleep(0.05)
+
+    def restart_shard(self, shard_id: int) -> None:
+        """Respawn a dead worker on its durable directory (WAL-replay
+        recovery) and bump the generation so every thread's cached
+        connection — and the epoch pins living on them — is invalidated."""
+        sp = self.shards[shard_id]
+        with sp.lock:
+            if sp.proc is not None and sp.proc.is_alive():
+                # alive: the failure was a broken connection, not a dead
+                # worker — a fresh connect (new generation) is enough
+                try:
+                    conn = self._connect(sp)
+                    conn.close()
+                    sp.generation += 1
+                    return
+                except (OSError, ConnectionError):
+                    sp.proc.terminate()
+                    sp.proc.join(timeout=10.0)
+            self.restarts += 1
+            sp.generation += 1
+            self._spawn(sp)
+            self._wait_ready(sp)
+
+    def health(self) -> List[Dict[str, Any]]:
+        """Ping every shard; a dead shard reports {"alive": False} instead
+        of raising (supervisors poll this)."""
+        out = []
+        for sp in self.shards:
+            try:
+                meta, _ = self._call(sp.shard_id, "ping", {}, retry=False)
+                meta["alive"] = True
+            except (GraphDBError, OSError, ConnectionError) as exc:
+                meta = {"shard": sp.shard_id, "alive": False,
+                        "error": str(exc)}
+            out.append(meta)
+        return out
+
+    # -- per-thread connections ------------------------------------------------
+    def _connect(self, sp: _ShardProc) -> socket.socket:
+        conn = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        conn.connect(sp.sock_path)
+        return conn
+
+    def _cache_conn(self, sp: _ShardProc, conn: socket.socket) -> None:
+        cache = getattr(self._tls, "conns", None)
+        if cache is None:
+            cache = self._tls.conns = {}
+        old = cache.get(sp.shard_id)
+        if old is not None:
+            try:
+                old[0].close()
+            except OSError:
+                pass
+        cache[sp.shard_id] = (conn, sp.generation)
+
+    def _conn(self, sp: _ShardProc) -> socket.socket:
+        cache = getattr(self._tls, "conns", None)
+        if cache is not None:
+            entry = cache.get(sp.shard_id)
+            if entry is not None and entry[1] == sp.generation:
+                return entry[0]
+        conn = self._connect(sp)
+        self._cache_conn(sp, conn)
+        return conn
+
+    def _drop_conn(self, sp: _ShardProc) -> None:
+        cache = getattr(self._tls, "conns", None)
+        if cache is not None:
+            entry = cache.pop(sp.shard_id, None)
+            if entry is not None:
+                try:
+                    entry[0].close()
+                except OSError:
+                    pass
+
+    def _call(self, shard_id: int, op: str, kw: Dict[str, Any],
+              arrays: Optional[Dict[str, np.ndarray]] = None,
+              retry: bool = True
+              ) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+        """One request/response exchange with a shard. On transport failure:
+        reads (`retry=True`) respawn the worker and retry ONCE — they are
+        idempotent against the recovered state; writes (`retry=False`) raise
+        `ShardUnavailable` because the WAL may or may not have acknowledged
+        the mutation, and replaying it blindly could double-apply."""
+        sp = self.shards[shard_id]
+        for attempt in (0, 1):
+            try:
+                conn = self._conn(sp)
+                send_frame(conn, ST_REQUEST, {"op": op, "kw": kw}, arrays)
+                status, meta, rarrays = recv_frame(conn)
+            except (OSError, ConnectionError) as exc:
+                self._drop_conn(sp)
+                if not retry or attempt:
+                    raise ShardUnavailable(
+                        shard_id, f"{op} failed: {exc}") from exc
+                self.restart_shard(shard_id)
+                continue
+            except ShardProtocolError:
+                self._drop_conn(sp)  # a misframed stream is unrecoverable
+                raise
+            if status == ST_ERROR:
+                raise ShardRemoteError(shard_id, meta.get("kind", "Error"),
+                                       meta.get("message", ""))
+            return meta, rarrays
+        raise ShardUnavailable(shard_id, f"{op}: retry exhausted")
+
+    # -- write surface ---------------------------------------------------------
+    def insert_edges(self, src, dst, etype=None, columns=None) -> None:
+        """Scatter a batch to its owner shards (by SOURCE vertex). The
+        batch is atomic per shard, not across shards: a concurrent view
+        may see one shard's slice before another's (DESIGN.md §12)."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        owner = self.config.shard_of(src)
+        for s in np.unique(owner):
+            idx = np.flatnonzero(owner == s)
+            arrays = {"src": src[idx], "dst": dst[idx]}
+            if etype is not None:
+                arrays["etype"] = np.asarray(etype)[idx]
+            for name, col in (columns or {}).items():
+                arrays[f"col:{name}"] = np.asarray(col)[idx]
+            self._call(int(s), "insert_edges", {}, arrays, retry=False)
+
+    def insert_edge(self, src: int, dst: int, etype: int = 0, **cols) -> None:
+        self.insert_edges([src], [dst], etype=[etype],
+                          columns={k: [v] for k, v in cols.items()} or None)
+
+    def delete_edge(self, src: int, dst: int) -> bool:
+        s = int(self.config.shard_of([src])[0])
+        meta, _ = self._call(s, "delete_edge",
+                             {"src": int(src), "dst": int(dst)}, retry=False)
+        return bool(meta["found"])
+
+    def checkpoint_all(self) -> None:
+        for sp in self.shards:
+            self._call(sp.shard_id, "checkpoint", {}, retry=False)
+
+    # -- read surface ----------------------------------------------------------
+    def out_neighbors(self, v: int) -> np.ndarray:
+        """Single-shard routed read (the owner holds ALL of v's out-edges)."""
+        s = int(self.config.shard_of([v])[0])
+        _, arrays = self._call(s, "out_neighbors", {"v": int(v)})
+        return arrays["nb"]
+
+    def in_neighbors(self, v: int) -> np.ndarray:
+        """Broadcast + merge (in-edges of v are scattered across every
+        shard's stores). Returned SORTED — the canonical cross-shard order;
+        per-slab order would depend on each shard's private merge history."""
+        parts = [self._call(sp.shard_id, "in_neighbors", {"v": int(v)})[1]
+                 ["nb"] for sp in self.shards]
+        return np.sort(np.concatenate(parts)) if parts else \
+            np.empty(0, np.int64)
+
+    @property
+    def n_edges(self) -> int:
+        return sum(self._call(sp.shard_id, "n_edges", {})[0]["n_edges"]
+                   for sp in self.shards)
+
+    def io_stats(self) -> List[Dict[str, Any]]:
+        """Per-shard block-read accounting (bench_shard.py's evidence that
+        scatter/gather actually partitions the work)."""
+        return [self._call(sp.shard_id, "io_stats", {})[0]
+                for sp in self.shards]
+
+    def to_coo(self) -> Tuple[np.ndarray, np.ndarray]:
+        ss, dd = [], []
+        for sp in self.shards:
+            _, arrays = self._call(sp.shard_id, "coo", {})
+            ss.append(arrays["src"])
+            dd.append(arrays["dst"])
+        return np.concatenate(ss), np.concatenate(dd)
+
+    # -- epochs ----------------------------------------------------------------
+    def pin_view(self) -> "ShardedView":
+        """Pin one published manifest in every shard and return the
+        cross-shard view. The pins live on THIS thread's connections, so a
+        view must be used and released by the thread that created it (the
+        same discipline as ManifestView's pin slot)."""
+        return ShardedView(self)
+
+    def storage_engine(self) -> "ShardedEngine":
+        """An engine over ad-hoc per-op pins (each scatter/gather op pins
+        and releases inside every worker). For a multi-op consistent read,
+        use `pin_view().storage_engine()`."""
+        return ShardedEngine(self, view=None)
+
+
+# ---------------------------------------------------------------------------
+# sharded view + engine
+# ---------------------------------------------------------------------------
+class ShardedView:
+    """A vector of per-shard epoch pins: shard i answers every read from
+    its pinned manifest, so a multi-op query (k-hop, FoF) sees N frozen
+    per-shard states. Cross-shard consistency model: per-shard prefix
+    (DESIGN.md §12) — quiesced (no concurrent writer), it equals the
+    unsharded store exactly."""
+
+    def __init__(self, router: ShardRouter):
+        self.router = router
+        self.epochs: Dict[int, int] = {}
+        self.versions: Dict[int, int] = {}
+        self._released = False
+        self._thread = threading.get_ident()
+        try:
+            # pinning is an idempotent read: it may transparently respawn a
+            # dead worker (the fresh pin then covers the recovered state)
+            for sp in router.shards:
+                meta, _ = router._call(sp.shard_id, "pin_epoch", {})
+                self.epochs[sp.shard_id] = int(meta["epoch"])
+                self.versions[sp.shard_id] = int(meta["version"])
+        except GraphDBError:
+            self.release()
+            raise
+
+    def _epoch_kw(self, shard_id: int) -> Dict[str, Any]:
+        if self._released:
+            raise ShardEpochLost(shard_id)
+        return {"epoch": self.epochs[shard_id]}
+
+    def call(self, shard_id: int, op: str, kw: Dict[str, Any],
+             arrays: Optional[Dict[str, np.ndarray]] = None):
+        """A read against this view's pin on `shard_id`. Never auto-retries
+        across a worker restart: the pin died with the worker and a silent
+        re-pin would splice two different epochs into one 'view'."""
+        kw = {**kw, **self._epoch_kw(shard_id)}
+        try:
+            return self.router._call(shard_id, op, kw, arrays, retry=False)
+        except ShardRemoteError as exc:
+            if "epoch token" in str(exc):
+                raise ShardEpochLost(shard_id) from exc
+            raise
+        except ShardUnavailable as exc:
+            raise ShardEpochLost(shard_id) from exc
+
+    # -- store duck type (as_engine dispatches through this) ------------------
+    @property
+    def intervals(self) -> IntervalMap:
+        return self.router.intervals
+
+    @property
+    def n_edges(self) -> int:
+        return sum(self.call(sp.shard_id, "n_edges", {})[0]["n_edges"]
+                   for sp in self.router.shards)
+
+    def out_neighbors(self, v: int) -> np.ndarray:
+        s = int(self.router.config.shard_of([v])[0])
+        return self.call(s, "out_neighbors", {"v": int(v)})[1]["nb"]
+
+    def in_neighbors(self, v: int) -> np.ndarray:
+        parts = [self.call(sp.shard_id, "in_neighbors", {"v": int(v)})[1]
+                 ["nb"] for sp in self.router.shards]
+        return np.sort(np.concatenate(parts))
+
+    def to_coo(self) -> Tuple[np.ndarray, np.ndarray]:
+        ss, dd = [], []
+        for sp in self.router.shards:
+            _, arrays = self.call(sp.shard_id, "coo", {})
+            ss.append(arrays["src"])
+            dd.append(arrays["dst"])
+        return np.concatenate(ss), np.concatenate(dd)
+
+    def begin_snapshot_dirs(self) -> List[str]:
+        """Export every shard's pinned epoch as an on-disk session dir
+        (`ServiceDB.begin_snapshot(view=...)` inside the worker): any
+        process may `Snapshot.open` them and read state bitwise-equal to
+        this view's pins — the hard-link machinery crossing the shard
+        boundary."""
+        return [self.call(sp.shard_id, "snapshot", {})[0]["dir"]
+                for sp in self.router.shards]
+
+    def storage_engine(self) -> "ShardedEngine":
+        return ShardedEngine(self.router, view=self)
+
+    # -- lifecycle -------------------------------------------------------------
+    def release(self) -> None:
+        if self._released:
+            return
+        self._released = True
+        for shard_id, token in self.epochs.items():
+            try:
+                self.router._call(shard_id, "release_epoch",
+                                  {"epoch": token}, retry=False)
+            except (GraphDBError, OSError, ConnectionError):
+                pass  # a dead worker already dropped the pin
+
+    close = release
+
+    def __enter__(self) -> "ShardedView":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class ShardedEngine(StorageEngine):
+    """StorageEngine whose slab probes happen inside shard workers.
+
+    Scatter/gather: out-direction ops slice the query vertices by owner
+    shard and ship only each shard's slice; in-direction ops broadcast the
+    whole batch. Results come back as flat (owner, neighbor) pairs with
+    owner indices mapped to the caller's positions, so the columnar
+    operators in core/multihop.py consume them unchanged. Only the
+    "sparse" hop mode is supported (`supported_hop_modes`): stream/kernel
+    modes need the whole edge set, which must not cross the wire per hop.
+    """
+
+    supported_hop_modes = ("sparse",)
+
+    def __init__(self, router: ShardRouter, view: Optional[ShardedView]):
+        super().__init__(view if view is not None else router)
+        self.router = router
+        self.view = view
+
+    # -- plumbing --------------------------------------------------------------
+    @property
+    def intervals(self) -> IntervalMap:
+        return self.router.intervals
+
+    @property
+    def n_internal_vertices(self) -> int:
+        return self.router.intervals.max_vertices
+
+    def _slabs(self):
+        raise NotImplementedError(
+            "sharded engines have no local slabs: reads are scattered to "
+            "shard workers (open a per-shard Snapshot for slab access)")
+
+    def cache_token(self):
+        return None  # plans are never built router-side (sparse-only)
+
+    def _shard_call(self, shard_id: int, op: str, kw, arrays):
+        if self.view is not None:
+            return self.view.call(shard_id, op, kw, arrays)
+        return self.router._call(shard_id, op, kw, arrays)
+
+    def _scatter(self, vs: np.ndarray, direction: str, op: str,
+                 kw: Dict[str, Any]):
+        """Yield (global index array, response arrays) per shard:
+        out-direction scatters owner slices, in-direction broadcasts."""
+        cfg = self.router.config
+        if direction == "out":
+            owner = cfg.shard_of(vs)
+            for s in np.unique(owner):
+                idx = np.flatnonzero(owner == s)
+                yield idx, self._shard_call(int(s), op, kw,
+                                            {"vs": vs[idx]})[1]
+        else:
+            idx = np.arange(vs.shape[0], dtype=np.int64)
+            for sp in self.router.shards:
+                yield idx, self._shard_call(sp.shard_id, op, kw,
+                                            {"vs": vs})[1]
+
+    # -- the scatter/gather read surface --------------------------------------
+    def expand_frontier(self, vs, direction: str = "out", predicate=None,
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        vs = np.asarray(vs, dtype=np.int64).ravel()
+        if vs.shape[0] == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        kw = {"direction": direction,
+              "predicate": (dataclasses.asdict(predicate)
+                            if predicate is not None else None)}
+        owners, vals = [], []
+        for idx, arrays in self._scatter(vs, direction, "expand", kw):
+            if arrays["owner"].shape[0]:
+                owners.append(idx[arrays["owner"]])
+                vals.append(arrays["nb"])
+        if not vals:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        return np.concatenate(owners), np.concatenate(vals)
+
+    def _neighbors_batch(self, vs, direction: str):
+        from .multihop import _csr_offsets
+        vs = np.asarray(vs, dtype=np.int64).ravel()
+        owner, nb = self.expand_frontier(vs, direction)
+        order = np.argsort(owner, kind="stable")
+        return nb[order], _csr_offsets(owner[order], vs.shape[0])
+
+    def _degree_batch(self, vs, direction: str) -> np.ndarray:
+        vs = np.asarray(vs, dtype=np.int64).ravel()
+        deg = np.zeros(vs.shape[0], np.int64)
+        for idx, arrays in self._scatter(vs, direction, "degree_batch",
+                                         {"direction": direction}):
+            deg[idx] += arrays["deg"]
+        return deg
+
+    def to_coo(self) -> Tuple[np.ndarray, np.ndarray]:
+        g = self.graph
+        return g.to_coo()

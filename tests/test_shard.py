@@ -1,0 +1,510 @@
+"""ISSUE 8: shared-nothing interval sharding.
+
+Covers the tentpole and its satellites:
+
+  * ownership math — `shard_of` is exactly interval ownership,
+  * the wire protocol — roundtrip, checksum detection, typed remote errors,
+  * bitwise equality — every sharded read (out/in neighbors, degrees,
+    k-hop, FoF) equals the unsharded engine on the same op prefix,
+  * epoch semantics — a ShardedView is frozen under concurrent writes and
+    raises `ShardEpochLost` (never splices epochs) across a restart,
+  * failure/restart — crashed workers respawn on their durable dirs; reads
+    retry once, writes never,
+  * cross-process reads — a subprocess opens the shards' pinned session
+    dirs and returns bitwise-identical out_neighbors/FoF to the live
+    in-process epoch view, while a writer keeps mutating,
+  * view-addressed snapshots — `begin_snapshot(view=...)` pins a PAST
+    epoch's exact logical state (the ManifestView-across-the-boundary
+    satellite).
+"""
+import os
+import shutil
+import socket
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CRASH_EXIT_CODE,
+    ServiceDB,
+    ShardEpochLost,
+    ShardProtocolError,
+    ShardRemoteError,
+    ShardRouter,
+    Snapshot,
+    fp_clear,
+    fp_set,
+    khop,
+    shard_of,
+    two_hop_counts,
+)
+from repro.core import shardrouter as sr
+from repro.core.engine import StorageEngine
+from repro.core.failpoints import ENV_VAR
+from repro.core.query import consistent_engine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+N_ID = 20_000
+DB_KW = dict(n_partitions=8, n_levels=2, branching=4, buffer_cap=4000,
+             max_partition_edges=50_000, persist_min_edges=512)
+
+
+def _edges(seed=7, n=30_000):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, N_ID, n, dtype=np.int64),
+            rng.integers(0, N_ID, n, dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# ownership + protocol units (no processes)
+# ---------------------------------------------------------------------------
+def test_shard_of_is_interval_ownership():
+    from repro.core import IntervalMap
+    iv = IntervalMap.for_capacity(N_ID, 8)
+    vs = np.arange(0, N_ID, 37, dtype=np.int64)
+    for n_shards in (1, 2, 4, 8):
+        expect = np.asarray(iv.interval_of(iv.to_internal(vs))) % n_shards
+        got = shard_of(vs, iv.n_partitions, n_shards)
+        assert np.array_equal(got, expect)
+
+
+def test_frame_roundtrip_and_checksum():
+    a, b = socket.socketpair()
+    try:
+        meta = {"op": "expand", "kw": {"direction": "out"}}
+        arrays = {"vs": np.arange(17, dtype=np.int64),
+                  "f": np.linspace(0, 1, 5, dtype=np.float32)}
+        sr.send_frame(a, sr.ST_REQUEST, meta, arrays)
+        status, m2, a2 = sr.recv_frame(b)
+        assert status == sr.ST_REQUEST
+        assert m2["op"] == "expand" and m2["kw"] == {"direction": "out"}
+        assert np.array_equal(a2["vs"], arrays["vs"])
+        assert np.array_equal(a2["f"], arrays["f"])
+        assert a2["f"].dtype == np.float32
+
+        # flip one payload byte in flight: the wsum32 must catch it
+        payload = sr.encode_payload(meta, arrays)
+        head = sr._HEADER.pack(sr._MAGIC, len(payload),
+                               sr.checksum32(payload), sr.ST_REQUEST)
+        corrupt = bytearray(payload)
+        corrupt[len(corrupt) // 2] ^= 0x40
+        a.sendall(head + bytes(corrupt))
+        with pytest.raises(ShardProtocolError):
+            sr.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_bad_magic_rejected():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(sr._HEADER.pack(0xDEAD, 4, 0, sr.ST_REQUEST) + b"ABCD")
+        with pytest.raises(ShardProtocolError):
+            sr.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_send_failpoint_site_fires():
+    a, b = socket.socketpair()
+    fp_set("shard.rpc.send", "raise")
+    try:
+        with pytest.raises(Exception):
+            sr.send_frame(a, sr.ST_OK, {"op": "ping"})
+    finally:
+        fp_clear("shard.rpc.send")
+        a.close()
+        b.close()
+
+
+def test_recv_failpoint_site_fires():
+    a, b = socket.socketpair()
+    try:
+        sr.send_frame(a, sr.ST_OK, {"op": "ping"})
+        fp_set("shard.rpc.recv", "raise")
+        try:
+            with pytest.raises(Exception):
+                sr.recv_frame(b)
+        finally:
+            fp_clear("shard.rpc.recv")
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# the sharded store vs the unsharded reference
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def stores(tmp_path_factory):
+    """One 2-shard router + one unsharded ServiceDB fed the same op
+    prefix (module-scoped: worker spawn is seconds on a small box)."""
+    base = tmp_path_factory.mktemp("shard")
+    src, dst = _edges()
+    ref = ServiceDB.create(str(base / "ref"), max_id=N_ID, **DB_KW)
+    ref.insert_edges(src, dst)
+    router = ShardRouter.create(str(base / "sharded"), max_id=N_ID,
+                                n_shards=2, **DB_KW)
+    router.insert_edges(src, dst)
+    yield router, ref, src, dst
+    router.close()
+    ref.close()
+
+
+def test_edge_counts_match(stores):
+    router, ref, src, _ = stores
+    assert router.n_edges == ref.n_edges == src.shape[0]
+
+
+def test_single_vertex_reads_bitwise(stores):
+    router, ref, src, dst = stores
+    for v in [int(src[0]), int(dst[1]), int(src[2]), 0, N_ID - 1]:
+        assert np.array_equal(np.sort(router.out_neighbors(v)),
+                              np.sort(ref.out_neighbors(v)))
+        assert np.array_equal(router.in_neighbors(v),
+                              np.sort(ref.in_neighbors(v)))
+
+
+def test_khop_and_fof_bitwise(stores):
+    router, ref, src, _ = stores
+    seeds = np.unique(src[:64])
+    with consistent_engine(router) as eng, ref.read_view() as view:
+        reng = view.storage_engine()
+        for direction in ("out", "in"):
+            ours = khop(eng, seeds, 2, direction=direction)
+            theirs = khop(reng, seeds, 2, direction=direction)
+            assert len(ours.levels) == len(theirs.levels)
+            for a, b in zip(ours.levels, theirs.levels):
+                assert np.array_equal(a, b)
+            assert np.array_equal(ours.visited, theirs.visited)
+        f1 = two_hop_counts(eng, seeds[:16])
+        f2 = two_hop_counts(reng, seeds[:16])
+        assert np.array_equal(f1.ids, f2.ids)
+        assert np.array_equal(f1.counts, f2.counts)
+        assert np.array_equal(f1.offsets, f2.offsets)
+
+
+def test_degree_batch_bitwise(stores):
+    router, ref, src, dst = stores
+    vs = np.unique(np.concatenate([src[:200], dst[:200]]))
+    with consistent_engine(router) as eng, ref.read_view() as view:
+        reng = view.storage_engine()
+        assert np.array_equal(eng.out_degree_batch(vs),
+                              reng.out_degree_batch(vs))
+        assert np.array_equal(eng.in_degree_batch(vs),
+                              reng.in_degree_batch(vs))
+
+
+def test_hop_mode_clamps_to_sparse(stores):
+    """Requesting stream/kernel on the sharded engine must clamp to the
+    sparse scatter/gather path, not ship the edge set over IPC — and the
+    answer stays bitwise-equal."""
+    router, ref, src, _ = stores
+    seeds = np.unique(src[:32])
+    with consistent_engine(router) as eng, ref.read_view() as view:
+        assert eng.supported_hop_modes == ("sparse",)
+        ours = khop(eng, seeds, 2, dense="stream")  # would need edge_chunks
+        theirs = khop(view.storage_engine(), seeds, 2)
+        for a, b in zip(ours.levels, theirs.levels):
+            assert np.array_equal(a, b)
+
+
+def test_remote_typed_error(stores):
+    router, _, _, _ = stores
+    with pytest.raises(ShardRemoteError):
+        router._call(0, "no_such_op", {})
+
+
+def test_sharded_view_frozen_under_writes(stores):
+    # NOTE: mutates the shared router (only) — every test comparing the
+    # router against `ref` on the same op prefix is defined ABOVE this one
+    router, _, src, dst = stores
+    v = int(src[0])
+    with router.pin_view() as view:
+        before = np.sort(view.out_neighbors(v))
+        n_before = view.n_edges
+        router.insert_edges([v] * 8, np.arange(8, dtype=np.int64) + 1)
+        assert np.array_equal(np.sort(view.out_neighbors(v)), before)
+        assert view.n_edges == n_before
+    live = router.out_neighbors(v)
+    assert live.shape[0] == before.shape[0] + 8
+
+
+def test_io_stats_partitioned(stores):
+    """After a checkpoint, a broad frontier read touches disk blocks on
+    EVERY shard — the per-shard accounting bench_shard gates on."""
+    router, _, src, _ = stores
+    router.checkpoint_all()
+    base = [s["block_reads"] for s in router.io_stats()]
+    seeds = np.unique(src[:512])
+    with consistent_engine(router) as eng:
+        eng.expand_frontier(seeds, "out")
+    after = [s["block_reads"] for s in router.io_stats()]
+    assert all(b >= a for a, b in zip(base, after))
+    assert sum(after) > sum(base)
+    grew = sum(1 for a, b in zip(base, after) if b > a)
+    assert grew == len(router.shards)
+
+
+# ---------------------------------------------------------------------------
+# failure / restart semantics
+# ---------------------------------------------------------------------------
+class TestRestart:
+    def _mk(self, tmp_path, n_shards=1):
+        return ShardRouter.create(str(tmp_path / "rt"), max_id=N_ID,
+                                  n_shards=n_shards, **DB_KW)
+
+    def test_read_retries_after_worker_death(self, tmp_path):
+        router = self._mk(tmp_path)
+        try:
+            src, dst = _edges(seed=3, n=2000)
+            router.insert_edges(src, dst)
+            expect = np.sort(router.out_neighbors(int(src[0])))
+            router.shards[0].proc.kill()
+            router.shards[0].proc.join()
+            got = np.sort(router.out_neighbors(int(src[0])))
+            assert np.array_equal(got, expect)
+            assert router.restarts == 1
+            assert router.health()[0]["alive"]
+        finally:
+            router.close()
+
+    def test_write_never_retries(self, tmp_path):
+        router = self._mk(tmp_path)
+        try:
+            router.shards[0].proc.kill()
+            router.shards[0].proc.join()
+            with pytest.raises(sr.ShardUnavailable):
+                router.insert_edges([1], [2])
+            # the durable state is intact; the NEXT write (after the
+            # caller-visible failure) lands on a recovered worker
+            router.restart_shard(0)
+            router.insert_edges([1], [2])
+            assert np.array_equal(router.out_neighbors(1), [2])
+        finally:
+            router.close()
+
+    def test_epoch_pin_dies_with_worker(self, tmp_path):
+        router = self._mk(tmp_path)
+        try:
+            router.insert_edges([5], [6])
+            view = router.pin_view()
+            assert np.array_equal(view.out_neighbors(5), [6])
+            router.shards[0].proc.kill()
+            router.shards[0].proc.join()
+            with pytest.raises(ShardEpochLost):
+                view.out_neighbors(5)
+            view.release()
+            # a FRESH view on the recovered worker serves again
+            with router.pin_view() as v2:
+                assert np.array_equal(v2.out_neighbors(5), [6])
+        finally:
+            router.close()
+
+    def test_worker_op_crash_failpoint(self, tmp_path, monkeypatch):
+        """Arm `shard.worker.op=crash@1` through the environment channel:
+        the spawned worker survives its readiness ping (hit 1), dies
+        mid-first-real-op with os._exit(41), and the router's read path
+        respawns it (env cleared — the respawn is clean) and retries."""
+        monkeypatch.setenv(ENV_VAR, "shard.worker.op=crash@1")
+        router = self._mk(tmp_path)
+        monkeypatch.delenv(ENV_VAR)
+        try:
+            with pytest.raises(sr.ShardUnavailable):
+                router.insert_edges([1], [2])  # writes must NOT retry
+            router.shards[0].proc.join(timeout=30)
+            assert router.shards[0].proc.exitcode == CRASH_EXIT_CODE
+            got = router.out_neighbors(1)  # reads retry across the respawn
+            assert router.restarts == 1
+            assert got.shape[0] in (0, 1)  # WAL may or may not have acked
+        finally:
+            router.close()
+
+    def test_worker_serve_crash_fails_spawn(self, tmp_path, monkeypatch):
+        monkeypatch.setenv(ENV_VAR, "shard.worker.serve=crash")
+        with pytest.raises(sr.ShardUnavailable):
+            self._mk(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# cross-process reads of pinned shard views (satellite)
+# ---------------------------------------------------------------------------
+_SUBPROC = r"""
+import json, sys
+import numpy as np
+from repro.core import Snapshot, two_hop_counts
+from repro.core.engine import StorageEngine
+
+spec = json.load(open(sys.argv[1]))
+snaps = [Snapshot.open(d) for d in spec["dirs"]]
+
+class Merged(StorageEngine):
+    # all shards share ONE internal id space, so their slabs concatenate
+    # into a single engine — the subprocess-side gather
+    def _slabs(self):
+        for s in snaps:
+            yield from s.storage_engine()._slabs()
+
+eng = Merged(snaps[0].tree)
+out = {}
+for v in spec["vertices"]:
+    vals, _ = eng.out_neighbors_batch([v])
+    out[f"out_{v}"] = np.sort(vals)
+fof = two_hop_counts(eng, np.asarray(spec["seeds"], np.int64))
+out["fof_ids"] = fof.ids
+out["fof_counts"] = fof.counts
+out["fof_offsets"] = fof.offsets
+np.savez(spec["out"], **out)
+"""
+
+
+def test_subprocess_reads_pinned_view_bitwise(stores, tmp_path):
+    """A subprocess opens every shard's exported session dir and must
+    return bitwise-identical out_neighbors and FoF to the live in-process
+    epoch view — while a concurrent writer keeps mutating the store."""
+    import json
+    router, _, src, _ = stores
+    stop = threading.Event()
+    dirs = []
+
+    def writer():
+        rng = np.random.default_rng(99)
+        while not stop.is_set():
+            router.insert_edges(rng.integers(0, N_ID, 64),
+                                rng.integers(0, N_ID, 64))
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        with router.pin_view() as view:
+            dirs = view.begin_snapshot_dirs()
+            vertices = [int(v) for v in np.unique(src[:8])]
+            seeds = [int(v) for v in np.unique(src[8:24])]
+            expect = {f"out_{v}": np.sort(view.out_neighbors(v))
+                      for v in vertices}
+            eng = view.storage_engine()
+            fof = two_hop_counts(eng, np.asarray(seeds, np.int64))
+
+            spec = {"dirs": dirs, "vertices": vertices, "seeds": seeds,
+                    "out": str(tmp_path / "got.npz")}
+            spec_path = str(tmp_path / "spec.json")
+            with open(spec_path, "w") as f:
+                json.dump(spec, f)
+            env = dict(os.environ)
+            env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+            proc = subprocess.run(
+                [sys.executable, "-c", _SUBPROC, spec_path],
+                capture_output=True, text=True, env=env, timeout=300)
+            assert proc.returncode == 0, proc.stderr
+
+            got = np.load(spec["out"])
+            for v in vertices:
+                assert np.array_equal(got[f"out_{v}"], expect[f"out_{v}"])
+            assert np.array_equal(got["fof_ids"], fof.ids)
+            assert np.array_equal(got["fof_counts"], fof.counts)
+            assert np.array_equal(got["fof_offsets"], fof.offsets)
+
+            # the writer really did race: the live state moved past the pin
+            stop.set()
+            t.join()
+            assert router.n_edges > view.n_edges
+    finally:
+        stop.set()
+        t.join()
+        for d in dirs:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# view-addressed snapshots (ManifestView across the boundary)
+# ---------------------------------------------------------------------------
+class TestViewAddressedSnapshot:
+    def test_pins_past_epoch_exactly(self, tmp_path):
+        svc = ServiceDB.create(str(tmp_path / "db"), max_id=N_ID, **DB_KW)
+        try:
+            src, dst = _edges(seed=11, n=5000)
+            svc.insert_edges(src, dst)
+            view = svc.read_view()
+            svc.insert_edges(src + 1, dst)  # the view must NOT see these
+            snap = svc.begin_snapshot(view=view)
+            try:
+                assert snap.n_edges == view.n_edges == src.shape[0]
+                M = np.int64(N_ID + 1)
+                vs, vd = view.to_coo()
+                ss, sd = snap.to_coo()
+                assert np.array_equal(
+                    np.sort(np.asarray(vs) * M + np.asarray(vd)),
+                    np.sort(np.asarray(ss) * M + np.asarray(sd)))
+            finally:
+                snap.release()
+            view.release()
+        finally:
+            svc.close()
+
+    def test_checkpointed_past_view_is_rejected_typed(self, tmp_path):
+        svc = ServiceDB.create(str(tmp_path / "db"), max_id=N_ID, **DB_KW)
+        try:
+            svc.insert_edges(*_edges(seed=12, n=3000))
+            view = svc.read_view()
+            svc.insert_edges([1], [2])
+            svc.checkpoint()  # manifest now covers past the view
+            with pytest.raises(ValueError):
+                svc.begin_snapshot(view=view)
+            view.release()
+        finally:
+            svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Snapshot path-relativity (satellite)
+# ---------------------------------------------------------------------------
+class TestSnapshotRelocatable:
+    def _mk(self, tmp_path):
+        svc = ServiceDB.create(str(tmp_path / "db"), max_id=N_ID, **DB_KW)
+        src, dst = _edges(seed=21, n=4000)
+        svc.insert_edges(src, dst)
+        svc.checkpoint()  # disk partitions: the lazily-mmapped hazard
+        return svc, src
+
+    def test_moved_session_dir_opens(self, tmp_path):
+        svc, src = self._mk(tmp_path)
+        try:
+            snap = svc.begin_snapshot()
+            expect = {int(v): np.sort(snap.out_neighbors(int(v)))
+                      for v in src[:5]}
+            snap.close()
+            moved = str(tmp_path / "elsewhere" / "session")
+            os.makedirs(os.path.dirname(moved))
+            shutil.move(snap.dir, moved)
+            reopened = Snapshot.open(moved)
+            for v, nb in expect.items():
+                assert np.array_equal(np.sort(reopened.out_neighbors(v)), nb)
+            reopened.release()
+        finally:
+            svc.close()
+
+    def test_relative_path_survives_chdir(self, tmp_path):
+        svc, src = self._mk(tmp_path)
+        cwd = os.getcwd()
+        try:
+            snap = svc.begin_snapshot()
+            v = int(src[0])
+            expect = np.sort(snap.out_neighbors(v))
+            snap.close()
+            os.chdir(os.path.dirname(snap.dir))
+            # open via a RELATIVE path, then chdir away BEFORE any read:
+            # partition mmaps open lazily, so only abspath-at-open survives
+            rel = Snapshot.open(os.path.basename(snap.dir))
+            os.chdir(str(tmp_path))
+            assert np.array_equal(np.sort(rel.out_neighbors(v)), expect)
+            rel.close()
+        finally:
+            os.chdir(cwd)
+            svc.close()
