@@ -34,6 +34,11 @@ Six sections:
   6. `checksum` (ISSUE 7): the full durable write path and reads with
      end-to-end CRCs on vs off — checksumming must cost < 5% in-run
      (`CHECKSUM_GATE`).
+  7. `observability` (ISSUE 9): the same durable insert path and a
+     fixed-work 2-thread contended read with the telemetry registry
+     enabled vs the global kill-switch off — full instrumentation (WAL
+     latency histograms, read-heat counters, job/hop spans) must cost
+     < 3% in-run (`TELEMETRY_GATE`).
 
 Gates are *in-run relative* (service path vs plain path measured on the
 same machine seconds apart) because the committed BENCH_insert/BENCH_query
@@ -78,6 +83,13 @@ P99_UNCONTENDED_X = 25.0
 # CONTENDED_GATE_X_SMOKE); the <5% contract is the full-scale run's.
 CHECKSUM_GATE = 0.95
 CHECKSUM_GATE_SMOKE = 0.80
+# ISSUE 9: full telemetry (counters + histograms + spans, per-thread
+# cells, no locks on the hot path) must keep >= 97% of the disabled
+# path's speed (< 3% overhead) on both the durable insert path and a
+# contended fixed-work read. Smoke-scale runs are ~100ms per arm where
+# scheduler jitter dominates, so CI tolerates more noise.
+TELEMETRY_GATE = 0.97
+TELEMETRY_GATE_SMOKE = 0.85
 
 
 def _best_of(fn, n=3):
@@ -211,6 +223,90 @@ def bench_checksum(src, dst, n_vertices, workdir,
         "warm_read_ratio": (out["off"]["warm_read_s"]
                             / out["on"]["warm_read_s"]),
     })
+    return out
+
+
+def bench_observability(src, dst, n_vertices, workdir,
+                        frontier_size=2048, n_threads=2,
+                        read_iters=30) -> dict:
+    """ISSUE 9 tentpole gate: full instrumentation must be ~free. Times
+    (a) the durable service insert path (WAL append/fsync histograms,
+    collector-registered stats, tail gauges) and (b) a fixed-work
+    contended read — `n_threads` threads each running `read_iters`
+    per-query epoch-pinned frontier expansions (read-heat counters, hop
+    spans) — with the registry enabled vs the global kill-switch off.
+    Arms are interleaved and each takes its min-of-reps, so cache/fsync
+    drift hits both equally; the enabled arm must additionally prove it
+    recorded something (a zero-overhead no-op instrument would pass the
+    ratio gate vacuously)."""
+    from repro.core import ServiceDB, telemetry
+
+    rng = np.random.default_rng(23)
+    frontier = np.unique(rng.integers(0, n_vertices, frontier_size))
+
+    def insert_once():
+        d = os.path.join(workdir, f"obs_{time.monotonic_ns()}")
+        svc = ServiceDB.create(d, checkpoint_interval_ops=10 ** 9,
+                               **_db_opts(n_vertices))
+        svc.insert_edges(src, dst)
+        svc.close()
+        shutil.rmtree(d)
+
+    # one persistent store for the read arm (fixed work, not fixed time:
+    # a duration-based loop would hide overhead as lower throughput)
+    d = os.path.join(workdir, "obs_read")
+    rsvc = ServiceDB.create(d, checkpoint_interval_ops=10 ** 9,
+                            **_db_opts(n_vertices))
+    rsvc.insert_edges(src, dst)
+    rsvc.checkpoint()
+
+    def read_once():
+        def worker():
+            for _ in range(read_iters):
+                with rsvc.read_view() as view:
+                    view.storage_engine().out_neighbors_batch(frontier)
+        ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+
+    read_once()  # warm the page cache / decode paths before either arm
+    times = {"insert": {"on": [], "off": []},
+             "read": {"on": [], "off": []}}
+    appends_on = 0
+    arms = (("on", True), ("off", False))
+    try:
+        for rep in range(5):
+            # alternate arm order per rep: drift (cpu frequency, page
+            # cache, allocator state) must not systematically favor
+            # whichever arm runs second
+            for mode, enabled in (arms if rep % 2 == 0 else arms[::-1]):
+                telemetry.set_enabled(enabled)
+                t0 = time.perf_counter()
+                insert_once()
+                times["insert"][mode].append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                read_once()
+                times["read"][mode].append(time.perf_counter() - t0)
+                if enabled:
+                    snap = telemetry.snapshot()
+                    appends_on = int(snap["counters"].get("wal.appends", 0))
+    finally:
+        telemetry.set_enabled(True)
+    rsvc.close()
+    shutil.rmtree(d, ignore_errors=True)
+    out = {
+        "n_edges": int(src.shape[0]),
+        "n_read_threads": n_threads,
+        "read_iters": read_iters,
+        "insert": {m: min(v) for m, v in times["insert"].items()},
+        "read": {m: min(v) for m, v in times["read"].items()},
+        # >= 1 means telemetry is free; the gate allows down to 0.97
+        "wal_appends_recorded": appends_on,
+    }
+    out["insert_ratio"] = out["insert"]["off"] / out["insert"]["on"]
+    out["read_ratio"] = out["read"]["off"] / out["read"]["on"]
     return out
 
 
@@ -642,6 +738,8 @@ def run(scale: float = 1.0, smoke: bool = False,
         "p99_uncontended_x": P99_UNCONTENDED_X,
         "checksum_gate": (CHECKSUM_GATE_SMOKE if smoke
                           else CHECKSUM_GATE),
+        "telemetry_gate": (TELEMETRY_GATE_SMOKE if smoke
+                           else TELEMETRY_GATE),
         "committed_baselines": _committed_baselines(),
     })
 
@@ -727,6 +825,23 @@ def run(scale: float = 1.0, smoke: bool = False,
                   f"{crc['write_ratio']:.3f}); warm read ratio "
                   f"{crc['warm_read_ratio']:.3f}; cold (first-touch "
                   f"verify) ratio {crc['cold_read_ratio']:.3f}")
+        if want("observability"):
+            # like checksum: the gate divides two times, so floor the
+            # workload regardless of --scale (fsync jitter at smoke scale)
+            if n_edges >= 300_000:
+                on_vertices, osrc, odst = n_vertices, src, dst
+            else:
+                on_vertices = max(n_vertices, 30_000)
+                osrc, odst = power_law_graph(on_vertices, 300_000, seed=2)
+            print(f"  observability: {osrc.shape[0]} edges, insert + "
+                  f"contended read, telemetry on vs off (ISSUE 9) ...")
+            payload["observability"] = obs = bench_observability(
+                osrc, odst, on_vertices, workdir)
+            print(f"    insert on {obs['insert']['on']:.2f}s / off "
+                  f"{obs['insert']['off']:.2f}s (ratio "
+                  f"{obs['insert_ratio']:.3f}); contended read ratio "
+                  f"{obs['read_ratio']:.3f}; "
+                  f"{obs['wal_appends_recorded']} WAL appends recorded")
     finally:
         shutil.rmtree(workdir, ignore_errors=True)
 
@@ -756,6 +871,20 @@ def run(scale: float = 1.0, smoke: bool = False,
                 f"{crc['write_ratio']:.2f}x / warm read "
                 f"{crc['warm_read_ratio']:.2f}x the unchecksummed path "
                 f"(< {crc_gate})")
+    obs = payload.get("observability")
+    if want("observability") and obs:
+        obs_gate = payload["telemetry_gate"]
+        worst = min(obs["insert_ratio"], obs["read_ratio"])
+        if worst < obs_gate:
+            failures.append(
+                f"telemetry overhead past the gate: insert "
+                f"{obs['insert_ratio']:.2f}x / contended read "
+                f"{obs['read_ratio']:.2f}x the disabled path "
+                f"(< {obs_gate})")
+        if obs["wal_appends_recorded"] <= 0:
+            failures.append(
+                "telemetry arm recorded no WAL appends — the instrumented "
+                "path did not actually instrument")
     if want("contended") and cont:
         gate_x = payload["contended_gate_x"]
         if cont["speedup"] < gate_x:
@@ -787,7 +916,8 @@ def main() -> None:
                     help="tiny scale + enforce the regression gates")
     ap.add_argument("--section", default="all",
                     choices=["all", "base", "insert", "query", "readers",
-                             "contended", "checksum", "zipf"])
+                             "contended", "checksum", "zipf",
+                             "observability"])
     args = ap.parse_args()
     run(scale=args.scale if not args.smoke else min(args.scale, 0.05),
         smoke=args.smoke, section=args.section)

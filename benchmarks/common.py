@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 from contextlib import contextmanager
 
@@ -11,7 +13,42 @@ import numpy as np
 OUT_DIR = "experiments/bench"
 
 
+def provenance() -> dict:
+    """Environment fingerprint stamped into every BENCH_*.json: without it
+    a regression report can't distinguish 'code got slower' from 'ran on a
+    different box / backend'. Every probe is best-effort — benches must
+    not fail because git or jax is absent."""
+    doc = {
+        "python": sys.version.split()[0],
+        "cpu_count": os.cpu_count(),
+        "platform": sys.platform,
+    }
+    try:
+        doc["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        doc["git_sha"] = None
+    try:
+        import jax
+        doc["jax_version"] = jax.__version__
+        doc["jax_backend"] = jax.default_backend()
+    except Exception:
+        doc["jax_version"] = None
+        doc["jax_backend"] = None
+    return doc
+
+
 def save(name: str, payload: dict) -> None:
+    payload = dict(payload)
+    payload.setdefault("provenance", provenance())
+    try:
+        from repro.core import telemetry
+        payload.setdefault("metrics", telemetry.snapshot())
+    except Exception:
+        pass
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)

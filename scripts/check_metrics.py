@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Telemetry catalog lint (ISSUE 9), the check_failpoints.py pattern
+applied to the metrics/span CATALOG — three invariants:
+
+  1. every literal name handed to a telemetry API in src/
+     (`counter("...")`, `gauge(...)`, `histogram(...)`, `span(...)`)
+     is in the CATALOG. The registry enforces this at runtime too
+     (KeyError), but an instrument on a cold path would only blow up in
+     production; the lint catches it at CI time. Names under the
+     `x.` escape prefix are caller-owned (tests) and exempt.
+  2. the API kind at each call site matches the catalog kind — a
+     `counter("wal.fsync.seconds")` where the catalog says histogram is
+     a unit bug the runtime check cannot see.
+  3. every CATALOG name appears as a quoted literal somewhere in src/
+     outside telemetry.py — a catalog entry whose instrument was
+     refactored away is a lie (collector name-maps like
+     `{"inserts": "lsm.inserts"}` count: the literal is the wiring).
+
+Exit 1 with a listing on any miss. Run from the repo root:
+
+    PYTHONPATH=src python scripts/check_metrics.py
+"""
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.core.telemetry import CATALOG, ESCAPE_PREFIX  # noqa: E402
+
+# an instrument call site in product code: counter("a.b"), span("a.b", ...)
+API_RE = re.compile(
+    r"\b(counter|gauge|histogram|span)\(\s*[\"']([^\"']+)[\"']")
+# any quoted dotted-lowercase literal (catalog wiring, name maps)
+LITERAL_RE = re.compile(r"[\"']([a-z]+(?:\.[A-Za-z_0-9]+){1,3})[\"']")
+
+
+def _src_files():
+    root = os.path.join(REPO, "src")
+    for dirpath, _, files in os.walk(root):
+        for fn in files:
+            # telemetry.py defines the catalog and the mechanism; its
+            # own literals are declarations, not instruments
+            if not fn.endswith(".py") or fn == "telemetry.py":
+                continue
+            yield os.path.join(dirpath, fn)
+
+
+def api_sites():
+    """Map (kind, name) -> src files with a literal instrument call."""
+    found = {}
+    for path in _src_files():
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for m in API_RE.finditer(text):
+            found.setdefault((m.group(1), m.group(2)), set()).add(
+                os.path.relpath(path, REPO))
+    return found
+
+
+def quoted_literals():
+    """Every dotted quoted literal in src/ — catalog wiring evidence."""
+    found = set()
+    for path in _src_files():
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for m in LITERAL_RE.finditer(text):
+            found.add(m.group(1))
+    return found
+
+
+def main() -> int:
+    sites = api_sites()
+    uncataloged = sorted(
+        (kind, name) for (kind, name) in sites
+        if name not in CATALOG and not name.startswith(ESCAPE_PREFIX))
+    mismatched = sorted(
+        (kind, name, CATALOG[name][0]) for (kind, name) in sites
+        if name in CATALOG and CATALOG[name][0] != kind)
+    wired = quoted_literals()
+    orphaned = sorted(n for n in CATALOG if n not in wired)
+    rc = 0
+    if uncataloged:
+        rc = 1
+        print("UNCATALOGED metric names (add them to telemetry.CATALOG):")
+        for kind, name in uncataloged:
+            print(f"  {kind}({name!r})  "
+                  f"({', '.join(sorted(sites[(kind, name)]))})")
+    if mismatched:
+        rc = 1
+        print("KIND MISMATCH (call-site API vs catalog declaration):")
+        for kind, name, want in mismatched:
+            print(f"  {kind}({name!r}) but the catalog declares {want}  "
+                  f"({', '.join(sorted(sites[(kind, name)]))})")
+    if orphaned:
+        rc = 1
+        print("ORPHANED catalog entries (no literal in src/ wires them — "
+              "stale declaration?):")
+        for name in orphaned:
+            print(f"  {name}")
+    if rc == 0:
+        print(f"ok: all {len(CATALOG)} catalog names are wired in src/ and "
+              f"every instrument call site is cataloged")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,12 @@ from typing import List, Tuple
 
 import numpy as np
 
+from . import telemetry
+
+_M_BLOCK_READS = telemetry.counter("codec.block_reads")
+_M_CHUNK_DECODES = telemetry.counter("codec.chunk_decodes")
+_M_BLOCK_DECODES = telemetry.counter("codec.block_decodes")
+
 __all__ = [
     "elias_gamma_encode",
     "elias_gamma_decode",
@@ -380,6 +386,7 @@ class BlockedGammaPointer:
     def _decode_blocks(self, blocks: np.ndarray) -> np.ndarray:
         """(len(blocks), block) matrix of VALUES, padded with int64 max."""
         K = self.block
+        _M_BLOCK_DECODES.inc(int(blocks.shape[0]))
         deltas = gamma_decode_block_deltas(
             self.packed, self.nbits, self.offsets, blocks, self.n - 1, K)
         vals = np.empty((blocks.shape[0], K), np.int64)
@@ -452,6 +459,7 @@ class SparseIndex:
         lo = j * self.stride
         hi = min(lo + self.stride, self.keys.shape[0])
         self.block_reads += 1
+        _M_BLOCK_READS.inc()
         i = lo + int(np.searchsorted(self.keys[lo:hi], k))
         if i < hi and self.keys[i] == k:
             return i
@@ -483,6 +491,7 @@ class GammaChunkedIndex:
     def decode_chunk(self, j: int) -> np.ndarray:
         packed, nbits, first, n = self.blobs[j]
         self.chunk_decodes += 1
+        _M_CHUNK_DECODES.inc()
         return decode_monotonic(packed, nbits, first, n)
 
     def decode_all(self) -> np.ndarray:

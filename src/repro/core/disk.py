@@ -45,6 +45,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from . import telemetry
 from .codec import (
     GAMMA_BLOCK,
     BlockedGammaPointer,
@@ -82,6 +83,13 @@ _MAGIC = b"PALPART1"
 _ALIGN = 64
 _PTR_ARRAYS = ("src_vertices", "src_ptr", "dst_vertices", "dst_ptr")
 
+# process-wide disk-tier accounting (ISSUE 9): IOStats instances keep their
+# per-store attributes, and ALSO write through to the registry so one
+# snapshot unifies every store/snapshot/shard-worker in the process
+_M_DISK_BLOCKS = telemetry.counter("disk.block_reads")
+_M_DISK_BYTES = telemetry.counter("disk.bytes_read")
+_M_DISK_GATHERS = telemetry.counter("disk.gathers")
+
 
 # ---------------------------------------------------------------------------
 # Block-read accounting
@@ -103,18 +111,28 @@ class IOStats:
             return
         pos = np.asarray(pos, np.int64)
         blocks = np.unique(pos * itemsize // self.block_size)
-        self.block_reads += int(blocks.shape[0])
-        self.bytes_read += int(pos.shape[0]) * itemsize
+        nb = int(blocks.shape[0])
+        nbytes = int(pos.shape[0]) * itemsize
+        self.block_reads += nb
+        self.bytes_read += nbytes
         self.gathers += 1
+        _M_DISK_BLOCKS.inc(nb)
+        _M_DISK_BYTES.inc(nbytes)
+        _M_DISK_GATHERS.inc()
 
     def account_range(self, a: int, b: int, itemsize: int) -> None:
         if b <= a:
             return
         lo = a * itemsize // self.block_size
         hi = (b * itemsize - 1) // self.block_size
-        self.block_reads += int(hi - lo + 1)
-        self.bytes_read += (b - a) * itemsize
+        nb = int(hi - lo + 1)
+        nbytes = (b - a) * itemsize
+        self.block_reads += nb
+        self.bytes_read += nbytes
         self.gathers += 1
+        _M_DISK_BLOCKS.inc(nb)
+        _M_DISK_BYTES.inc(nbytes)
+        _M_DISK_GATHERS.inc()
 
     def snapshot(self) -> Dict[str, int]:
         return {"block_reads": self.block_reads, "bytes_read": self.bytes_read,
@@ -1445,6 +1463,7 @@ class RawDiskIndex:
 
     def _read_block(self, b: int) -> np.ndarray:
         self.block_reads += 1
+        telemetry.counter("codec.block_reads").inc()
         lo = b * self.keys_per_block
         hi = min(lo + self.keys_per_block, self.n)
         raw = os.pread(self._fd, (hi - lo) * 8, self.offset + lo * 8)
@@ -1501,6 +1520,7 @@ class SparseDiskIndex:
         lo = j * self.stride
         hi = min(lo + self.stride, self.raw.n)
         self.raw.block_reads += 1
+        telemetry.counter("codec.block_reads").inc()
         raw = os.pread(self.raw._fd, (hi - lo) * 8, self.raw.offset + lo * 8)
         blk = np.frombuffer(raw, np.int64)
         i = int(np.searchsorted(blk, k))

@@ -30,6 +30,13 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import telemetry
+
+# per-interval read heat (ISSUE 9): every edge position a disk-tier slab
+# serves is charged to its interval — the input the ROADMAP's heat-aware
+# merge scheduling reads
+_M_READ_HEAT = telemetry.counter("disk.interval.read_edges")
+
 __all__ = [
     "EdgeBatch",
     "EdgeChunk",
@@ -115,6 +122,8 @@ class _PartitionSlab:
         # every gather from the edge arrays below is a real page-cache read
         # of only the hit ranges, and we account the blocks it touches
         self.io = getattr(part, "io", None)
+        self._heat_label = (f"{self.interval[0]}:{self.interval[1]}"
+                            if self.io is not None else None)
         self.n_edges = part.n_edges
         # chunked-decode hook, resolved once (slabs are reused across a
         # manifest's whole pin lifetime): None for RAM partitions and for
@@ -154,6 +163,8 @@ class _PartitionSlab:
         if part.dead is not None and pos.size:
             live = ~part.dead[pos]
             pos, owner = pos[live], owner[live]
+        if self._heat_label is not None and pos.size:
+            _M_READ_HEAT.inc(int(pos.size), label=self._heat_label)
         return pos, owner
 
     def src_at(self, pos):

@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import telemetry
 from .manifest import EpochGuard, LevelManifest, ManifestPartition, ManifestView
 from .pal import (
     _MAX_PACKED_BOUND,
@@ -299,6 +300,19 @@ def _default_wal_path() -> str:
         f"graphchi_db_{os.getpid()}_{next(_WAL_COUNTER)}.wal")
 
 
+# registry names for the LSMStats collector (ISSUE 9) — live instances
+# (trees of stores AND of open snapshots) are summed at snapshot time
+_LSM_STATS_METRICS = {
+    "inserts": "lsm.inserts",
+    "buffer_flushes": "lsm.buffer_flushes",
+    "pushdown_merges": "lsm.pushdown_merges",
+    "edges_rewritten": "lsm.edges_rewritten",
+    "splits": "lsm.splits",
+    "deletes": "lsm.deletes",
+    "purged_tombstones": "lsm.purged_tombstones",
+}
+
+
 @dataclasses.dataclass
 class LSMStats:
     inserts: int = 0
@@ -399,6 +413,10 @@ class LSMTree:
         self.max_partition_edges = max_partition_edges
         self.column_dtypes = dict(column_dtypes or {})
         self.stats = LSMStats()
+        # ISSUE 9: fold the per-tree counter bag into telemetry snapshots
+        # (read-side collector — the attributes above stay the live state
+        # and the `+=` write path is untouched)
+        telemetry.register_stats(self.stats, _LSM_STATS_METRICS)
 
         # level i has p / f^(L-1-i) partitions; level L-1 has p
         self.levels: List[List[EdgePartition]] = []

@@ -43,6 +43,14 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from . import telemetry
+
+_M_PUBLISHES = telemetry.counter("manifest.publishes")
+_M_PINS = telemetry.counter("manifest.pins")
+_M_RETIRES = telemetry.counter("manifest.retires")
+_M_EPOCH = telemetry.gauge("manifest.epoch")
+_M_PIN_LAG = telemetry.gauge("manifest.pin_lag")
+
 __all__ = [
     "EpochGuard",
     "LevelManifest",
@@ -200,6 +208,7 @@ class EpochGuard:
         reclaimed) the manifest between our read and our pin becoming
         visible, the re-check fails and we retry on the new current."""
         slot = self._slot()
+        _M_PINS.inc()
         while True:
             m = self.current
             slot.pins.append(m.version)
@@ -214,6 +223,8 @@ class EpochGuard:
     def publish(self, manifest: LevelManifest) -> None:
         old = self.current
         self.current = manifest  # the atomic swap: readers see old or new
+        _M_PUBLISHES.inc()
+        _M_EPOCH.set(manifest.version)
         if old is not None:
             if not self._slots:
                 # fast path: no reader thread has EVER registered a pin
@@ -221,6 +232,8 @@ class EpochGuard:
                 # precedes pinning, and a pin of `old` validated before
                 # this swap implies its slot was already visible here
                 self._retired.clear()
+                _M_RETIRES.inc()  # `old` reclaimed immediately
+                _M_PIN_LAG.set(0)
             else:
                 self._retired.append(old)
                 self.trim()
@@ -268,10 +281,18 @@ class EpochGuard:
         if not self._retired:
             return 0
         pins = self.pinned_versions()
+        before = len(self._retired)
         if not pins:
             self._retired.clear()
         else:
             self._retired = [m for m in self._retired if m.version in pins]
+        dropped = before - len(self._retired)
+        if dropped:
+            _M_RETIRES.inc(dropped)
+        cur = self.current
+        if cur is not None:
+            oldest = min(pins) if pins else cur.version
+            _M_PIN_LAG.set(int(cur.version - oldest))
         return len(self._retired)
 
     def live_manifests(self) -> List[LevelManifest]:

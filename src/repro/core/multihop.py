@@ -39,11 +39,16 @@ from __future__ import annotations
 
 import dataclasses
 import operator
+import time
 from typing import Any, Optional, Sequence
 
 import numpy as np
 
+from . import telemetry
 from .engine import StorageEngine, _expand_ranges, as_engine
+
+_M_HOPS = telemetry.counter("multihop.hops")
+_M_HOP_S = telemetry.histogram("multihop.hop.seconds")
 
 GraphLike = Any
 
@@ -325,19 +330,25 @@ def khop(g: GraphLike, seeds, k: int, direction: str = "out",
     frontier = compact_frontier(seeds)
     visited = frontier
     levels = [frontier]
-    for _ in range(k):
+    for hop in range(k):
         if frontier.shape[0] == 0:
             break
         mode = _hop_mode(eng, frontier.shape[0], dense, dense_threshold,
                          predicate)
-        if mode == "kernel":
-            nxt = _expand_dense(eng, frontier, direction)
-        elif mode == "stream":
-            nxt = _expand_stream(eng, frontier, direction)
-        else:
-            _, nb = eng.expand_frontier(frontier, direction, predicate)
-            nxt = np.unique(nb)
-        fresh = _setdiff_sorted(nxt, visited)
+        with telemetry.span("multihop.hop", hop=hop, mode=mode,
+                            frontier=int(frontier.shape[0])) as sp:
+            t0 = time.perf_counter()
+            if mode == "kernel":
+                nxt = _expand_dense(eng, frontier, direction)
+            elif mode == "stream":
+                nxt = _expand_stream(eng, frontier, direction)
+            else:
+                _, nb = eng.expand_frontier(frontier, direction, predicate)
+                nxt = np.unique(nb)
+            fresh = _setdiff_sorted(nxt, visited)
+            sp.tag(fresh=int(fresh.shape[0]))
+            _M_HOPS.inc(label=mode)
+            _M_HOP_S.observe(time.perf_counter() - t0)
         if fresh.shape[0] == 0:
             break
         visited = _union_sorted(visited, fresh)
@@ -384,6 +395,14 @@ def two_hop_counts(g: GraphLike, seeds, direction: str = "out",
     `query.friends_of_friends`. `dense="kernel"` routes both hops through
     the Pallas frontier-expansion plan (requires no predicate/truncation);
     results are bitwise-identical to the sparse path (§10.4)."""
+    n_seeds = int(np.asarray(seeds).size)
+    with telemetry.span("multihop.two_hop", seeds=n_seeds, dense=dense):
+        return _two_hop_counts(g, seeds, direction, max_friends, exclude,
+                               predicate, dense)
+
+
+def _two_hop_counts(g, seeds, direction, max_friends, exclude, predicate,
+                    dense) -> TwoHopResult:
     eng = as_engine(g)
     seeds = np.asarray(seeds, np.int64).ravel()
     S = seeds.shape[0]

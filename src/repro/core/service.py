@@ -73,6 +73,7 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from . import telemetry
 from .disk import DiskPartition, GraphDB, open_partition_file, replay_ops
 from .failpoints import failpoint
 from .integrity import ReadOnlyError
@@ -96,6 +97,11 @@ _TAIL_CACHE_MAX = 4
 _TAIL_CACHE: "OrderedDict[tuple, list]" = OrderedDict()
 _TAIL_CACHE_LOCK = threading.Lock()
 _TAIL_CACHE_STATS = {"hits": 0, "misses": 0}
+_M_TAIL_HITS = telemetry.counter("service.tail_cache.hits")
+_M_TAIL_MISSES = telemetry.counter("service.tail_cache.misses")
+_M_WAL_TAIL = telemetry.gauge("service.wal_tail_bytes")
+_M_BACKLOG = telemetry.gauge("service.backlog_edges")
+_M_JOB_S = telemetry.histogram("service.job.seconds")
 
 
 def tail_cache_stats() -> Dict[str, int]:
@@ -110,8 +116,10 @@ def _cached_tail_ops(wal: SegmentedWAL, offset: int, end: int) -> list:
         if ops is not None:
             _TAIL_CACHE.move_to_end(key)
             _TAIL_CACHE_STATS["hits"] += 1
+            _M_TAIL_HITS.inc()
             return ops
         _TAIL_CACHE_STATS["misses"] += 1
+        _M_TAIL_MISSES.inc()
     # strict_head: a session dir is a CLOSED set of hard links — a missing
     # first segment is loss (someone deleted a link), never compaction
     ops = list(wal.replay(offset=offset, end=end, strict_head=True))
@@ -249,6 +257,24 @@ class ServiceStats:
     scrubs: int = 0           # background integrity scrub passes
 
 
+# registry names for the ServiceStats collector (ISSUE 9): the dataclass
+# stays the live state its `+=` sites mutate under the service lock;
+# telemetry.snapshot() reads it through a weakref at aggregation time
+_SERVICE_STATS_METRICS = {
+    "flushes": "service.flushes",
+    "checkpoints": "service.checkpoints",
+    "snapshots": "service.snapshots",
+    "backpressure_waits": "service.backpressure_waits",
+    "feedback_checkpoints": "service.feedback_checkpoints",
+    "max_concurrent_flushes": "service.max_concurrent_flushes",
+    "job_retries": "service.job_retries",
+    "poisoned_jobs": "service.poisoned_jobs",
+    "read_only_entries": "service.read_only_entries",
+    "read_only_exits": "service.read_only_exits",
+    "scrubs": "service.scrubs",
+}
+
+
 # __init__ kwargs that ServiceDB.create must keep for itself rather than
 # forward to GraphDB.create
 _SUPERVISION_KW = ("max_job_failures", "backoff_base_s", "backoff_max_s",
@@ -303,6 +329,7 @@ class ServiceDB:
         self.wal_tail_budget_bytes = int(wal_tail_budget_bytes)
         self.snapshot_open_budget_s = float(snapshot_open_budget_s)
         self.stats = ServiceStats()
+        telemetry.register_stats(self.stats, _SERVICE_STATS_METRICS)
         self._lock = threading.RLock()
         self._work = threading.Condition(self._lock)
         self._drained = threading.Condition(self._lock)
@@ -417,6 +444,10 @@ class ServiceDB:
         backpressure: block while the dirty set (buffered + in-flight
         drained edges) exceeds the bound."""
         self._ops_since_ckpt += n_ops
+        if telemetry.enabled():
+            _M_WAL_TAIL.set(int(self.wal_tail_bytes()))
+            _M_BACKLOG.set(int(self.tree.total_buffered()
+                               + self.tree.inflight_edges()))
         if self._pending_work():
             self._work.notify()
         waited = False
@@ -591,19 +622,45 @@ class ServiceDB:
         with self.read_view() as view:
             n_edges = view.n_edges
             epoch = view.version
+        tail = int(self.wal_tail_bytes())
+        backlog = int(self.tree.total_buffered()
+                      + self.tree.inflight_edges())
+        alive = bool(self._thread is not None and self._thread.is_alive())
+        poisoned = sorted(self._poisoned)
+        # metric-derived readiness (ISSUE 9 satellite): ready means "a new
+        # request will be served promptly AND durably" — not read-only, a
+        # live maintenance pipeline, the WAL tail within its replay budget,
+        # backlog under the backpressure bound, and no quarantined jobs
+        wal_tail_ok = tail <= self.wal_tail_budget_bytes
+        backlog_ok = backlog <= self.backpressure_edges
         return {
             "pid": os.getpid(),
             "n_edges": int(n_edges),
             "epoch": int(epoch),
             "read_only": bool(self.read_only),
             "read_only_reason": self.read_only_reason,
-            "wal_tail_bytes": int(self.wal_tail_bytes()),
+            "wal_tail_bytes": tail,
+            "wal_tail_budget_bytes": int(self.wal_tail_budget_bytes),
+            "wal_tail_ok": bool(wal_tail_ok),
             "buffered": int(self.tree.total_buffered()),
-            "poisoned_jobs": sorted(self._poisoned),
-            "maintenance_alive": bool(self._thread is not None
-                                      and self._thread.is_alive()),
+            "backlog_edges": backlog,
+            "backlog_ok": bool(backlog_ok),
+            "poisoned_jobs": poisoned,
+            "poisoned_count": len(poisoned),
+            "maintenance_alive": alive,
+            "ready": bool(not self.read_only and alive and wal_tail_ok
+                          and backlog_ok and not poisoned),
             "io": self.db.io.snapshot(),
         }
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """This process's aggregated telemetry (ISSUE 9): every registry
+        counter/gauge/histogram summed across threads, legacy stats bags
+        folded in. JSON-safe."""
+        return telemetry.snapshot()
+
+    def prometheus_text(self) -> str:
+        return telemetry.prometheus_text()
 
     # -- maintenance -----------------------------------------------------------
     def wal_tail_bytes(self) -> int:
@@ -704,12 +761,14 @@ class ServiceDB:
                             and self._backoff_ready("checkpoint")):
                         self._ckpt_running = True
                         self._pool.submit(self._run_job, "checkpoint",
-                                          self._checkpoint_job)
+                                          self._checkpoint_job,
+                                          ctx=telemetry.current_context())
                         submitted = True
                     if self._scrub_due():
                         self._scrubbing = True
                         self._pool.submit(self._run_job, "scrub",
-                                          self._scrub_job)
+                                          self._scrub_job,
+                                          ctx=telemetry.current_context())
                         submitted = True
                     if not submitted:
                         # work is pending but every eligible job is already
@@ -740,7 +799,8 @@ class ServiceDB:
             self.stats.max_concurrent_flushes = max(
                 self.stats.max_concurrent_flushes, len(self._flushing))
             self._pool.submit(self._run_job, f"flush:{j}",
-                              self._flush_job, j)
+                              self._flush_job, j,
+                              ctx=telemetry.current_context())
             submitted = True
             remaining -= n
             if remaining <= self.tree.buffer_cap:
@@ -856,13 +916,27 @@ class ServiceDB:
                 self._scrubbing = False
                 self._last_scrub = time.monotonic()
 
-    def _run_job(self, key: str, fn, *args) -> None:
-        try:
-            fn(*args)
-        except BaseException as e:
-            self._job_failed(key, e)
-        else:
-            self._job_ok(key)
+    def _run_job(self, key: str, fn, *args, ctx=None) -> None:
+        """Worker-pool entry point. `ctx` is the submitter's ambient
+        [trace_id, span_id] (ISSUE 9): the job's span joins the submitting
+        request's trace, so a write that triggered a flush shows the flush
+        inside its own trace."""
+        with telemetry.attach(ctx), \
+                telemetry.span("service.job", job=key) as sp:
+            t0 = time.perf_counter()
+            try:
+                fn(*args)
+            except BaseException as e:
+                self._job_failed(key, e)
+                with self._lock:
+                    sp.tag(error=type(e).__name__,
+                           retries=self._job_failures.get(key, 0),
+                           poisoned=key in self._poisoned,
+                           read_only=self.read_only)
+            else:
+                self._job_ok(key)
+            _M_JOB_S.observe(time.perf_counter() - t0,
+                             label=key.split(":", 1)[0])
 
     def _flush_job(self, j: int) -> None:
         """One pipelined flush: drain under the service lock (cheap —

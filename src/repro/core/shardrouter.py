@@ -72,6 +72,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import telemetry
 from .engine import StorageEngine
 from .failpoints import failpoint
 from .integrity import GraphDBError, checksum32
@@ -173,6 +174,13 @@ _HEADER = struct.Struct("<IIII")  # magic, payload_len, wsum32, status
 ST_REQUEST, ST_OK, ST_ERROR = 0, 1, 2
 _MAX_FRAME = 1 << 31
 
+_M_RPC_REQS = telemetry.counter("shard.rpc.requests")
+_M_RPC_S = telemetry.histogram("shard.rpc.seconds")
+_M_RPC_TX = telemetry.counter("shard.rpc.bytes_sent")
+_M_RPC_RX = telemetry.counter("shard.rpc.bytes_recv")
+_M_RPC_INFLIGHT = telemetry.counter("shard.rpc.inflight")
+_M_RESTARTS = telemetry.counter("shard.restarts")
+
 
 def encode_payload(meta: Dict[str, Any],
                    arrays: Optional[Dict[str, np.ndarray]] = None) -> bytes:
@@ -209,6 +217,7 @@ def send_frame(sock: socket.socket, status: int, meta: Dict[str, Any],
                arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
     payload = encode_payload(meta, arrays)
     failpoint("shard.rpc.send")
+    _M_RPC_TX.inc(len(payload))
     sock.sendall(_HEADER.pack(_MAGIC, len(payload), checksum32(payload),
                               status) + payload)
 
@@ -233,6 +242,7 @@ def recv_frame(sock: socket.socket
         raise ShardProtocolError(
             f"bad frame header (magic {magic:#x}, length {length})")
     payload = _recv_exact(sock, length)
+    _M_RPC_RX.inc(int(length))
     if checksum32(payload) != cksum:
         raise ShardProtocolError(
             f"frame checksum mismatch over {length} payload bytes")
@@ -323,6 +333,15 @@ class _Connection:
             return {"ok": True}, {}
         if op == "io_stats":
             return dict(svc.db.io.snapshot()), {}
+        if op == "telemetry":
+            # worker-side observability surface: this process's metric
+            # snapshot (exact-mergeable router-side) and, on request, its
+            # buffered Chrome trace events — both JSON, both ride in meta
+            doc: Dict[str, Any] = {"metrics": telemetry.snapshot()}
+            if kw.get("trace"):
+                doc["trace"] = telemetry.trace_events(
+                    clear=bool(kw.get("clear")))
+            return doc, {}
 
         # -- reads: answered from the pinned epoch (or a private pin) -------
         view = self._store(kw)
@@ -371,7 +390,14 @@ class _Connection:
                     return
                 try:
                     failpoint("shard.worker.op")
-                    rmeta, rarrays = self.handle(meta, arrays)
+                    # the router's trace context rides in meta["trace"];
+                    # attaching it here is what stitches worker spans into
+                    # the router-side trace (same trace id across processes)
+                    with telemetry.attach(meta.get("trace")), \
+                            telemetry.span("shard.op",
+                                           op=meta.get("op", "?"),
+                                           shard=self.state.shard_id):
+                        rmeta, rarrays = self.handle(meta, arrays)
                     send_frame(self.sock, ST_OK, rmeta, rarrays)
                 except BrokenPipeError:
                     return
@@ -601,6 +627,7 @@ class ShardRouter:
                     sp.proc.terminate()
                     sp.proc.join(timeout=10.0)
             self.restarts += 1
+            _M_RESTARTS.inc()
             sp.generation += 1
             self._spawn(sp)
             self._wait_ready(sp)
@@ -667,26 +694,42 @@ class ShardRouter:
         `ShardUnavailable` because the WAL may or may not have acknowledged
         the mutation, and replaying it blindly could double-apply."""
         sp = self.shards[shard_id]
-        for attempt in (0, 1):
-            try:
-                conn = self._conn(sp)
-                send_frame(conn, ST_REQUEST, {"op": op, "kw": kw}, arrays)
-                status, meta, rarrays = recv_frame(conn)
-            except (OSError, ConnectionError) as exc:
-                self._drop_conn(sp)
-                if not retry or attempt:
-                    raise ShardUnavailable(
-                        shard_id, f"{op} failed: {exc}") from exc
-                self.restart_shard(shard_id)
-                continue
-            except ShardProtocolError:
-                self._drop_conn(sp)  # a misframed stream is unrecoverable
-                raise
-            if status == ST_ERROR:
-                raise ShardRemoteError(shard_id, meta.get("kind", "Error"),
-                                       meta.get("message", ""))
-            return meta, rarrays
-        raise ShardUnavailable(shard_id, f"{op}: retry exhausted")
+        request = {"op": op, "kw": kw}
+        if telemetry.enabled():
+            # the caller's trace context (if any) crosses the process
+            # boundary in frame meta — a retried read after a respawn
+            # re-sends it, so the restarted worker joins the same trace
+            request["trace"] = telemetry.current_context()
+        t0 = time.perf_counter()
+        _M_RPC_INFLIGHT.inc()
+        try:
+            with telemetry.span("shard.rpc", shard=shard_id, op=op):
+                for attempt in (0, 1):
+                    try:
+                        conn = self._conn(sp)
+                        send_frame(conn, ST_REQUEST, request, arrays)
+                        status, meta, rarrays = recv_frame(conn)
+                    except (OSError, ConnectionError) as exc:
+                        self._drop_conn(sp)
+                        if not retry or attempt:
+                            raise ShardUnavailable(
+                                shard_id, f"{op} failed: {exc}") from exc
+                        self.restart_shard(shard_id)
+                        continue
+                    except ShardProtocolError:
+                        # a misframed stream is unrecoverable
+                        self._drop_conn(sp)
+                        raise
+                    if status == ST_ERROR:
+                        raise ShardRemoteError(shard_id,
+                                               meta.get("kind", "Error"),
+                                               meta.get("message", ""))
+                    return meta, rarrays
+                raise ShardUnavailable(shard_id, f"{op}: retry exhausted")
+        finally:
+            _M_RPC_INFLIGHT.inc(-1)
+            _M_RPC_REQS.inc(label=op)
+            _M_RPC_S.observe(time.perf_counter() - t0, label=str(shard_id))
 
     # -- write surface ---------------------------------------------------------
     def insert_edges(self, src, dst, etype=None, columns=None) -> None:
@@ -745,6 +788,60 @@ class ShardRouter:
         scatter/gather actually partitions the work)."""
         return [self._call(sp.shard_id, "io_stats", {})[0]
                 for sp in self.shards]
+
+    # -- observability ---------------------------------------------------------
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Router-process metrics plus every reachable worker's, with an
+        exact cross-process aggregate (histograms merge bucket-wise,
+        counters sum — telemetry.merge_snapshots). A dead shard is simply
+        absent from `shards`; it still counts in `aggregate` only through
+        whatever the router itself recorded about it."""
+        router = telemetry.snapshot()
+        shards = []
+        for sp in self.shards:
+            try:
+                meta, _ = self._call(sp.shard_id, "telemetry", {})
+                shards.append(meta["metrics"])
+            except (GraphDBError, OSError, ConnectionError):
+                pass
+        return {"router": router, "shards": shards,
+                "aggregate": telemetry.merge_snapshots([router] + shards)}
+
+    def trace_export(self, path: Optional[str] = None) -> Dict[str, Any]:
+        """One Chrome-trace-event document stitching the router's spans
+        with every worker's. Span timestamps are epoch microseconds, so
+        events from different processes align on a common axis; a query's
+        trace id ties its router-side span to the worker spans it caused
+        (they attached the context from frame meta). Loadable in
+        Perfetto / chrome://tracing."""
+        events = list(telemetry.trace_events())
+        for sp in self.shards:
+            try:
+                meta, _ = self._call(sp.shard_id, "telemetry",
+                                     {"trace": True})
+                events.extend(meta.get("trace", []))
+            except (GraphDBError, OSError, ConnectionError):
+                pass
+        return telemetry.trace_export(events=events, path=path)
+
+    def health_summary(self) -> Dict[str, Any]:
+        """Cluster-level readiness folded over per-shard health(): ready
+        iff every worker is alive and itself ready (WAL tail within
+        budget, backlog under backpressure, nothing poisoned, writable)."""
+        per = self.health()
+        alive = [h for h in per if h.get("alive")]
+        return {
+            "n_shards": len(per),
+            "alive": len(alive),
+            "ready": (len(alive) == len(per)
+                      and all(h.get("ready", False) for h in alive)),
+            "restarts": int(self.restarts),
+            "poisoned_count": sum(int(h.get("poisoned_count", 0))
+                                  for h in alive),
+            "backlog_edges": sum(int(h.get("backlog_edges", 0))
+                                 for h in alive),
+            "shards": per,
+        }
 
     def to_coo(self) -> Tuple[np.ndarray, np.ndarray]:
         ss, dd = [], []

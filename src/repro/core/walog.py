@@ -59,10 +59,12 @@ import json
 import os
 import struct
 import threading
+import time
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from . import telemetry
 from .failpoints import failpoint
 from .integrity import (
     CKSUM_ALGO,
@@ -80,6 +82,12 @@ _MAGIC = b"GCDBWAL1"
 REC_INSERT = 1
 REC_DELETE = 2
 REC_COLUMN = 3
+
+_M_APPENDS = telemetry.counter("wal.appends")
+_M_APPEND_BYTES = telemetry.counter("wal.append.bytes")
+_M_APPEND_S = telemetry.histogram("wal.append.seconds")
+_M_FSYNCS = telemetry.counter("wal.fsyncs")
+_M_FSYNC_S = telemetry.histogram("wal.fsync.seconds")
 
 _EDGE_DT = np.dtype([("s", "<i8"), ("d", "<i8"), ("t", "i1")])
 _INSERT_HDR = struct.Struct("<BI")
@@ -206,6 +214,7 @@ class SegmentedWAL:
     # -- appends ---------------------------------------------------------------
     def _append(self, payload: bytes) -> None:
         assert not self.readonly, "read-only WAL"
+        t0 = time.perf_counter()
         with self._lock:
             if self._seg_crc:
                 ck = (crc32 if self._seg_crc == 1
@@ -220,9 +229,15 @@ class SegmentedWAL:
             elif self.sync == "always":
                 self._f.flush()
                 failpoint("wal.append.fsync")
+                ts = time.perf_counter()
                 os.fsync(self._f.fileno())
+                _M_FSYNCS.inc()
+                _M_FSYNC_S.observe(time.perf_counter() - ts)
             if self._seg_bytes >= self.segment_bytes:
                 self._rotate()
+        _M_APPENDS.inc()
+        _M_APPEND_BYTES.inc(len(payload))
+        _M_APPEND_S.observe(time.perf_counter() - t0)
 
     def append_inserts(self, isrc, idst, etype,
                        columns: Optional[Dict[str, Any]] = None) -> None:
@@ -264,7 +279,10 @@ class SegmentedWAL:
             self._f.flush()
             if fsync:
                 failpoint("wal.append.fsync")
+                ts = time.perf_counter()
                 os.fsync(self._f.fileno())
+                _M_FSYNCS.inc()
+                _M_FSYNC_S.observe(time.perf_counter() - ts)
 
     def tail_offset(self) -> int:
         with self._lock:

@@ -39,6 +39,7 @@ from repro.core import (
     fp_set,
     khop,
     shard_of,
+    telemetry,
     two_hop_counts,
 )
 from repro.core import shardrouter as sr
@@ -508,3 +509,92 @@ class TestSnapshotRelocatable:
         finally:
             os.chdir(cwd)
             svc.close()
+
+
+# ---------------------------------------------------------------------------
+# cross-process trace stitching (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+def test_sharded_fof_single_trace(stores):
+    """One router-side query produces ONE trace: the root span's trace id
+    appears on router-side RPC spans AND on worker-side op spans from at
+    least two worker processes (the context rode in frame meta), and the
+    merged export is a loadable Chrome-trace document."""
+    import json
+    router, _, src, _ = stores
+    seeds = np.unique(src[:16])
+    with telemetry.span("x.fof.query") as root:
+        with consistent_engine(router) as eng:
+            two_hop_counts(eng, seeds)
+    doc = router.trace_export()
+    json.dumps(doc)  # Perfetto/chrome://tracing-loadable envelope
+    assert doc["traceEvents"]
+    evs = [e for e in doc["traceEvents"]
+           if e["args"].get("trace") == root.trace]
+    worker_pids = {sp.proc.pid for sp in router.shards}
+    pids = {e["pid"] for e in evs}
+    assert os.getpid() in pids  # the router's own spans
+    # the SAME trace reached >= 2 worker processes
+    assert len(pids & worker_pids) >= 2
+    assert any(e["name"] == "shard.rpc" and e["pid"] == os.getpid()
+               for e in evs)
+    assert any(e["name"] == "shard.op" and e["pid"] in worker_pids
+               for e in evs)
+    # spans are Chrome complete events on a shared epoch-us time axis
+    for e in evs:
+        assert e["ph"] == "X" and isinstance(e["ts"], int)
+
+
+def test_trace_stitches_across_worker_restart(tmp_path):
+    """A span held open across a worker kill + transparent read retry:
+    the respawned worker (new pid) serves the retried op under the SAME
+    trace id — the context re-ships with the retried frame."""
+    router = ShardRouter.create(str(tmp_path / "rt"), max_id=N_ID,
+                                n_shards=1, **DB_KW)
+    try:
+        src, dst = _edges(seed=31, n=2000)
+        router.insert_edges(src, dst)
+        old_pid = router.shards[0].proc.pid
+        with telemetry.span("x.restart.query") as root:
+            router.shards[0].proc.kill()
+            router.shards[0].proc.join()
+            router.out_neighbors(int(src[0]))  # retries across the respawn
+        assert router.restarts == 1
+        new_pid = router.shards[0].proc.pid
+        assert new_pid != old_pid
+        doc = router.trace_export()
+        evs = [e for e in doc["traceEvents"]
+               if e["args"].get("trace") == root.trace]
+        assert any(e["pid"] == new_pid and e["name"] == "shard.op"
+                   for e in evs)
+    finally:
+        router.close()
+
+
+def test_router_metrics_snapshot_aggregates(stores):
+    """metrics_snapshot() folds worker snapshots into one exact aggregate:
+    worker-side WAL appends and RPC byte counts all visible router-side."""
+    router, _, _, _ = stores
+    doc = router.metrics_snapshot()
+    assert len(doc["shards"]) == len(router.shards)
+    agg = doc["aggregate"]
+    assert set(agg["pids"]) >= {s["pid"] for s in doc["shards"]}
+    # every worker appended to its own WAL during the fixture's inserts
+    wal = sum(s["counters"].get("wal.appends", 0) for s in doc["shards"])
+    assert wal > 0
+    assert agg["counters"]["wal.appends"] >= wal
+    # both sides of the frame protocol counted bytes
+    assert doc["router"]["counters"]["shard.rpc.bytes_sent"] > 0
+    assert agg["counters"]["shard.rpc.bytes_recv"] > 0
+    reqs = doc["router"]["counters"]["shard.rpc.requests"]
+    assert isinstance(reqs, dict) and sum(reqs.values()) > 0
+
+
+def test_router_health_summary(stores):
+    router, _, _, _ = stores
+    h = router.health_summary()
+    assert h["n_shards"] == h["alive"] == len(router.shards)
+    assert h["ready"] is True
+    assert h["poisoned_count"] == 0
+    assert len(h["shards"]) == len(router.shards)
+    for per in h["shards"]:
+        assert per["alive"] and per["ready"]
