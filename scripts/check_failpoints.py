@@ -82,7 +82,8 @@ def main() -> int:
     # site: only flag ones appearing inside a =action spec to avoid
     # false positives on ordinary attribute access
     spec_re = re.compile(
-        r"([a-z]+(?:\.[A-Za-z_0-9]+){1,3})=(?:crash|raise|errno:[A-Z]+)")
+        r"([a-z]+(?:\.[A-Za-z_0-9]+){1,3})"
+        r"=(?:crash|raise|errno:[A-Z]+|delay:\d+|stall:\d+)")
     phantom = {}
     for d in SEARCH_DIRS:
         root = os.path.join(REPO, d)

@@ -15,6 +15,12 @@ applied to the metrics/span CATALOG — three invariants:
      outside telemetry.py — a catalog entry whose instrument was
      refactored away is a lie (collector name-maps like
      `{"inserts": "lsm.inserts"}` count: the literal is the wiring).
+  4. telemetry API calls in tests/ and benchmarks/ name cataloged (or
+     `x.`-escaped) metrics too — a test asserting on a phantom name
+     passes vacuously forever (ISSUE 10: the lifecycle gates read
+     counters like `shard.hedges.won` out of snapshots; a typo there
+     would gut the gate silently). Negative tests that deliberately
+     probe unknown names opt out with a trailing `# lint: phantom-ok`.
 
 Exit 1 with a listing on any miss. Run from the repo root:
 
@@ -70,6 +76,36 @@ def quoted_literals():
     return found
 
 
+TEST_DIRS = ("tests", "benchmarks")
+
+
+def test_phantoms():
+    """Map name -> test/benchmark files calling a telemetry API with a
+    name the catalog does not know (escape-prefixed names exempt)."""
+    found = {}
+    for d in TEST_DIRS:
+        root = os.path.join(REPO, d)
+        for dirpath, _, files in os.walk(root):
+            for fn in files:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path, encoding="utf-8") as f:
+                    lines = f.readlines()
+                for line in lines:
+                    # negative tests deliberately probe unknown names;
+                    # they opt out explicitly
+                    if "# lint: phantom-ok" in line:
+                        continue
+                    for m in API_RE.finditer(line):
+                        name = m.group(2)
+                        if (name not in CATALOG
+                                and not name.startswith(ESCAPE_PREFIX)):
+                            found.setdefault(name, set()).add(
+                                os.path.relpath(path, REPO))
+    return found
+
+
 def main() -> int:
     sites = api_sites()
     uncataloged = sorted(
@@ -80,6 +116,7 @@ def main() -> int:
         if name in CATALOG and CATALOG[name][0] != kind)
     wired = quoted_literals()
     orphaned = sorted(n for n in CATALOG if n not in wired)
+    phantoms = test_phantoms()
     rc = 0
     if uncataloged:
         rc = 1
@@ -99,9 +136,16 @@ def main() -> int:
               "stale declaration?):")
         for name in orphaned:
             print(f"  {name}")
+    if phantoms:
+        rc = 1
+        print("PHANTOM metric names in tests/benchmarks (not in the "
+              "CATALOG — typo?):")
+        for name, paths in sorted(phantoms.items()):
+            print(f"  {name}  ({', '.join(sorted(paths))})")
     if rc == 0:
-        print(f"ok: all {len(CATALOG)} catalog names are wired in src/ and "
-              f"every instrument call site is cataloged")
+        print(f"ok: all {len(CATALOG)} catalog names are wired in src/, "
+              f"every instrument call site is cataloged, and "
+              f"{'/'.join(TEST_DIRS)} name no phantom metrics")
     return rc
 
 

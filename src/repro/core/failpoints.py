@@ -29,6 +29,14 @@ Sites and policies:
       - `"errno:ENOSPC"` (any errno name) — raise `OSError(errno, ...)`
         exactly as the syscall under the site would,
       - `"raise"` — raise `FailpointError` (a typed, catchable fault),
+      - `"delay:50"` / `"stall:50"` — sleep that many MILLISECONDS at the
+        site, then continue (ISSUE 10): the gray-failure injector. A
+        crash or errno models a dead component; a delay models the far
+        more common *slow* one — the latency-chaos harness
+        (benchmarks/bench_chaos.py) arms `shard.worker.op=delay:50` with
+        a seeded probability to make one shard's tail heavy while every
+        byte stays correct. `stall` is an alias of `delay` (reads better
+        when the injected latency exceeds the caller's timeout),
       - any callable — invoked with the site name (custom behaviors).
 
 Arming:
@@ -58,6 +66,7 @@ import errno as _errno
 import os
 import random
 import threading
+import time
 from typing import Callable, Dict, Optional, Union
 
 __all__ = [
@@ -122,6 +131,8 @@ CATALOG: Dict[str, str] = {
     "shard.rpc.recv":       "a received frame's header+checksum verification",
     "shard.worker.op":      "a shard worker dispatching one decoded request",
     "shard.worker.serve":   "a spawned shard worker entering its accept loop",
+    # --- serving front end (core/frontdesk.py) ---
+    "frontdesk.dispatch":   "a front-desk dispatcher executing one batch",
 }
 
 
@@ -200,6 +211,12 @@ def _run_action(action, name: str):
     if isinstance(action, str) and action.startswith("errno:"):
         code = getattr(_errno, action[6:])
         raise OSError(code, f"injected {action[6:]} at failpoint {name}")
+    if isinstance(action, str) and (action.startswith("delay:")
+                                    or action.startswith("stall:")):
+        # injected latency, in milliseconds — the site then proceeds
+        # normally (the work completes, just late: a gray failure)
+        time.sleep(float(action.partition(":")[2]) / 1e3)
+        return
     raise ValueError(f"unknown failpoint action {action!r} at {name}")
 
 

@@ -37,8 +37,13 @@ The error taxonomy is the contract "fail typed, never garbage":
     │   └── WALCorruptionError   a WAL record body failed its CRC
     ├── RecoveryError       recovery inputs are structurally impossible
     │   └── WALGapError     the segment chain has a hole (missing segment)
-    └── ReadOnlyError       the service shed to read-only mode; writes are
-                            rejected until the condition clears
+    ├── ReadOnlyError       the service shed to read-only mode; writes are
+    │                       rejected until the condition clears
+    ├── DeadlineExceeded    the request's time budget ran out before the
+    │                       work completed (ISSUE 10; also a TimeoutError)
+    └── OverloadError       admission control shed the request — the
+                            system chose not to start work it could not
+                            finish in time (queue full, breaker open, …)
 
 `fsync_dir` closes the classic rename-durability hole: `os.replace` makes
 a publish atomic, but the *directory entry* itself is only durable once
@@ -70,6 +75,8 @@ __all__ = [
     "RecoveryError",
     "WALGapError",
     "ReadOnlyError",
+    "DeadlineExceeded",
+    "OverloadError",
 ]
 
 CRC_ALGO = "crc32-zlib"
@@ -195,6 +202,37 @@ class ReadOnlyError(GraphDBError, RuntimeError):
 
     def __init__(self, reason: str):
         super().__init__(f"service is read-only: {reason}")
+        self.reason = reason
+
+
+class DeadlineExceeded(GraphDBError, TimeoutError):
+    """The request's time budget ran out (ISSUE 10). Raised by whichever
+    lifecycle stage first notices — admission, a queue drain, a socket
+    timeout the router derived from the deadline, or a shard worker
+    checking the budget before executing an op. Also a `TimeoutError`, so
+    callers treating any timeout generically keep working. `late_by` is
+    how far past the deadline the check ran (seconds, >= 0)."""
+
+    def __init__(self, what: str = "request", late_by: float = 0.0):
+        super().__init__(f"deadline exceeded: {what} "
+                         f"(late by {max(0.0, late_by) * 1e3:.1f}ms)")
+        self.what = what
+        self.late_by = max(0.0, float(late_by))
+
+
+class OverloadError(GraphDBError):
+    """Admission control shed the request (ISSUE 10): the system refused
+    to START work it predicted it could not finish within the request's
+    deadline — a bounded queue was full, estimated queue delay exceeded
+    the budget, writer backpressure was at its bound, or a circuit
+    breaker was open. Shedding is the fast path: the caller learns in
+    microseconds instead of waiting out a doomed request. `reason` is a
+    stable machine-readable tag (`queue_full`, `queue_delay`,
+    `backpressure`, `breaker_open`, …)."""
+
+    def __init__(self, reason: str, detail: str = ""):
+        super().__init__(f"overloaded ({reason})"
+                         + (f": {detail}" if detail else ""))
         self.reason = reason
 
 

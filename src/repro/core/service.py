@@ -653,6 +653,25 @@ class ServiceDB:
             "io": self.db.io.snapshot(),
         }
 
+    def admission_state(self) -> Dict[str, Any]:
+        """The three facts front-end admission control (core/frontdesk.py)
+        polls before queueing a WRITE: read-only degradation (shed now —
+        the write would only fail later, typed the same), and how close
+        the dirty set is to the backpressure bound (a front desk sheds
+        instead of letting its dispatcher block inside `insert_edges`).
+        Lock-free single reads, cheap enough for the admission fast path.
+        """
+        backlog = int(self.tree.total_buffered()
+                      + self.tree.inflight_edges())
+        return {
+            "read_only": bool(self.read_only),
+            "read_only_reason": self.read_only_reason,
+            "backlog_edges": backlog,
+            "backpressure_edges": int(self.backpressure_edges),
+            "accepting_writes": bool(not self.read_only
+                                     and backlog <= self.backpressure_edges),
+        }
+
     def metrics_snapshot(self) -> Dict[str, Any]:
         """This process's aggregated telemetry (ISSUE 9): every registry
         counter/gauge/histogram summed across threads, legacy stats bags

@@ -51,36 +51,72 @@ Failure / restart
 -----------------
 Workers are supervised: a dead worker (crash failpoint, OOM-kill, bug) is
 respawned by the router *on the same durable directory* — recovery is the
-ordinary manifest + WAL-replay open. Reads retry transparently once after
-a respawn (they are idempotent against the recovered state); writes never
-auto-retry (the WAL may or may not have acknowledged the mutation — the
-caller must decide). Epoch pins die with their connection: a `ShardedView`
-spanning a restart raises `ShardEpochLost` rather than silently serving a
-different epoch.
+ordinary manifest + WAL-replay open. Reads retry transparently (with
+exponential backoff + jitter) after a respawn — they are idempotent
+against the recovered state; writes never auto-retry (the WAL may or may
+not have acknowledged the mutation — the caller must decide). Epoch pins
+die with their connection: a `ShardedView` spanning a restart raises
+`ShardEpochLost` rather than silently serving a different epoch.
+
+Request lifecycle (ISSUE 10, DESIGN.md §14)
+-------------------------------------------
+Every RPC can carry a `Deadline` (explicit argument or the thread's
+ambient `deadline_scope`): the remaining budget rides in frame meta, the
+router derives each socket timeout from it, retry sleeps never outrun it,
+and the worker re-checks it before dispatching — an op whose caller
+already gave up is shed with a typed `DeadlineExceeded`, not executed.
+A read retried across a worker respawn re-checks the *remaining* budget
+at every stage, so a respawn that outlives the deadline surfaces as
+`DeadlineExceeded`, never as a silent multi-second stall.
+
+Slowness (the gray failure crashes don't model) is handled two ways:
+
+  * **Hedging** — live (non-view) reads re-issue a sub-request that has
+    not answered within the hedge delay (a latency-histogram quantile of
+    `shard.rpc.seconds`, floored and capped) on a FRESH connection;
+    first response wins. The worker serves each connection on its own
+    handler thread, so a hedge genuinely overtakes a stalled request.
+    Pinned `ShardedView` reads are never hedged: epoch pins are scoped
+    to one connection, and a hedge on another connection would answer
+    from a different epoch.
+  * **Circuit breakers** — one per shard, fed by transport failures,
+    deadline-derived timeouts, and histogram-classified slow calls.
+    An open breaker fails calls fast with `ShardOverloadError` instead
+    of queueing more work onto a sick worker; after a cool-down one
+    probe (health checks always qualify) decides whether to close it.
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import json
 import multiprocessing as mp
 import os
+import random
 import socket
 import struct
 import threading
 import time
+from concurrent.futures import (FIRST_COMPLETED, ThreadPoolExecutor,
+                                TimeoutError as _FutTimeout,
+                                wait as _fut_wait)
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import telemetry
+from .deadline import (CircuitBreaker, Deadline, backoff_delays,
+                       current_deadline, deadline_scope)
 from .engine import StorageEngine
-from .failpoints import failpoint
-from .integrity import GraphDBError, checksum32
+from .failpoints import failpoint, fp_clear, fp_set
+from .integrity import (DeadlineExceeded, GraphDBError, OverloadError,
+                        checksum32)
 from .pal import IntervalMap
 
 __all__ = [
     "ShardConfig",
     "ShardEpochLost",
+    "ShardOverloadError",
     "ShardProtocolError",
     "ShardRemoteError",
     "ShardRouter",
@@ -133,6 +169,20 @@ class ShardEpochLost(ShardUnavailable):
         super().__init__(shard, "pinned epoch lost (worker restarted)")
 
 
+class ShardOverloadError(OverloadError):
+    """A shard-scoped overload shed: the shard's circuit breaker is open
+    (the router fails fast rather than queueing more work onto a worker
+    that is failing or pathologically slow), or the worker itself shed the
+    request. Subtype of `OverloadError` so front-end admission control and
+    callers handle both with one except clause."""
+
+    def __init__(self, shard: int, reason: str = "breaker_open",
+                 detail: str = ""):
+        super().__init__(reason, detail=f"shard {shard}"
+                         + (f": {detail}" if detail else ""))
+        self.shard = shard
+
+
 # ---------------------------------------------------------------------------
 # ownership
 # ---------------------------------------------------------------------------
@@ -180,6 +230,13 @@ _M_RPC_TX = telemetry.counter("shard.rpc.bytes_sent")
 _M_RPC_RX = telemetry.counter("shard.rpc.bytes_recv")
 _M_RPC_INFLIGHT = telemetry.counter("shard.rpc.inflight")
 _M_RESTARTS = telemetry.counter("shard.restarts")
+_M_RPC_RETRIES = telemetry.counter("shard.rpc.retries")
+_M_DEADLINE = telemetry.counter("request.deadline_exceeded")
+_M_HEDGES_SENT = telemetry.counter("shard.hedges.sent")
+_M_HEDGES_WON = telemetry.counter("shard.hedges.won")
+_M_BREAKER_TRIPS = telemetry.counter("shard.breaker.trips")
+_M_BREAKER_FF = telemetry.counter("shard.breaker.fastfail")
+_M_BREAKER_OPEN = telemetry.gauge("shard.breaker.open")
 
 
 def encode_payload(meta: Dict[str, Any],
@@ -213,19 +270,45 @@ def decode_payload(buf: bytes) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
     return meta, arrays
 
 
+def _send_all(sock: socket.socket, data: bytes) -> None:
+    """Write every byte or raise — an explicit bounded loop instead of
+    `sendall` so a signal landing mid-write (EINTR) resumes at the right
+    offset and a closed peer surfaces as a typed ConnectionError, never a
+    silent partial frame (ISSUE 10 satellite). The loop is bounded: every
+    iteration either makes progress or raises."""
+    view = memoryview(data)
+    sent = 0
+    total = len(view)
+    while sent < total:
+        try:
+            n = sock.send(view[sent:])
+        except InterruptedError:
+            continue  # EINTR: nothing was written, retry the same slice
+        if n <= 0:
+            raise ConnectionError("shard connection closed mid-send")
+        sent += n
+
+
 def send_frame(sock: socket.socket, status: int, meta: Dict[str, Any],
                arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
     payload = encode_payload(meta, arrays)
     failpoint("shard.rpc.send")
     _M_RPC_TX.inc(len(payload))
-    sock.sendall(_HEADER.pack(_MAGIC, len(payload), checksum32(payload),
-                              status) + payload)
+    _send_all(sock, _HEADER.pack(_MAGIC, len(payload), checksum32(payload),
+                                 status) + payload)
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    """Read exactly n bytes or raise. Bounded: each iteration either
+    receives at least one byte, retries a signal interruption (EINTR), or
+    raises — a dribbling peer (1 byte per segment) therefore costs at most
+    n iterations and can never yield a silent short read."""
     chunks = []
     while n:
-        b = sock.recv(min(n, 1 << 20))
+        try:
+            b = sock.recv(min(n, 1 << 20))
+        except InterruptedError:
+            continue
         if not b:
             raise ConnectionError("shard connection closed mid-frame")
         chunks.append(b)
@@ -342,6 +425,18 @@ class _Connection:
                 doc["trace"] = telemetry.trace_events(
                     clear=bool(kw.get("clear")))
             return doc, {}
+        if op == "failpoint":
+            # per-shard fault arming (ISSUE 10): the GRAPHDB_FAILPOINTS
+            # env channel is inherited by EVERY spawned worker, so a chaos
+            # harness that wants exactly ONE slow shard arms it here over
+            # the wire instead (seeded prob → reproducible latency faults)
+            if kw.get("clear"):
+                fp_clear(kw.get("site"))
+                return {"ok": True}, {}
+            fp_set(kw["site"], kw["action"], after=int(kw.get("after", 0)),
+                   count=kw.get("count", 1), prob=kw.get("prob"),
+                   seed=kw.get("seed"))
+            return {"ok": True}, {}
 
         # -- reads: answered from the pinned epoch (or a private pin) -------
         view = self._store(kw)
@@ -389,14 +484,28 @@ class _Connection:
                     self.state.stop.set()
                     return
                 try:
+                    # rebuild the budget BEFORE the failpoint so an
+                    # injected stall (modeling queueing delay inside the
+                    # worker) consumes it; the re-check after means an op
+                    # whose caller's budget is already gone is shed typed,
+                    # not executed — the router maps the kind back to a
+                    # local DeadlineExceeded
+                    bdl = Deadline.from_budget(meta.get("deadline"))
                     failpoint("shard.worker.op")
+                    if bdl is not None and bdl.expired():
+                        _M_DEADLINE.inc(label="worker")
+                        raise DeadlineExceeded(
+                            f"shard {self.state.shard_id} "
+                            f"{meta.get('op', '?')} (shed pre-dispatch)",
+                            -bdl.remaining())
                     # the router's trace context rides in meta["trace"];
                     # attaching it here is what stitches worker spans into
                     # the router-side trace (same trace id across processes)
                     with telemetry.attach(meta.get("trace")), \
                             telemetry.span("shard.op",
                                            op=meta.get("op", "?"),
-                                           shard=self.state.shard_id):
+                                           shard=self.state.shard_id), \
+                            deadline_scope(bdl):
                         rmeta, rarrays = self.handle(meta, arrays)
                     send_frame(self.sock, ST_OK, rmeta, rarrays)
                 except BrokenPipeError:
@@ -494,7 +603,22 @@ class ShardRouter:
     SPAWN_TIMEOUT_S = 120.0  # worker import (numpy+jax) + recovery replay
 
     def __init__(self, directory: str, config: ShardConfig,
-                 db_kw: Dict[str, Any], start: bool = True):
+                 db_kw: Dict[str, Any], start: bool = True,
+                 op_timeout_s: float = 60.0,
+                 read_retries: int = 2,
+                 backoff_base_s: float = 0.01,
+                 backoff_cap_s: float = 0.25,
+                 hedge: bool = True,
+                 hedge_quantile: float = 0.95,
+                 hedge_floor_s: float = 0.002,
+                 hedge_cap_s: float = 0.05,
+                 hedge_default_s: float = 0.010,
+                 hedge_min_samples: int = 64,
+                 breaker_failures: int = 8,
+                 breaker_open_s: float = 1.0,
+                 breaker_slow_floor_s: float = 0.25,
+                 breaker_slow_mult: float = 16.0,
+                 rpc_pool_size: Optional[int] = None):
         self.dir = os.path.abspath(directory)
         self.config = config
         self.intervals = config.intervals
@@ -503,11 +627,40 @@ class ShardRouter:
         self._tls = threading.local()
         self._closed = False
         self.restarts = 0
+        # -- request-lifecycle configuration (ISSUE 10) --
+        self.op_timeout_s = float(op_timeout_s)   # no-deadline socket cap
+        self.read_retries = int(read_retries)     # extra attempts for reads
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.hedge = bool(hedge)
+        self.hedge_quantile = float(hedge_quantile)
+        self.hedge_floor_s = float(hedge_floor_s)
+        self.hedge_cap_s = float(hedge_cap_s)
+        self.hedge_default_s = float(hedge_default_s)
+        self.hedge_min_samples = int(hedge_min_samples)
+        self.breaker_slow_floor_s = float(breaker_slow_floor_s)
+        self.breaker_slow_mult = float(breaker_slow_mult)
+        self.rpc_pool_size = rpc_pool_size
+        self.breakers = [CircuitBreaker(breaker_failures, breaker_open_s)
+                        for _ in range(config.n_shards)]
+        self._retry_rng = random.Random()
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_lock = threading.Lock()
+        self._hedge_cache = (-1e9, float(hedge_default_s))
+        self._slow_cache = (-1e9, None)
+        # every live socket the router ever opened, across ALL threads —
+        # close() drains this so threads that exited with cached
+        # connections cannot leak fds (ISSUE 10 satellite)
+        self._socks: set = set()
+        self._socks_lock = threading.Lock()
         self.shards = [
             _ShardProc(i, os.path.join(self.dir, f"shard_{i:02d}"),
                        os.path.join(self.dir, f"shard_{i:02d}.sock"))
             for i in range(config.n_shards)
         ]
+        # a router abandoned without close() must not leave worker
+        # processes behind at interpreter exit; close() unregisters
+        atexit.register(self.close)
         if start:
             for sp in self.shards:
                 self._spawn(sp)
@@ -517,11 +670,14 @@ class ShardRouter:
     # -- lifecycle -------------------------------------------------------------
     @classmethod
     def create(cls, directory: str, max_id: int, n_shards: int,
+               router_kw: Optional[Dict[str, Any]] = None,
                **db_kw) -> "ShardRouter":
         """Create a sharded store: N empty per-shard ServiceDBs under
         `directory`, all sharing one internal id space. `db_kw` forwards
         to `ServiceDB.create` in every worker (identical config per shard
-        — routing and bitwise comparability depend on it)."""
+        — routing and bitwise comparability depend on it); `router_kw`
+        forwards to `ShardRouter.__init__` (timeouts, hedging, breaker
+        tuning — router policy, never persisted)."""
         n_partitions = int(db_kw.get("n_partitions", 8))
         if n_partitions % n_shards:
             raise ValueError(
@@ -543,29 +699,48 @@ class ShardRouter:
                                            type(None)))}}
         with open(os.path.join(directory, cls.CONFIG), "w") as f:
             json.dump(doc, f, indent=1)
-        return cls(directory, config, db_kw)
+        return cls(directory, config, db_kw, **(router_kw or {}))
 
     @classmethod
-    def open(cls, directory: str) -> "ShardRouter":
+    def open(cls, directory: str,
+             **router_kw) -> "ShardRouter":
         with open(os.path.join(directory, cls.CONFIG)) as f:
             doc = json.load(f)
         config = ShardConfig(n_shards=doc["n_shards"],
                              n_partitions=doc["n_partitions"],
                              interval_len=doc["interval_len"],
                              max_id=doc["max_id"])
-        return cls(directory, config, doc.get("db_kw", {}))
+        return cls(directory, config, doc.get("db_kw", {}), **router_kw)
 
     def close(self) -> None:
+        """Shut the cluster down and release EVERY router-held resource.
+        Idempotent (close-twice is a no-op), atexit-registered (an
+        abandoned router cannot leave worker processes behind), and safe
+        to call while other threads are mid-request — their blocked recvs
+        are unblocked by the socket close and surface as typed
+        `ShardUnavailable("router closed")`, never a hang."""
         if self._closed:
             return
         self._closed = True
+        atexit.unregister(self.close)
+        # 1. polite shutdown, on a fresh connection per shard (best
+        #    effort; a cached one may be generation-stale or mid-frame)
         for sp in self.shards:
             try:
-                conn = self._conn(sp)
+                conn = self._connect(sp, force=True)
+                conn.settimeout(5.0)
                 send_frame(conn, ST_REQUEST, {"op": "shutdown"})
                 recv_frame(conn)
+                self._close_sock(conn)
             except (GraphDBError, OSError, ConnectionError):
                 pass
+        # 2. stop feeding the hedge pool (pending hedges are cancelled;
+        #    in-flight ones fail typed once their sockets close below)
+        with self._pool_lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=False, cancel_futures=True)
+        # 3. reap worker processes — no zombies survive close()
         for sp in self.shards:
             if sp.proc is not None:
                 sp.proc.join(timeout=30.0)
@@ -573,6 +748,22 @@ class ShardRouter:
                     sp.proc.terminate()
                     sp.proc.join(timeout=5.0)
                 sp.proc = None
+        # 4. close every socket the router ever opened, including ones
+        #    cached in OTHER threads' connection maps (fd-leak guard)
+        with self._socks_lock:
+            socks, self._socks = list(self._socks), set()
+        for s in socks:
+            try:
+                s.close()
+            except OSError:
+                pass
+        # 5. remove leftover socket files from terminated workers (a
+        #    clean worker exit unlinks its own)
+        for sp in self.shards:
+            try:
+                os.unlink(sp.sock_path)
+            except OSError:
+                pass
 
     def __enter__(self) -> "ShardRouter":
         return self
@@ -588,8 +779,14 @@ class ShardRouter:
             name=f"graphdb-shard-{sp.shard_id}", daemon=True)
         sp.proc.start()
 
-    def _wait_ready(self, sp: _ShardProc) -> None:
-        deadline = time.monotonic() + self.SPAWN_TIMEOUT_S
+    def _wait_ready(self, sp: _ShardProc,
+                    deadline: Optional[Deadline] = None) -> None:
+        """Poll a spawning worker until it answers a ping. Bounded by
+        SPAWN_TIMEOUT_S — and, when the caller carries a `Deadline`, by
+        its REMAINING budget: a read retried across a respawn must raise
+        `DeadlineExceeded` when the budget runs out mid-recovery, not
+        block for the full spawn timeout (ISSUE 10 satellite)."""
+        give_up = time.monotonic() + self.SPAWN_TIMEOUT_S
         while True:
             if sp.proc is not None and not sp.proc.is_alive():
                 raise ShardUnavailable(
@@ -598,29 +795,47 @@ class ShardRouter:
                     f"(exit code {sp.proc.exitcode})")
             try:
                 conn = self._connect(sp)
+                conn.settimeout(self.SPAWN_TIMEOUT_S)
                 send_frame(conn, ST_REQUEST, {"op": "ping"})
                 status, meta, _ = recv_frame(conn)
                 if status == ST_OK:
+                    conn.settimeout(None)
                     self._cache_conn(sp, conn)
                     return
             except (OSError, ConnectionError):
                 pass
-            if time.monotonic() > deadline:
+            if deadline is not None and deadline.expired():
+                _M_DEADLINE.inc(label="rpc")
+                raise DeadlineExceeded(
+                    f"shard {sp.shard_id} respawn wait",
+                    -deadline.remaining())
+            if time.monotonic() > give_up:
                 raise ShardUnavailable(sp.shard_id, "worker never came up")
             time.sleep(0.05)
 
-    def restart_shard(self, shard_id: int) -> None:
+    def restart_shard(self, shard_id: int,
+                      deadline: Optional[Deadline] = None) -> None:
         """Respawn a dead worker on its durable directory (WAL-replay
         recovery) and bump the generation so every thread's cached
-        connection — and the epoch pins living on them — is invalidated."""
+        connection — and the epoch pins living on them — is invalidated.
+        With a `Deadline`, every wait (the respawn lock, the ready poll)
+        is bounded by the remaining budget and expiry surfaces typed."""
         sp = self.shards[shard_id]
-        with sp.lock:
+        if self._closed:
+            raise ShardUnavailable(shard_id, "router closed")
+        if deadline is None:
+            sp.lock.acquire()
+        elif not sp.lock.acquire(timeout=max(0.0, deadline.remaining())):
+            _M_DEADLINE.inc(label="rpc")
+            raise DeadlineExceeded(f"shard {shard_id} respawn lock wait",
+                                   -deadline.remaining())
+        try:
             if sp.proc is not None and sp.proc.is_alive():
                 # alive: the failure was a broken connection, not a dead
                 # worker — a fresh connect (new generation) is enough
                 try:
                     conn = self._connect(sp)
-                    conn.close()
+                    self._close_sock(conn)
                     sp.generation += 1
                     return
                 except (OSError, ConnectionError):
@@ -630,15 +845,20 @@ class ShardRouter:
             _M_RESTARTS.inc()
             sp.generation += 1
             self._spawn(sp)
-            self._wait_ready(sp)
+            self._wait_ready(sp, deadline)
+        finally:
+            sp.lock.release()
 
     def health(self) -> List[Dict[str, Any]]:
         """Ping every shard; a dead shard reports {"alive": False} instead
-        of raising (supervisors poll this)."""
+        of raising (supervisors poll this). Pings are breaker PROBES: they
+        bypass an open breaker — a recovered worker's successful health
+        ping is exactly the evidence that closes its breaker again."""
         out = []
         for sp in self.shards:
             try:
-                meta, _ = self._call(sp.shard_id, "ping", {}, retry=False)
+                meta, _ = self._call(sp.shard_id, "ping", {}, retry=False,
+                                     probe=True)
                 meta["alive"] = True
             except (GraphDBError, OSError, ConnectionError) as exc:
                 meta = {"shard": sp.shard_id, "alive": False,
@@ -646,11 +866,45 @@ class ShardRouter:
             out.append(meta)
         return out
 
+    def arm_failpoint(self, shard_id: int, site: str,
+                      action: Optional[str] = None, after: int = 0,
+                      count: Optional[int] = 1, prob: Optional[float] = None,
+                      seed: Optional[int] = None, clear: bool = False
+                      ) -> None:
+        """Arm (or clear) a failpoint inside ONE shard worker over the
+        wire — the chaos harness's per-shard fault channel (the env var
+        channel is inherited by every spawned worker and cannot single
+        out a shard). A probe call: it bypasses the breaker so faults can
+        be cleared even while the breaker they caused is open."""
+        kw: Dict[str, Any] = {"site": site, "clear": bool(clear)}
+        if not clear:
+            kw.update(action=action, after=int(after), count=count,
+                      prob=prob, seed=seed)
+        self._call(shard_id, "failpoint", kw, retry=False, probe=True)
+
     # -- per-thread connections ------------------------------------------------
-    def _connect(self, sp: _ShardProc) -> socket.socket:
+    def _connect(self, sp: _ShardProc, force: bool = False) -> socket.socket:
         conn = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        conn.connect(sp.sock_path)
+        try:
+            conn.connect(sp.sock_path)
+        except OSError:
+            conn.close()
+            raise
+        with self._socks_lock:
+            self._socks.add(conn)
+        if self._closed and not force:
+            # raced with close(): its registry drain may already have run
+            self._close_sock(conn)
+            raise ShardUnavailable(sp.shard_id, "router closed")
         return conn
+
+    def _close_sock(self, conn: socket.socket) -> None:
+        with self._socks_lock:
+            self._socks.discard(conn)
+        try:
+            conn.close()
+        except OSError:
+            pass
 
     def _cache_conn(self, sp: _ShardProc, conn: socket.socket) -> None:
         cache = getattr(self._tls, "conns", None)
@@ -658,10 +912,7 @@ class ShardRouter:
             cache = self._tls.conns = {}
         old = cache.get(sp.shard_id)
         if old is not None:
-            try:
-                old[0].close()
-            except OSError:
-                pass
+            self._close_sock(old[0])
         cache[sp.shard_id] = (conn, sp.generation)
 
     def _conn(self, sp: _ShardProc) -> socket.socket:
@@ -679,22 +930,103 @@ class ShardRouter:
         if cache is not None:
             entry = cache.pop(sp.shard_id, None)
             if entry is not None:
-                try:
-                    entry[0].close()
-                except OSError:
-                    pass
+                self._close_sock(entry[0])
+
+    # -- breaker + hedging plumbing --------------------------------------------
+    def _breaker_failure(self, shard_id: int) -> None:
+        if self.breakers[shard_id].record_failure():
+            _M_BREAKER_TRIPS.inc(label=str(shard_id))
+        self._breaker_gauge()
+
+    def _breaker_gauge(self) -> None:
+        _M_BREAKER_OPEN.set(sum(1 for b in self.breakers
+                                if b.state != CircuitBreaker.CLOSED))
+
+    def _slow_threshold(self) -> Optional[float]:
+        """The latency above which a SUCCESSFUL call still counts as a
+        breaker failure — fed back from the `shard.rpc.seconds` histogram
+        (a multiple of its p99, floored so ordinary jitter never trips),
+        None until enough samples exist. Cached briefly: quantile() merges
+        every thread cell and must not run per call."""
+        now = time.monotonic()
+        if now - self._slow_cache[0] > 0.25:
+            p = _M_RPC_S.quantile(0.99, min_count=self.hedge_min_samples)
+            self._slow_cache = (
+                now, None if p is None else
+                max(self.breaker_slow_floor_s, self.breaker_slow_mult * p))
+        return self._slow_cache[1]
+
+    def _hedge_delay(self) -> float:
+        """How long a primary sub-request may stay unanswered before a
+        hedge is issued: the observed `shard.rpc.seconds` quantile
+        (default p95), floored (hedging under normal jitter doubles load
+        for nothing) and capped (the whole point is beating a 50ms stall),
+        with a fixed default until the histogram has enough samples."""
+        now = time.monotonic()
+        if now - self._hedge_cache[0] > 0.25:
+            p = _M_RPC_S.quantile(self.hedge_quantile,
+                                  min_count=self.hedge_min_samples)
+            d = self.hedge_default_s if p is None else p
+            self._hedge_cache = (
+                now, min(self.hedge_cap_s, max(self.hedge_floor_s, d)))
+        return self._hedge_cache[1]
+
+    def _rpc_pool(self) -> ThreadPoolExecutor:
+        with self._pool_lock:
+            if self._pool is None:
+                n = self.rpc_pool_size or max(8, 4 * len(self.shards))
+                self._pool = ThreadPoolExecutor(
+                    max_workers=n, thread_name_prefix="graphdb-rpc")
+            return self._pool
+
+    def _remote_error(self, shard_id: int, meta: Dict[str, Any]):
+        """Map a worker-side ST_ERROR frame back to a LOCAL typed error
+        where the lifecycle depends on the type crossing the wire; every
+        other kind stays a ShardRemoteError carrying the kind string."""
+        kind = meta.get("kind", "Error")
+        message = meta.get("message", "")
+        if kind == "DeadlineExceeded":
+            _M_DEADLINE.inc(label="rpc")
+            return DeadlineExceeded(f"shard {shard_id}: {message}")
+        if kind in ("OverloadError", "ShardOverloadError"):
+            return ShardOverloadError(shard_id, "remote", message)
+        return ShardRemoteError(shard_id, kind, message)
 
     def _call(self, shard_id: int, op: str, kw: Dict[str, Any],
               arrays: Optional[Dict[str, np.ndarray]] = None,
-              retry: bool = True
+              retry: bool = True,
+              deadline: Optional[Deadline] = None,
+              probe: bool = False
               ) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
-        """One request/response exchange with a shard. On transport failure:
-        reads (`retry=True`) respawn the worker and retry ONCE — they are
-        idempotent against the recovered state; writes (`retry=False`) raise
-        `ShardUnavailable` because the WAL may or may not have acknowledged
-        the mutation, and replaying it blindly could double-apply."""
+        """One request/response exchange with a shard, under the full
+        request lifecycle (module docstring):
+
+          * the deadline (explicit, else the thread's ambient scope) is
+            checked before every attempt, rides in frame meta, and caps
+            the socket timeout, the retry sleeps, and any respawn wait;
+          * reads (`retry=True`) survive worker death — supervised
+            respawn, then exponential-backoff-with-jitter retries (they
+            are idempotent against the recovered state); writes
+            (`retry=False`) raise `ShardUnavailable` because the WAL may
+            or may not have acknowledged the mutation, and replaying it
+            blindly could double-apply;
+          * a socket timeout poisons the CONNECTION only (frame alignment
+            is unknown) — the worker is presumed alive-but-slow, so no
+            respawn and no generation bump (other threads' pins survive);
+          * the shard's circuit breaker fails non-probe calls fast with
+            `ShardOverloadError` while open, and every attempt's outcome
+            (including histogram-classified slow successes) feeds it.
+        """
         sp = self.shards[shard_id]
-        request = {"op": op, "kw": kw}
+        if self._closed:
+            raise ShardUnavailable(shard_id, "router closed")
+        dl = deadline if deadline is not None else current_deadline()
+        br = self.breakers[shard_id]
+        if not probe and not br.allow():
+            _M_BREAKER_FF.inc(label=str(shard_id))
+            raise ShardOverloadError(shard_id, "breaker_open",
+                                     f"fast-failed {op}")
+        request: Dict[str, Any] = {"op": op, "kw": kw}
         if telemetry.enabled():
             # the caller's trace context (if any) crosses the process
             # boundary in frame meta — a retried read after a respawn
@@ -704,32 +1036,150 @@ class ShardRouter:
         _M_RPC_INFLIGHT.inc()
         try:
             with telemetry.span("shard.rpc", shard=shard_id, op=op):
-                for attempt in (0, 1):
-                    try:
-                        conn = self._conn(sp)
-                        send_frame(conn, ST_REQUEST, request, arrays)
-                        status, meta, rarrays = recv_frame(conn)
-                    except (OSError, ConnectionError) as exc:
-                        self._drop_conn(sp)
-                        if not retry or attempt:
-                            raise ShardUnavailable(
-                                shard_id, f"{op} failed: {exc}") from exc
-                        self.restart_shard(shard_id)
-                        continue
-                    except ShardProtocolError:
-                        # a misframed stream is unrecoverable
-                        self._drop_conn(sp)
-                        raise
-                    if status == ST_ERROR:
-                        raise ShardRemoteError(shard_id,
-                                               meta.get("kind", "Error"),
-                                               meta.get("message", ""))
-                    return meta, rarrays
-                raise ShardUnavailable(shard_id, f"{op}: retry exhausted")
+                return self._call_attempts(sp, op, request, arrays, retry,
+                                           dl)
         finally:
             _M_RPC_INFLIGHT.inc(-1)
             _M_RPC_REQS.inc(label=op)
             _M_RPC_S.observe(time.perf_counter() - t0, label=str(shard_id))
+
+    def _call_attempts(self, sp: _ShardProc, op: str,
+                       request: Dict[str, Any],
+                       arrays: Optional[Dict[str, np.ndarray]],
+                       retry: bool, dl: Optional[Deadline]
+                       ) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+        shard_id = sp.shard_id
+        attempts = (self.read_retries + 1) if retry else 1
+        pacing = backoff_delays(self.backoff_base_s, self.backoff_cap_s,
+                                attempts, self._retry_rng)
+        last_exc: Optional[BaseException] = None
+        for attempt in range(attempts):
+            if dl is not None:
+                try:
+                    dl.check(f"shard {shard_id} {op}")
+                except DeadlineExceeded:
+                    _M_DEADLINE.inc(label="rpc")
+                    raise
+                request["deadline"] = dl.to_budget()
+            timed_out = False
+            a0 = time.perf_counter()
+            try:
+                conn = self._conn(sp)
+                conn.settimeout(dl.timeout(cap=self.op_timeout_s)
+                                if dl is not None else self.op_timeout_s)
+                send_frame(conn, ST_REQUEST, request, arrays)
+                status, meta, rarrays = recv_frame(conn)
+            except socket.timeout as exc:
+                # frame alignment on this connection is now unknown —
+                # poison it; the worker is presumed alive-but-slow
+                self._drop_conn(sp)
+                timed_out = True
+                last_exc = exc
+            except ShardProtocolError:
+                # a misframed stream is unrecoverable
+                self._drop_conn(sp)
+                raise
+            except (OSError, ConnectionError) as exc:
+                self._drop_conn(sp)
+                last_exc = exc
+            else:
+                # the worker ANSWERED: transport is healthy. A response
+                # slower than the histogram-derived threshold still feeds
+                # the breaker as a failure (gray workers answer, late).
+                slow = self._slow_threshold()
+                if slow is not None and (time.perf_counter() - a0) > slow:
+                    self._breaker_failure(shard_id)
+                else:
+                    self.breakers[shard_id].record_success()
+                    self._breaker_gauge()
+                if status == ST_ERROR:
+                    raise self._remote_error(shard_id, meta)
+                return meta, rarrays
+            # -- transport failure or timeout ------------------------------
+            self._breaker_failure(shard_id)
+            if self._closed:
+                raise ShardUnavailable(shard_id, "router closed")
+            if dl is not None and dl.expired():
+                # the remaining budget decides the TYPE: a retry that no
+                # longer fits raises DeadlineExceeded, not ShardUnavailable
+                _M_DEADLINE.inc(label="rpc")
+                raise DeadlineExceeded(
+                    f"shard {shard_id} {op} (after {attempt + 1} "
+                    f"attempt{'s' if attempt else ''})",
+                    -dl.remaining()) from last_exc
+            if not retry or attempt == attempts - 1:
+                raise ShardUnavailable(
+                    shard_id, f"{op} failed: {last_exc}") from last_exc
+            if not timed_out:
+                # the worker looks dead — supervised respawn (bounded by
+                # the remaining budget when a deadline is carried)
+                self.restart_shard(shard_id, deadline=dl)
+            _M_RPC_RETRIES.inc(label=op)
+            delay = next(pacing)
+            if dl is not None:
+                delay = min(delay, max(0.0, dl.remaining()))
+            if delay > 0.0:
+                time.sleep(delay)
+        raise ShardUnavailable(shard_id, f"{op}: retry exhausted")
+
+    # -- hedged fan-out --------------------------------------------------------
+    def _gather(self, calls: Sequence[Tuple[int, str, Dict[str, Any],
+                                            Optional[Dict[str, np.ndarray]]]],
+                deadline: Optional[Deadline] = None) -> List[Tuple]:
+        """Issue `(shard_id, op, kw, arrays)` calls concurrently with
+        hedging, returning results IN CALL ORDER (gather order must be
+        deterministic — bitwise comparability of scatter/gather reads
+        depends on it, not on completion order). Each primary that has
+        not answered within the hedge delay of its submit gets ONE hedge
+        on a fresh pool thread (fresh connection); first response wins.
+        Live (non-view) reads only — epoch pins are connection-scoped.
+        Falls back to plain sequential calls when hedging is off."""
+        dl = deadline if deadline is not None else current_deadline()
+        if not self.hedge or self._closed:
+            return [self._call(s, op, kw, arr, deadline=dl)
+                    for s, op, kw, arr in calls]
+        pool = self._rpc_pool()
+        ctx = telemetry.current_context() if telemetry.enabled() else None
+
+        def attempt(c):
+            s, op, kw, arr = c
+
+            def run():
+                with telemetry.attach(ctx):
+                    return self._call(s, op, kw, arr, retry=True,
+                                      deadline=dl)
+            return run
+
+        primaries = [pool.submit(attempt(c)) for c in calls]
+        t0 = time.monotonic()
+        hd = self._hedge_delay()
+        out: List[Tuple] = []
+        for c, prim in zip(calls, primaries):
+            try:
+                out.append(prim.result(
+                    timeout=max(0.0, t0 + hd - time.monotonic())))
+                continue
+            except _FutTimeout:
+                pass
+            _M_HEDGES_SENT.inc(label=str(c[0]))
+            hedge = pool.submit(attempt(c))
+            out.append(self._first_response(c[0], prim, hedge))
+        return out
+
+    @staticmethod
+    def _first_response(shard_id: int, primary, hedge):
+        """First SUCCESS of {primary, hedge} wins; if both fail, surface
+        the primary's error (the hedge raced the same fault)."""
+        pending = {primary, hedge}
+        while pending:
+            done, pending = _fut_wait(pending,
+                                      return_when=FIRST_COMPLETED)
+            for f in done:
+                if f.exception() is None:
+                    if f is hedge:
+                        _M_HEDGES_WON.inc(label=str(shard_id))
+                    return f.result()
+        return primary.result()  # re-raises the primary's exception
 
     # -- write surface ---------------------------------------------------------
     def insert_edges(self, src, dst, etype=None, columns=None) -> None:
@@ -764,17 +1214,22 @@ class ShardRouter:
 
     # -- read surface ----------------------------------------------------------
     def out_neighbors(self, v: int) -> np.ndarray:
-        """Single-shard routed read (the owner holds ALL of v's out-edges)."""
+        """Single-shard routed read (the owner holds ALL of v's out-edges).
+        Hedged: a stalled owner's sub-request is re-issued after the hedge
+        delay, first response wins."""
         s = int(self.config.shard_of([v])[0])
-        _, arrays = self._call(s, "out_neighbors", {"v": int(v)})
+        _, arrays = self._gather([(s, "out_neighbors",
+                                   {"v": int(v)}, None)])[0]
         return arrays["nb"]
 
     def in_neighbors(self, v: int) -> np.ndarray:
-        """Broadcast + merge (in-edges of v are scattered across every
-        shard's stores). Returned SORTED — the canonical cross-shard order;
-        per-slab order would depend on each shard's private merge history."""
-        parts = [self._call(sp.shard_id, "in_neighbors", {"v": int(v)})[1]
-                 ["nb"] for sp in self.shards]
+        """Hedged broadcast + merge (in-edges of v are scattered across
+        every shard's stores). Returned SORTED — the canonical cross-shard
+        order; per-slab order would depend on each shard's private merge
+        history (and, now, on which of primary/hedge answered first)."""
+        calls = [(sp.shard_id, "in_neighbors", {"v": int(v)}, None)
+                 for sp in self.shards]
+        parts = [arrays["nb"] for _, arrays in self._gather(calls)]
         return np.sort(np.concatenate(parts)) if parts else \
             np.empty(0, np.int64)
 
@@ -1017,19 +1472,32 @@ class ShardedEngine(StorageEngine):
     def _scatter(self, vs: np.ndarray, direction: str, op: str,
                  kw: Dict[str, Any]):
         """Yield (global index array, response arrays) per shard:
-        out-direction scatters owner slices, in-direction broadcasts."""
+        out-direction scatters owner slices, in-direction broadcasts.
+        Live (view-less) reads fan out through the router's hedged gather
+        — sub-requests run concurrently and a stalled shard's is re-issued
+        after the hedge delay; pinned-view reads stay sequential on the
+        calling thread (epoch pins are connection-scoped, and a hedge on
+        another connection would answer from a different epoch). Either
+        way results are yielded in deterministic shard order, so gather
+        output is independent of completion order (bitwise gates)."""
         cfg = self.router.config
         if direction == "out":
             owner = cfg.shard_of(vs)
-            for s in np.unique(owner):
-                idx = np.flatnonzero(owner == s)
-                yield idx, self._shard_call(int(s), op, kw,
-                                            {"vs": vs[idx]})[1]
+            shards = [int(s) for s in np.unique(owner)]
+            idxs = [np.flatnonzero(owner == s) for s in shards]
+            payloads = [{"vs": vs[i]} for i in idxs]
         else:
+            shards = [sp.shard_id for sp in self.router.shards]
             idx = np.arange(vs.shape[0], dtype=np.int64)
-            for sp in self.router.shards:
-                yield idx, self._shard_call(sp.shard_id, op, kw,
-                                            {"vs": vs})[1]
+            idxs = [idx] * len(shards)
+            payloads = [{"vs": vs}] * len(shards)
+        if self.view is not None:
+            for s, i, p in zip(shards, idxs, payloads):
+                yield i, self.view.call(s, op, kw, p)[1]
+        else:
+            calls = [(s, op, kw, p) for s, p in zip(shards, payloads)]
+            for i, (_, arrays) in zip(idxs, self.router._gather(calls)):
+                yield i, arrays
 
     # -- the scatter/gather read surface --------------------------------------
     def expand_frontier(self, vs, direction: str = "out", predicate=None,

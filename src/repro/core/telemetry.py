@@ -141,6 +141,42 @@ CATALOG: Dict[str, Tuple[str, str]] = {
     "shard.restarts": ("counter", "shard worker restarts"),
     "shard.rpc": ("span", "one router-side shard RPC"),
     "shard.op": ("span", "one worker-side op execution"),
+    # --- request lifecycle (core/deadline.py wiring, ISSUE 10) ---
+    "request.deadline_exceeded": ("counter",
+                                  "requests whose budget ran out, by "
+                                  "surface label (rpc/worker/frontdesk)"),
+    "shard.rpc.retries": ("counter",
+                          "idempotent-read retries after a transport "
+                          "failure or deadline-derived socket timeout"),
+    "shard.hedges.sent": ("counter",
+                          "hedge sub-requests issued after the "
+                          "histogram-derived hedge delay"),
+    "shard.hedges.won": ("counter",
+                         "hedges whose response beat the primary's"),
+    "shard.breaker.trips": ("counter",
+                            "circuit-breaker open transitions, by shard"),
+    "shard.breaker.fastfail": ("counter",
+                               "calls failed fast by an open breaker, "
+                               "by shard"),
+    "shard.breaker.open": ("gauge",
+                           "shards whose circuit breaker is currently "
+                           "open or probing"),
+    # --- serving front end (core/frontdesk.py) ---
+    "frontdesk.requests": ("counter", "admitted requests, by op label"),
+    "frontdesk.sheds": ("counter",
+                        "requests shed by admission control, by reason "
+                        "label (queue_full/queue_delay/backpressure/"
+                        "read_only)"),
+    "frontdesk.batches": ("counter",
+                          "engine dispatches, each coalescing >= 1 "
+                          "queued requests, by op label"),
+    "frontdesk.batched_ops": ("counter",
+                              "requests served through coalesced "
+                              "dispatches, by op label"),
+    "frontdesk.queue.seconds": ("histogram",
+                                "request queue delay, enqueue to batch "
+                                "start"),
+    "frontdesk.depth": ("gauge", "requests queued at the front desk now"),
 }
 
 _SPAN_NAMES = frozenset(n for n, (k, _) in CATALOG.items() if k == "span")
@@ -322,6 +358,27 @@ class Histogram:
                 else:
                     merged[label] = (h.buckets.copy(), h.sum)
         return {label: _hist_dict(b, s) for label, (b, s) in merged.items()}
+
+    def quantile(self, q: float, label: Optional[str] = None,
+                 min_count: int = 1) -> Optional[float]:
+        """The `q`-quantile in SECONDS (bucket upper bound — conservative),
+        merged across threads and, with `label=None`, across labels. None
+        until at least `min_count` samples exist. This is what feeds
+        hedge-delay and breaker slow-call thresholds back from observed
+        latency (ISSUE 10): a control input, not just an export."""
+        with self._lock:
+            cells = list(self._cells)
+        buckets = np.zeros(N_BUCKETS, np.int64)
+        for d in cells:
+            for lb, h in list(d.items()):
+                if label is None or lb == label:
+                    buckets += h.buckets
+        count = int(buckets.sum())
+        if count < max(1, int(min_count)):
+            return None
+        cum = np.cumsum(buckets)
+        b = int(np.searchsorted(cum, q * count))
+        return float(1 << min(b, N_BUCKETS - 1)) / 1e9
 
     def _zero(self) -> None:
         with self._lock:

@@ -1,0 +1,729 @@
+"""Request-lifecycle tests (ISSUE 10): deadlines, backoff, circuit
+breakers, hedged shard reads, frame hardening, router shutdown hygiene,
+and the admission-controlled front desk.
+
+Layout mirrors the layer boundaries:
+
+  * units with no processes — `Deadline` / `backoff_delays` /
+    `CircuitBreaker`, the `delay:`/`stall:` failpoint actions, frame
+    reassembly under 1-byte dribble and EINTR (the short-read satellite);
+  * a module-scoped 2-shard router (worker spawn is seconds) for the
+    wire-level lifecycle: deadline propagation and typed expiry, the
+    per-shard failpoint RPC, hedged broadcasts under an injected
+    latency fault, remote-error kind mapping;
+  * function-scoped single-shard routers for the destructive cases:
+    retry-after-respawn budget semantics (`DeadlineExceeded`, never
+    `ShardUnavailable`, when the budget is gone), breaker trip →
+    fast-fail → probe recovery, close() idempotence / fd reaping /
+    mid-request close;
+  * `FrontDesk` over a plain ServiceDB (no processes): coalescing,
+    bitwise answers, every shed reason typed, deadline discipline at
+    admission / in queue / at delivery, and over the module router.
+"""
+import gc
+import os
+import random
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CircuitBreaker,
+    Deadline,
+    DeadlineExceeded,
+    FrontDesk,
+    OverloadError,
+    ServiceDB,
+    ShardOverloadError,
+    ShardRouter,
+    ShardUnavailable,
+    backoff_delays,
+    current_deadline,
+    deadline_scope,
+    failpoint,
+    fp_clear,
+    fp_set,
+    telemetry,
+    two_hop_counts,
+)
+from repro.core import shardrouter as sr
+from repro.core.integrity import GraphDBError
+
+N_ID = 20_000
+DB_KW = dict(n_partitions=8, n_levels=2, branching=4, buffer_cap=4000,
+             max_partition_edges=50_000, persist_min_edges=512)
+
+
+def _edges(seed=11, n=20_000):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, N_ID, n, dtype=np.int64),
+            rng.integers(0, N_ID, n, dtype=np.int64))
+
+
+def _counter_total(snap, name):
+    v = snap["counters"].get(name, 0)   # labeled: {label: n}; plain: n
+    return sum(v.values()) if isinstance(v, dict) else v
+
+
+# ---------------------------------------------------------------------------
+# units: Deadline / backoff / breaker (no processes)
+# ---------------------------------------------------------------------------
+def test_deadline_budget_and_check():
+    dl = Deadline.after(10.0)
+    assert 9.0 < dl.remaining() <= 10.0
+    assert not dl.expired()
+    dl.check("fine")  # no raise
+    # wire roundtrip: remaining seconds, clock-agnostic
+    budget = dl.to_budget()
+    back = Deadline.from_budget(budget)
+    assert back is not None and abs(back.remaining() - budget) < 0.1
+    assert Deadline.from_budget(None) is None
+
+    gone = Deadline.after(-0.5)
+    assert gone.expired() and gone.remaining() < 0
+    with pytest.raises(DeadlineExceeded) as ei:
+        gone.check("late op")
+    assert "late op" in str(ei.value)
+    assert ei.value.late_by >= 0.5
+    # typed as both a GraphDBError and a TimeoutError
+    assert isinstance(ei.value, GraphDBError)
+    assert isinstance(ei.value, TimeoutError)
+
+
+def test_deadline_timeout_floor_and_cap():
+    assert Deadline.after(100.0).timeout(cap=5.0) == 5.0
+    assert Deadline.after(-3.0).timeout() == pytest.approx(1e-3)
+    t = Deadline.after(0.5).timeout(cap=5.0)
+    assert 0.4 < t <= 0.5
+
+
+def test_deadline_scope_is_thread_local_stack():
+    assert current_deadline() is None
+    outer, inner = Deadline.after(5.0), Deadline.after(1.0)
+    with deadline_scope(outer):
+        assert current_deadline() is outer
+        with deadline_scope(inner):
+            assert current_deadline() is inner
+        with deadline_scope(None):  # None is a no-op, not a mask
+            assert current_deadline() is outer
+    assert current_deadline() is None
+
+    seen = []
+
+    def peek():
+        seen.append(current_deadline())
+
+    with deadline_scope(outer):
+        t = threading.Thread(target=peek)
+        t.start()
+        t.join()
+    assert seen == [None]  # ambient budget does not leak across threads
+
+
+def test_backoff_delays_equal_jitter():
+    delays = list(backoff_delays(0.01, 0.25, 8, rng=random.Random(42)))
+    assert len(delays) == 8
+    for k, d in enumerate(delays):
+        full = min(0.25, 0.01 * 2.0 ** k)
+        assert full * 0.5 <= d <= full  # d/2 + U(0, d/2)
+    assert delays[-1] <= 0.25
+    # seeded => reproducible
+    again = list(backoff_delays(0.01, 0.25, 8, rng=random.Random(42)))
+    assert delays == again
+
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(failure_threshold=3, open_s=0.05)
+    assert br.state == CircuitBreaker.CLOSED and br.allow()
+    assert not br.record_failure()
+    assert not br.record_failure()
+    br.record_success()            # success clears the consecutive streak
+    assert not br.record_failure()
+    assert not br.record_failure()
+    assert br.record_failure()     # third consecutive: trips, returns True
+    assert br.state == CircuitBreaker.OPEN
+    assert not br.allow() and br.trips == 1
+
+    time.sleep(0.06)               # cool-down: one half-open probe slot
+    assert br.state == CircuitBreaker.HALF_OPEN
+    assert br.allow()
+    assert not br.allow()          # the slot is exclusive
+    br.record_success()
+    assert br.state == CircuitBreaker.CLOSED
+
+    for _ in range(3):
+        br.record_failure()
+    time.sleep(0.06)
+    assert br.allow()              # probe...
+    assert br.record_failure()     # ...fails: straight back to OPEN
+    assert br.state == CircuitBreaker.OPEN and br.trips == 3
+    br.reset()
+    assert br.state == CircuitBreaker.CLOSED
+
+
+def test_overload_error_taxonomy():
+    e = ShardOverloadError(3, "breaker_open", "fast-failed read")
+    assert isinstance(e, OverloadError) and isinstance(e, GraphDBError)
+    assert e.shard == 3 and e.reason == "breaker_open"
+    assert OverloadError("queue_full").reason == "queue_full"
+
+
+# ---------------------------------------------------------------------------
+# units: delay/stall failpoint actions
+# ---------------------------------------------------------------------------
+def test_failpoint_delay_action_sleeps_then_continues():
+    fp_set("frontdesk.dispatch", "delay:30")
+    t0 = time.perf_counter()
+    failpoint("frontdesk.dispatch")   # must NOT raise — latency, not fault
+    assert time.perf_counter() - t0 >= 0.025
+    t0 = time.perf_counter()
+    failpoint("frontdesk.dispatch")   # count=1 default: disarmed now
+    assert time.perf_counter() - t0 < 0.02
+
+
+def test_failpoint_stall_action_alias():
+    fp_set("frontdesk.dispatch", "stall:20", count=1)
+    t0 = time.perf_counter()
+    failpoint("frontdesk.dispatch")
+    assert time.perf_counter() - t0 >= 0.015
+
+
+# ---------------------------------------------------------------------------
+# units: frame hardening (short reads, EINTR) — the transport satellite
+# ---------------------------------------------------------------------------
+class _FlakySock:
+    """Socket wrapper that raises EINTR (InterruptedError) every other
+    call and dribbles writes 1 byte at a time — the adversarial peer the
+    bounded send/recv loops must absorb."""
+
+    def __init__(self, sock):
+        self._sock = sock
+        self._calls = 0
+
+    def recv(self, n):
+        self._calls += 1
+        if self._calls % 2:
+            raise InterruptedError("EINTR")
+        return self._sock.recv(min(n, 3))   # short reads too
+
+    def send(self, data):
+        self._calls += 1
+        if self._calls % 2:
+            raise InterruptedError("EINTR")
+        return self._sock.send(bytes(data[:1]))
+
+
+def test_recv_frame_reassembles_one_byte_dribble():
+    a, b = socket.socketpair()
+    try:
+        meta = {"op": "expand", "kw": {"direction": "out"}}
+        arrays = {"vs": np.arange(64, dtype=np.int64)}
+        payload = sr.encode_payload(meta, arrays)
+        wire = sr._HEADER.pack(sr._MAGIC, len(payload),
+                               sr.checksum32(payload),
+                               sr.ST_REQUEST) + payload
+
+        def dribble():
+            for i in range(len(wire)):          # 1 byte per segment
+                a.sendall(wire[i:i + 1])
+                if i % 50 == 0:
+                    time.sleep(0.001)
+
+        t = threading.Thread(target=dribble)
+        t.start()
+        status, m2, a2 = sr.recv_frame(b)
+        t.join()
+        assert status == sr.ST_REQUEST
+        assert m2["op"] == "expand"
+        assert np.array_equal(a2["vs"], arrays["vs"])
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_io_survives_eintr():
+    a, b = socket.socketpair()
+    try:
+        data = b"lifecycle" * 20
+        t = threading.Thread(target=sr._send_all,
+                             args=(_FlakySock(a), data))
+        t.start()
+        got = sr._recv_exact(_FlakySock(b), len(data))
+        t.join()
+        assert got == data
+    finally:
+        a.close()
+        b.close()
+
+
+def test_send_all_raises_typed_on_closed_peer():
+    a, b = socket.socketpair()
+    b.close()
+    try:
+        with pytest.raises((ConnectionError, OSError)):
+            # a closed peer can buffer a little; keep writing until the
+            # RST surfaces — never a silent partial frame
+            for _ in range(64):
+                sr._send_all(a, b"x" * 65536)
+    finally:
+        a.close()
+
+
+# ---------------------------------------------------------------------------
+# the 2-shard router under the full lifecycle
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def cluster(tmp_path_factory):
+    """2-shard router + the unsharded reference fed the same edges."""
+    base = tmp_path_factory.mktemp("lifecycle")
+    src, dst = _edges()
+    ref = ServiceDB.create(str(base / "ref"), max_id=N_ID, **DB_KW)
+    ref.insert_edges(src, dst)
+    router = ShardRouter.create(str(base / "sharded"), max_id=N_ID,
+                                n_shards=2, **DB_KW)
+    router.insert_edges(src, dst)
+    yield router, ref, src, dst
+    router.close()
+    ref.close()
+
+
+def test_call_sheds_expired_deadline_before_send(cluster):
+    router, _, _, _ = cluster
+    before = _counter_total(telemetry.snapshot(),
+                            "request.deadline_exceeded")
+    with pytest.raises(DeadlineExceeded):
+        router._call(0, "ping", {}, deadline=Deadline.after(-0.1))
+    after = _counter_total(telemetry.snapshot(),
+                           "request.deadline_exceeded")
+    assert after > before
+
+
+def test_ambient_deadline_scope_reaches_rpc(cluster):
+    router, _, _, _ = cluster
+    with deadline_scope(Deadline.after(-0.1)):
+        with pytest.raises(DeadlineExceeded):
+            router._call(0, "n_edges", {})
+
+
+def test_worker_sheds_expired_budget_pre_dispatch(cluster):
+    """An op arriving with its budget already gone is refused typed by the
+    WORKER (never executed); the kind crosses the wire and maps back."""
+    router, _, _, _ = cluster
+    conn = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    try:
+        conn.connect(router.shards[0].sock_path)
+        sr.send_frame(conn, sr.ST_REQUEST,
+                      {"op": "ping", "deadline": -0.5})
+        status, meta, _ = sr.recv_frame(conn)
+        assert status == sr.ST_ERROR
+        assert meta["kind"] == "DeadlineExceeded"
+    finally:
+        conn.close()
+    # the router maps that kind back to the LOCAL typed error
+    err = router._remote_error(0, {"kind": "DeadlineExceeded",
+                                   "message": "shed pre-dispatch"})
+    assert isinstance(err, DeadlineExceeded)
+    err = router._remote_error(1, {"kind": "OverloadError", "message": "q"})
+    assert isinstance(err, ShardOverloadError) and err.shard == 1
+
+
+def test_stalled_worker_times_out_typed(cluster):
+    """A worker stalled past the caller's budget surfaces DeadlineExceeded
+    (socket timeout derived from the deadline), and the connection is
+    poisoned — NOT the worker respawned (it is alive, just slow)."""
+    router, ref, src, _ = cluster
+    restarts_before = router.restarts
+    router.arm_failpoint(0, "shard.worker.op", "delay:120", count=1)
+    t0 = time.perf_counter()
+    with pytest.raises(DeadlineExceeded):
+        router._call(0, "n_edges", {}, deadline=Deadline.after(0.03))
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 1.0           # gave up on the budget, not op_timeout_s
+    assert router.restarts == restarts_before
+    # worker alive and consistent afterwards
+    meta, _ = router._call(0, "n_edges", {})
+    assert meta["n_edges"] > 0
+
+
+def test_failpoint_rpc_arms_one_shard_only(cluster):
+    router, _, _, _ = cluster
+    router.arm_failpoint(0, "shard.worker.op", "raise", count=1)
+    with pytest.raises(sr.ShardRemoteError) as ei:
+        router._call(0, "n_edges", {}, retry=False)
+    assert ei.value.kind == "FailpointError"
+    # shard 1 was never armed
+    meta, _ = router._call(1, "n_edges", {}, retry=False)
+    assert "n_edges" in meta
+    router.arm_failpoint(0, "shard.worker.op", clear=True)
+    meta, _ = router._call(0, "n_edges", {}, retry=False)
+    assert "n_edges" in meta
+
+
+def test_hedged_broadcast_beats_probabilistic_stall(cluster):
+    """With one shard probabilistically stalling 40ms per op, hedges are
+    issued after the histogram-derived delay and some win — and every
+    answer stays bitwise-correct."""
+    router, ref, src, _ = cluster
+    vs = [int(v) for v in src[:40]]
+    expect = {v: np.sort(ref.in_neighbors(v)) for v in vs}
+    router.arm_failpoint(1, "shard.worker.op", "delay:40", count=None,
+                         prob=0.5, seed=20260809)
+    s0 = telemetry.snapshot()
+    try:
+        for v in vs:
+            got = router.in_neighbors(v)   # broadcast: hedged _gather
+            assert np.array_equal(got, expect[v])
+    finally:
+        router.arm_failpoint(1, "shard.worker.op", clear=True)
+    s1 = telemetry.snapshot()
+    sent = (_counter_total(s1, "shard.hedges.sent")
+            - _counter_total(s0, "shard.hedges.sent"))
+    won = (_counter_total(s1, "shard.hedges.won")
+           - _counter_total(s0, "shard.hedges.won"))
+    assert sent > 0
+    assert won > 0
+
+
+# ---------------------------------------------------------------------------
+# destructive router cases (fresh single-shard clusters)
+# ---------------------------------------------------------------------------
+def _mini_router(tmp_path, name, **router_kw):
+    return ShardRouter.create(
+        str(tmp_path / name), max_id=1000, n_shards=1, n_partitions=2,
+        n_levels=2, branching=2, buffer_cap=500,
+        router_kw=router_kw or None)
+
+
+def test_retry_after_respawn_respects_remaining_budget(tmp_path):
+    """The satellite: a read retried across a worker respawn must raise
+    DeadlineExceeded — not ShardUnavailable — when the remaining budget
+    cannot cover the respawn wait; with no deadline the same read
+    transparently survives the restart."""
+    router = _mini_router(tmp_path, "respawn", hedge=False)
+    try:
+        router.insert_edges([1, 2, 3], [4, 5, 6])
+        sp = router.shards[0]
+        sp.proc.terminate()
+        sp.proc.join(timeout=10.0)
+        with pytest.raises(DeadlineExceeded):
+            # budget far below worker spawn time: the retry machinery must
+            # honor the REMAINING budget across the respawn wait
+            router._call(0, "n_edges", {}, deadline=Deadline.after(0.2))
+        # no deadline: supervised respawn + retry completes the read
+        meta, _ = router._call(0, "n_edges", {})
+        assert meta["n_edges"] == 3
+        assert router.restarts >= 1
+    finally:
+        router.close()
+
+
+def test_breaker_trips_fast_fails_and_recovers(tmp_path):
+    router = _mini_router(tmp_path, "breaker", hedge=False,
+                          breaker_failures=3, breaker_open_s=0.3)
+    try:
+        router.arm_failpoint(0, "shard.worker.op", "delay:100", count=None)
+        s0 = telemetry.snapshot()
+        # three consecutive deadline-bounded timeouts feed the breaker
+        for _ in range(3):
+            with pytest.raises(DeadlineExceeded):
+                router._call(0, "n_edges", {}, retry=False,
+                             deadline=Deadline.after(0.03))
+        assert router.breakers[0].state == CircuitBreaker.OPEN
+        # open breaker: non-probe calls fail FAST with the typed overload
+        t0 = time.perf_counter()
+        with pytest.raises(ShardOverloadError) as ei:
+            router._call(0, "n_edges", {})
+        assert time.perf_counter() - t0 < 0.05
+        assert ei.value.reason == "breaker_open" and ei.value.shard == 0
+        s1 = telemetry.snapshot()
+        assert (_counter_total(s1, "shard.breaker.trips")
+                > _counter_total(s0, "shard.breaker.trips"))
+        assert (_counter_total(s1, "shard.breaker.fastfail")
+                > _counter_total(s0, "shard.breaker.fastfail"))
+        # probes bypass the breaker: the fault can be cleared while open
+        router.arm_failpoint(0, "shard.worker.op", clear=True)
+        time.sleep(0.35)           # cool-down -> half-open
+        health = router.health()   # the probe's success closes the breaker
+        assert health[0]["alive"]
+        assert router.breakers[0].state == CircuitBreaker.CLOSED
+        meta, _ = router._call(0, "n_edges", {})
+        assert "n_edges" in meta
+    finally:
+        router.close()
+
+
+def test_close_is_idempotent_and_leaks_nothing(tmp_path, cluster):
+    """The shutdown satellite: close-twice is a no-op, worker processes
+    are reaped (no zombies), every router-opened fd — including ones
+    cached by OTHER threads — is closed, and socket files are gone.
+    (`cluster` is requested only to pre-warm multiprocessing's global
+    helper fds so the fd baseline is stable.)"""
+    gc.collect()
+    fd_dir = "/proc/self/fd"
+    before = len(os.listdir(fd_dir))
+    router = _mini_router(tmp_path, "leak", hedge=True)
+    router.insert_edges([1, 2], [3, 4])
+
+    def reader():
+        router._call(0, "n_edges", {})   # caches a conn in ANOTHER thread
+
+    t = threading.Thread(target=reader)
+    t.start()
+    t.join()
+    router.out_neighbors(1)              # touches the hedge pool too
+    sock_file = router.shards[0].sock_path
+    assert os.path.exists(sock_file)
+    router.close()
+    router.close()                       # idempotent
+    assert all(sp.proc is None for sp in router.shards)   # reaped
+    assert not os.path.exists(sock_file)
+    assert router._socks == set()
+    gc.collect()
+    deadline = time.monotonic() + 5.0
+    while len(os.listdir(fd_dir)) > before:
+        if time.monotonic() > deadline:
+            break
+        time.sleep(0.05)
+    assert len(os.listdir(fd_dir)) <= before
+    # a closed router refuses new work typed
+    with pytest.raises(ShardUnavailable):
+        router._call(0, "n_edges", {})
+
+
+def test_close_unblocks_mid_request_thread_typed(tmp_path):
+    router = _mini_router(tmp_path, "midreq", hedge=False)
+    try:
+        router.insert_edges([1], [2])
+        # far longer than the worker's 2s handler-join grace plus its
+        # store-close time, so the close severs the in-flight request
+        # instead of outwaiting it
+        router.arm_failpoint(0, "shard.worker.op", "delay:10000",
+                             count=None)
+        caught = []
+
+        def blocked_read():
+            try:
+                router._call(0, "n_edges", {})
+                caught.append(None)
+            except Exception as exc:  # noqa: BLE001 — recording the type
+                caught.append(exc)
+
+        t = threading.Thread(target=blocked_read)
+        t.start()
+        time.sleep(0.3)              # let it block inside recv_frame
+        router.close()               # must unblock it — typed, not a hang
+        t.join(timeout=15.0)
+        assert not t.is_alive()
+        assert len(caught) == 1
+        assert isinstance(caught[0], GraphDBError)
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# the front desk over a plain ServiceDB (no processes)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def svc(tmp_path_factory):
+    base = tmp_path_factory.mktemp("frontdesk")
+    db = ServiceDB.create(str(base / "svc"), max_id=N_ID, **DB_KW)
+    src, dst = _edges(seed=3, n=10_000)
+    db.insert_edges(src, dst)
+    yield db, src, dst
+    db.close()
+
+
+def test_frontdesk_coalesces_and_answers_bitwise(svc):
+    db, src, _ = svc
+    vs = [int(v) for v in src[:48]]
+    fd = FrontDesk(db, max_batch=64)
+    try:
+        # stall the first dispatch so the rest of the burst queues up and
+        # coalesces into same-kind batches
+        fp_set("frontdesk.dispatch", "delay:40", count=1)
+        futs = [fd.submit("out_neighbors", v=v) for v in vs]
+        got = [f.result(timeout=30) for f in futs]
+        for v, g in zip(vs, got):
+            assert np.array_equal(g, np.sort(db.out_neighbors(v)))
+        assert fd.stats.admitted == len(vs)
+        assert fd.stats.batched_ops >= len(vs)
+        assert fd.stats.batches < fd.stats.admitted   # coalescing happened
+
+        # fof + getrange ride the same batched engine surface
+        seeds = vs[:8]
+        with db.read_view() as view:
+            eng = view.storage_engine()
+            expect_fof = two_hop_counts(eng, np.asarray(seeds, np.int64))
+            eb = eng.edge_columns_batch(np.asarray(seeds, np.int64))
+        for i, v in enumerate(seeds):
+            assert np.array_equal(fd.friends_of_friends(v),
+                                  expect_fof.ids[expect_fof.slice_of(i)])
+            rng = fd.getrange(v)
+            sl = slice(int(eb.offsets[i]), int(eb.offsets[i + 1]))
+            assert np.array_equal(rng["dst"], eb.dst[sl])
+    finally:
+        fp_clear("frontdesk.dispatch")
+        fd.close()
+
+
+def test_frontdesk_queue_full_sheds_typed_and_fast(svc):
+    db, src, _ = svc
+    fd = FrontDesk(db, queue_cap=3)
+    try:
+        fp_set("frontdesk.dispatch", "delay:300", count=None)
+        first = fd.submit("out_neighbors", v=int(src[0]))
+        give_up = time.monotonic() + 5.0
+        while fd.depth() > 0 and time.monotonic() < give_up:
+            time.sleep(0.005)      # dispatcher picked it up; now stalled
+        futs = [fd.submit("out_neighbors", v=int(src[i]))
+                for i in range(1, 4)]           # fills the cap-3 queue
+        t0 = time.perf_counter()
+        with pytest.raises(OverloadError) as ei:
+            fd.submit("out_neighbors", v=int(src[4]))
+        assert time.perf_counter() - t0 < 0.05  # shed in the caller, fast
+        assert ei.value.reason == "queue_full"
+        assert fd.stats.shed == 1
+    finally:
+        fp_clear("frontdesk.dispatch")
+        fd.close()
+    assert first.result(timeout=30) is not None
+    for f in futs:
+        f.result(timeout=30)       # drained on close, never dropped
+
+
+def test_frontdesk_queue_delay_shed_and_expiry_in_queue(svc):
+    db, src, _ = svc
+    fd = FrontDesk(db, queue_cap=100)
+    try:
+        fp_set("frontdesk.dispatch", "delay:200", count=None)
+        fd.submit("out_neighbors", v=int(src[0]))
+        give_up = time.monotonic() + 5.0
+        while fd.depth() > 0 and time.monotonic() < give_up:
+            time.sleep(0.005)
+        queued = [fd.submit("out_neighbors", v=int(src[i]))
+                  for i in range(1, 4)]
+        # predicted drain (3 deep x 100ms EWMA) dwarfs a 50ms budget:
+        # admission sheds typed instead of queueing doomed work
+        fd._req_s_ewma = 0.1
+        with pytest.raises(OverloadError) as ei:
+            fd.submit("out_neighbors", deadline=Deadline.after(0.05),
+                      v=int(src[4]))
+        assert ei.value.reason == "queue_delay"
+        fd._req_s_ewma = 0.0
+        # a request that EXPIRES while queued is answered typed without
+        # ever touching the engine
+        doomed = fd.submit("out_neighbors", deadline=Deadline.after(0.04),
+                           v=int(src[5]))
+        exc = doomed.exception(timeout=30)
+        assert isinstance(exc, DeadlineExceeded)
+        for f in queued:
+            f.result(timeout=30)
+        # already-expired at admission: raises in the submitting thread
+        with pytest.raises(DeadlineExceeded):
+            fd.submit("out_neighbors", deadline=Deadline.after(-1.0),
+                      v=int(src[6]))
+        assert fd.stats.deadline_misses >= 2
+    finally:
+        fp_clear("frontdesk.dispatch")
+        fd.close()
+
+
+def test_frontdesk_write_admission_read_only_shed(tmp_path):
+    db = ServiceDB.create(str(tmp_path / "ro"), max_id=1000,
+                          n_partitions=2, n_levels=2, branching=2,
+                          buffer_cap=500)
+    try:
+        db.insert_edges([1, 2], [3, 4])
+        db._enter_read_only("test degradation")
+        assert db.admission_state()["read_only"]
+        fd = FrontDesk(db)
+        try:
+            with pytest.raises(OverloadError) as ei:
+                fd.insert_edges([5], [6])
+            assert ei.value.reason == "read_only"
+            # reads still flow in read-only degradation
+            assert np.array_equal(fd.out_neighbors(1), [3])
+        finally:
+            fd.close()
+    finally:
+        db.close()
+
+
+def test_frontdesk_insert_coalesced_one_group_commit(tmp_path):
+    db = ServiceDB.create(str(tmp_path / "ins"), max_id=1000,
+                          n_partitions=2, n_levels=2, branching=2,
+                          buffer_cap=500)
+    try:
+        fd = FrontDesk(db, max_batch=16)
+        try:
+            fp_set("frontdesk.dispatch", "delay:40", count=1)
+            futs = [fd.submit("insert",
+                              src=np.asarray([i], np.int64),
+                              dst=np.asarray([i + 100], np.int64))
+                    for i in range(8)]
+            sizes = [f.result(timeout=30) for f in futs]
+            assert sizes == [1] * 8
+            assert db.n_edges == 8
+            # 8 requests, strictly fewer engine round trips
+            assert fd.stats.batches < 8
+            for i in range(8):
+                assert np.array_equal(fd.out_neighbors(i), [i + 100])
+        finally:
+            fp_clear("frontdesk.dispatch")
+            fd.close()
+    finally:
+        db.close()
+
+
+def test_frontdesk_close_drain_false_sheds_queue_typed(svc):
+    db, src, _ = svc
+    fd = FrontDesk(db, queue_cap=50)
+    fp_set("frontdesk.dispatch", "delay:200", count=None)
+    try:
+        inflight = fd.submit("out_neighbors", v=int(src[0]))
+        give_up = time.monotonic() + 5.0
+        while fd.depth() > 0 and time.monotonic() < give_up:
+            time.sleep(0.005)
+        queued = [fd.submit("out_neighbors", v=int(src[i]))
+                  for i in range(1, 4)]
+    finally:
+        fp_clear("frontdesk.dispatch")
+    fd.close(drain=False)
+    fd.close()                     # idempotent
+    for f in queued:
+        exc = f.exception(timeout=30)
+        assert isinstance(exc, OverloadError) and exc.reason == "closed"
+    inflight.result(timeout=30)    # the in-flight batch still completes
+    with pytest.raises(OverloadError) as ei:
+        fd.submit("out_neighbors", v=int(src[0]))
+    assert ei.value.reason == "closed"
+
+
+def test_frontdesk_over_shard_router(cluster):
+    """The front desk composes with the sharded store: batches run on the
+    live hedged scatter/gather engine and stay bitwise-correct."""
+    router, ref, src, _ = cluster
+    vs = [int(v) for v in src[:24]]
+    fd = FrontDesk(router, max_batch=32)
+    try:
+        fp_set("frontdesk.dispatch", "delay:30", count=1)
+        futs = [fd.submit("out_neighbors", v=v) for v in vs]
+        for v, f in zip(vs, futs):
+            assert np.array_equal(f.result(timeout=60),
+                                  np.sort(ref.out_neighbors(v)))
+        # fof over the sharded engine vs the unsharded reference
+        with ref.read_view() as view:
+            expect = two_hop_counts(view.storage_engine(),
+                                    np.asarray(vs[:6], np.int64))
+        for i, v in enumerate(vs[:6]):
+            assert np.array_equal(fd.friends_of_friends(v),
+                                  expect.ids[expect.slice_of(i)])
+        # writes scatter through the same grouped path
+        fd.insert_edges([7], [9])
+        assert 9 in set(fd.out_neighbors(7).tolist())
+    finally:
+        fp_clear("frontdesk.dispatch")
+        fd.close()
